@@ -1,0 +1,59 @@
+"""Paper Fig. 2: DR-DSGD vs DSGD on Fashion-MNIST (K=10, mu=6, ER p=0.3).
+
+Reports average / worst-distribution test accuracy, node STDEV, and the
+communication-efficiency ratio (rounds to hit a worst-acc target).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import fmt_row, rounds_to_target, run_decentralized
+
+
+def run(steps: int = 600, seed: int = 0, n_seeds: int = 3) -> list[str]:
+    import numpy as np
+
+    # mu=3 (paper uses 6 on real FMNIST; retuned for the synthetic stand-in
+    # where the loss scale differs — see EXPERIMENTS.md). Multi-seed, as the
+    # paper reports one-standard-error bands over five runs.
+    drs, dss = [], []
+    for sd in range(seed, seed + n_seeds):
+        drs.append(run_decentralized(
+            "fmnist", robust=True, mu=3.0, num_nodes=10, steps=steps,
+            batch=55, lr=0.18, p=0.3, seed=sd, eval_every=50,
+            lr_compensate=False))  # strict Alg. 2
+        dss.append(run_decentralized(
+            "fmnist", robust=False, num_nodes=10, steps=steps, batch=55,
+            lr=0.18, p=0.3, seed=sd, eval_every=50))
+
+    def agg(runs):
+        out = dict(runs[0])
+        for key in ("acc_avg", "acc_worst_dist", "acc_node_std",
+                    "us_per_step"):
+            vals = [r[key] for r in runs]
+            out[key] = float(np.mean(vals))
+            out[key + "_sem"] = float(np.std(vals) / max(len(vals) - 1, 1) ** 0.5)
+        return out
+
+    dr, ds = agg(drs), agg(dss)
+    # rounds to reach (98% of) DSGD's final worst-dist accuracy — the
+    # paper's communication-efficiency comparison on the worst-dist curve
+    target = ds["acc_worst_dist"] * 0.98
+    r_dr = rounds_to_target(dr["history"], target)
+    r_ds = rounds_to_target(ds["history"], target)
+    ratio = (r_ds / r_dr) if (r_dr and r_ds) else float("nan")
+    rows = []
+    for r in (dr, ds):
+        rows.append(fmt_row(
+            f"fig2_fmnist_{r['algo']}", r["us_per_step"],
+            f"acc_avg={r['acc_avg']:.3f}±{r['acc_avg_sem']:.3f};"
+            f"acc_worst={r['acc_worst_dist']:.3f}±{r['acc_worst_dist_sem']:.3f};"
+            f"std={r['acc_node_std']:.3f}"))
+    rows.append(fmt_row(
+        "fig2_fmnist_comm_efficiency", 0.0,
+        f"target={target:.2f};rounds_DR={r_dr};rounds_DSGD={r_ds};"
+        f"speedup={ratio:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,23 @@
+"""Paper Fig. 3: DR-DSGD vs DSGD on CIFAR10-like data (K=10, mu=6, p=0.5)."""
+
+from __future__ import annotations
+
+from benchmarks.common import fmt_row, run_decentralized
+
+
+def run(steps: int = 600, seed: int = 0) -> list[str]:
+    rows = []
+    for robust in (True, False):
+        r = run_decentralized("cifar", robust=robust, mu=3.0, num_nodes=10,
+                              steps=steps, batch=32, lr=0.18, p=0.5,
+                              seed=seed, eval_every=50,
+                                  lr_compensate=False)
+        rows.append(fmt_row(
+            f"fig3_cifar_{r['algo']}", r["us_per_step"],
+            f"acc_avg={r['acc_avg']:.3f};acc_worst={r['acc_worst_dist']:.3f};"
+            f"std={r['acc_node_std']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

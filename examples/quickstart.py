@@ -1,0 +1,58 @@
+"""Quickstart: distributionally robust decentralized training in ~40 lines.
+
+Ten devices on an Erdős–Rényi graph collaboratively train the paper's MLP on
+pathologically non-IID Fashion-MNIST-like data, with the KL-DRO exponential
+reweighting of DR-DSGD (Alg. 2). Compare against `--dsgd`.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--dsgd]
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DecentralizedTrainer, RobustConfig
+from repro.data import make_fmnist_like, pathological_noniid_partition
+from repro.models import mlp_apply, mlp_init
+from repro.models.paper_nets import make_classifier_loss
+
+
+def main():
+    robust = "--dsgd" not in sys.argv
+    k, steps = 10, 400
+
+    data = make_fmnist_like(n_train=4000, n_test=600)
+    fed = pathological_noniid_partition(data, num_nodes=k, shards_per_node=2)
+
+    trainer = DecentralizedTrainer(
+        make_classifier_loss(mlp_apply),
+        predict_fn=mlp_apply,
+        num_nodes=k,
+        graph="erdos_renyi",
+        graph_kwargs={"p": 0.3},
+        robust=RobustConfig(mu=3.0, enabled=robust),
+        lr=0.18,
+        grad_clip=2.0,
+    )
+    print(f"algo={'DR-DSGD' if robust else 'DSGD'}  K={k}  "
+          f"graph rho={trainer.rho:.3f}")
+
+    state = trainer.init(mlp_init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200)
+
+    for step in range(steps):
+        xb, yb = fed.sample_batch(rng, 55)
+        state, metrics = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+        if step % 50 == 0 or step == steps - 1:
+            stats = trainer.eval_local_distributions(state, x_nodes, y_nodes)
+            print(f"step {step:4d}  loss={float(metrics['loss_mean']):.3f}  "
+                  f"acc_avg={stats['acc_avg']:.3f}  "
+                  f"acc_worst={stats['acc_worst_dist']:.3f}  "
+                  f"node_std={stats['acc_node_std']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

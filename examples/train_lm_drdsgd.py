@@ -1,0 +1,79 @@
+"""End-to-end driver: decentralized DR-DSGD training of a transformer LM.
+
+Eight nodes on a ring, each with its own token distribution (per-node Zipf
+permutation => genuine distribution shift), train a qwen2-family decoder with
+the robust exponential reweighting. This is the ~100M-class end-to-end
+example scaled to the CPU container by default; pass ``--full-width`` on real
+hardware for the 0.5B assigned config (and see repro.launch.dryrun for the
+256/512-chip lowering of exactly this step function).
+
+Run:  PYTHONPATH=src python examples/train_lm_drdsgd.py --steps 30
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import DecentralizedTrainer, RobustConfig
+from repro.data import make_node_token_streams
+from repro.models import TransformerLM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch-per-node", type=int, default=4)
+    ap.add_argument("--mu", type=float, default=6.0)
+    ap.add_argument("--full-width", action="store_true",
+                    help="use the full qwen2-0.5b config (TPU-scale)")
+    args = ap.parse_args()
+
+    cfg = get_arch("qwen2_0_5b", smoke=not args.full_width)
+    if not args.full_width:
+        # widen the smoke config into the ~10M range for a meaningful run
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, n_heads=8,
+                                  n_kv_heads=2, d_ff=1024, vocab=2048)
+    model = TransformerLM(cfg)
+
+    trainer = DecentralizedTrainer(
+        model.loss,
+        num_nodes=args.nodes,
+        graph="ring",
+        robust=RobustConfig(mu=args.mu),
+        lr=0.02,
+        grad_clip=1.0,
+    )
+    print(f"model={cfg.name} params={model.num_params():,} "
+          f"nodes={args.nodes} ring rho={trainer.rho:.3f} mu={args.mu}")
+
+    state = trainer.init(model.init(jax.random.PRNGKey(0)))
+    streams = make_node_token_streams(args.nodes, cfg.vocab, hetero=True)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        toks = np.stack(
+            [s.next_batch(args.batch_per_node, args.seq_len) for s in streams])
+        state, m = trainer.step(state, {"tokens": jnp.asarray(toks)})
+        if step % 5 == 0 or step == args.steps - 1:
+            lam = float(m["lambda_max"])
+            print(f"step {step:4d}  loss_mean={float(m['loss_mean']):.4f}  "
+                  f"loss_worst={float(m['loss_worst']):.4f}  "
+                  f"robust_obj={float(m['robust_objective']):.4f}  "
+                  f"lambda_max={lam:.3f}  "
+                  f"disagree={float(m['disagreement']):.2e}")
+    dt = time.time() - t0
+    tokens = args.steps * args.nodes * args.batch_per_node * args.seq_len
+    print(f"\n{tokens:,} tokens in {dt:.1f}s ({tokens / dt:,.0f} tok/s)")
+    print("Worst-node loss should track mean loss closely: that is the "
+          "DRO guarantee under per-node distribution shift.")
+
+
+if __name__ == "__main__":
+    main()

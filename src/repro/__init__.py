@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of DR-DSGD (Ben Issaid et al. 2022)
+— distributionally robust decentralized SGD over graphs, as a multi-pod TPU
+training/inference framework. See DESIGN.md and EXPERIMENTS.md."""
+
+__version__ = "1.0.0"

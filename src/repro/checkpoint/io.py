@@ -1,0 +1,121 @@
+"""msgpack-based pytree checkpointing (orbax is unavailable offline).
+
+Layout: ``<dir>/step_<n>/state.msgpack`` + ``manifest.json``.  Arrays are
+serialized as (dtype, shape, raw bytes); the pytree structure is encoded as a
+nested msgpack map.  Restore optionally re-shards leaves onto a sharding tree
+via ``jax.device_put`` so a checkpoint written on one mesh can be loaded onto
+another (same global shapes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARRAY_KEY = "__array__"
+_SCALAR_KEY = "__scalar__"
+
+
+def _encode(node):
+    if isinstance(node, (jnp.ndarray, np.ndarray)) or hasattr(node, "__array__"):
+        arr = np.asarray(node)
+        # dtype.name survives for extension types (bfloat16 via ml_dtypes)
+        # where dtype.str degrades to a void type like "<V2"
+        return {
+            _ARRAY_KEY: True,
+            "dtype": arr.dtype.name,
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    if isinstance(node, (int, float, bool, str, bytes)):
+        return {_SCALAR_KEY: True, "value": node}
+    if isinstance(node, dict):
+        return {"__dict__": {k: _encode(v) for k, v in node.items()}}
+    if isinstance(node, (list, tuple)):
+        return {
+            "__seq__": [_encode(v) for v in node],
+            "tuple": isinstance(node, tuple),
+        }
+    if node is None:
+        return {"__none__": True}
+    raise TypeError(f"cannot checkpoint leaf of type {type(node)}")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16 / fp8 extension dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _decode(node):
+    if _ARRAY_KEY in node:
+        arr = np.frombuffer(node["data"], dtype=_np_dtype(node["dtype"]))
+        return arr.reshape(node["shape"]).copy()
+    if _SCALAR_KEY in node:
+        return node["value"]
+    if "__dict__" in node:
+        return {k: _decode(v) for k, v in node["__dict__"].items()}
+    if "__seq__" in node:
+        seq = [_decode(v) for v in node["__seq__"]]
+        return tuple(seq) if node.get("tuple") else seq
+    if "__none__" in node:
+        return None
+    raise ValueError(f"malformed checkpoint node: keys={list(node)}")
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
+    """Serialize a pytree (host-gathering sharded arrays) to disk."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    host_state = jax.tree.map(
+        lambda x: np.asarray(jax.device_get(x)) if hasattr(x, "__array__") else x,
+        state,
+    )
+    blob = msgpack.packb(_encode(host_state), use_bin_type=True)
+    tmp = os.path.join(path, "state.msgpack.tmp")
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, os.path.join(path, "state.msgpack"))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "bytes": len(blob)}, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+        and os.path.exists(os.path.join(ckpt_dir, d, "state.msgpack"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int | None = None, shardings=None):
+    """Load a checkpoint; optionally device_put leaves onto a sharding pytree."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "state.msgpack")
+    with open(path, "rb") as f:
+        state = _decode(msgpack.unpackb(f.read(), raw=False))
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            state,
+            shardings,
+            is_leaf=lambda x: x is None or hasattr(x, "__array__"),
+        )
+    return state, step

@@ -1,0 +1,17 @@
+from repro.configs.base import ARCH_IDS, ALIASES, all_archs, canonical, get_arch
+from repro.configs.paper_models import (
+    PaperExperimentConfig,
+    cifar_default,
+    fmnist_default,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "ALIASES",
+    "all_archs",
+    "canonical",
+    "get_arch",
+    "PaperExperimentConfig",
+    "cifar_default",
+    "fmnist_default",
+]

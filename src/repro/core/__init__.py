@@ -1,0 +1,40 @@
+"""The paper's primary contribution: KL-DRO robust decentralized SGD.
+
+robust.py     — the KL-regularized DRO objective and the exp(l/mu)/mu scale
+consensus.py  — mixing operators (dense einsum / ppermute gossip / hierarchical)
+drdsgd.py     — DR-DSGD & DSGD train-step builders over node-stacked pytrees
+api.py        — DecentralizedTrainer high-level API
+"""
+
+from repro.core.robust import (
+    RobustConfig,
+    robust_scale,
+    robust_objective,
+    mixture_weights,
+)
+from repro.core.consensus import (
+    Mixer,
+    make_dense_mixer,
+    make_gossip_mixer,
+    make_hierarchical_mixer,
+    make_identity_mixer,
+    repeat_mixer,
+)
+from repro.core.drdsgd import (
+    DecentralizedState,
+    TrainStepConfig,
+    build_train_step,
+    build_eval_step,
+    init_state,
+    replicate_params,
+)
+from repro.core.api import DecentralizedTrainer
+
+__all__ = [
+    "RobustConfig", "robust_scale", "robust_objective", "mixture_weights",
+    "Mixer", "make_dense_mixer", "make_gossip_mixer",
+    "make_hierarchical_mixer", "make_identity_mixer", "repeat_mixer",
+    "DecentralizedState", "TrainStepConfig", "build_train_step",
+    "build_eval_step", "init_state", "replicate_params",
+    "DecentralizedTrainer",
+]

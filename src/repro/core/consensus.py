@@ -1,0 +1,196 @@
+"""Consensus (mixing) operators: θ ← θ·W lowered three ways for TPU.
+
+All operators act on *node-stacked* pytrees: every leaf has a leading axis K
+(the decentralized node count).  Numerically they all implement the same
+doubly-stochastic mixing; they differ in the collectives XLA emits:
+
+* ``make_dense_mixer``   — einsum over the node axis. Simple, works anywhere
+  (including CPU simulation with any K); under pjit it lowers to an
+  all-gather of O(K·P) bytes over the node mesh axis. Paper-faithful baseline.
+* ``make_gossip_mixer``  — shard_map + one ``lax.ppermute`` per matching of
+  the edge-colored graph. O(deg·P) bytes; matchings of a ring/torus map to
+  the physical neighbor links of the TPU interconnect. Requires
+  K == prod(mesh node axes). This is the communication-efficient lowering
+  that realizes the paper's decentralization benefit on real hardware.
+* ``make_hierarchical_mixer`` — beyond-paper: psum-mean over an inner
+  ``replica`` mesh axis (data-parallel replicas inside each node) composed
+  with gossip over the outer node axis. Lets K ≪ data-parallel world size so
+  that per-chip parameter memory stays bounded for multi-100B models.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.mixing import MixingDecomposition
+
+Mixer = Callable[[Any], Any]  # node-stacked pytree -> node-stacked pytree
+
+AxisName = str | tuple[str, ...]
+
+
+def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32) -> Mixer:
+    """θ_i ← Σ_j W_ij θ_j via einsum along the leading node axis."""
+    w = jnp.asarray(np.asarray(w), dtype=compute_dtype)
+
+    def mix(theta):
+        def leaf(x):
+            out = jnp.einsum(
+                "kl,l...->k...", w, x.astype(compute_dtype),
+                precision=jax.lax.Precision.HIGHEST,
+            )
+            return out.astype(x.dtype)
+
+        return jax.tree.map(leaf, theta)
+
+    return mix
+
+
+def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
+    """Reshape a (k_local,) weight vector to broadcast over a (k_local, ...) leaf."""
+    return v.reshape(v.shape + (1,) * (like.ndim - 1))
+
+
+def gossip_mix_local(theta_local, self_w, match_ws, perms, axis: AxisName,
+                     wire_dtype=None):
+    """The per-shard body of the gossip mixer (must run inside shard_map).
+
+    Args:
+      theta_local: pytree of (k_local, ...) local node blocks.
+      self_w: (k_local,) diagonal weights for the local nodes.
+      match_ws: list of (k_local,) per-matching edge weights.
+      perms: list of ppermute (src, dst) pair lists (static python).
+      axis: mesh axis name(s) carrying the node dimension.
+      wire_dtype: optional dtype for the exchanged tensors (bf16 compression —
+        a beyond-paper option; None keeps the leaf dtype).
+    """
+
+    def leaf(x):
+        acc = x.astype(jnp.float32) * _bcast(self_w, x)
+        for pw, perm in zip(match_ws, perms):
+            msg = x if wire_dtype is None else x.astype(wire_dtype)
+            recv = jax.lax.ppermute(msg, axis, perm)
+            acc = acc + recv.astype(jnp.float32) * _bcast(pw, x)
+        return acc.astype(x.dtype)
+
+    return jax.tree.map(leaf, theta_local)
+
+
+def make_gossip_mixer(
+    decomp: MixingDecomposition,
+    mesh: jax.sharding.Mesh,
+    node_axis: AxisName,
+    param_specs,
+    wire_dtype=None,
+) -> Mixer:
+    """Sparse gossip mixing: one collective-permute per graph matching.
+
+    ``param_specs`` is a pytree of PartitionSpecs matching the *node-stacked*
+    params (leading dim partitioned over ``node_axis``); it is used for
+    shard_map in/out specs so tensor-parallel dims stay sharded.
+    """
+    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+    k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
+    k = decomp.self_weights.shape[0]
+    if k != k_mesh:
+        raise ValueError(
+            f"gossip mixer needs K == mesh node size: K={k}, mesh {axes}={k_mesh}"
+        )
+    axis: AxisName = node_axis if isinstance(node_axis, str) else tuple(node_axis)
+    self_w = jnp.asarray(decomp.self_weights, jnp.float32)
+    match_ws = [jnp.asarray(w, jnp.float32) for w in decomp.matching_weights]
+    # ppermute pairs: node i receives from j=perm[i] -> pair (j, i).
+    perms = [
+        [(int(p[i]), i) for i in range(k) if int(p[i]) != i]
+        for p in decomp.matchings
+    ]
+    p_node = jax.sharding.PartitionSpec(axis)
+
+    def mix(theta):
+        body = partial(
+            gossip_mix_local, axis=axis, perms=perms, wire_dtype=wire_dtype
+        )
+        return jax.shard_map(
+            lambda t, sw, mws: body(t, sw, mws),
+            mesh=mesh,
+            in_specs=(param_specs, p_node, [p_node] * len(match_ws)),
+            out_specs=param_specs,
+        )(theta, self_w, list(match_ws))
+
+    return mix
+
+
+def make_hierarchical_mixer(
+    decomp: MixingDecomposition,
+    mesh: jax.sharding.Mesh,
+    node_axis: AxisName,
+    replica_axis: str,
+    param_specs,
+    wire_dtype=None,
+) -> Mixer:
+    """FSDP-inside / gossip-across: psum-mean over ``replica_axis`` then gossip.
+
+    Node-stacked leaves are *replicated* across ``replica_axis`` (each node's
+    replicas hold divergent gradient contributions that are averaged here),
+    then the per-node consensus step runs over ``node_axis``.
+    """
+    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+    k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
+    k = decomp.self_weights.shape[0]
+    if k != k_mesh:
+        raise ValueError(f"K={k} != mesh node size {k_mesh}")
+    axis: AxisName = node_axis if isinstance(node_axis, str) else tuple(node_axis)
+    self_w = jnp.asarray(decomp.self_weights, jnp.float32)
+    match_ws = [jnp.asarray(w, jnp.float32) for w in decomp.matching_weights]
+    perms = [
+        [(int(p[i]), i) for i in range(k) if int(p[i]) != i]
+        for p in decomp.matchings
+    ]
+    p_node = jax.sharding.PartitionSpec(axis)
+    r_size = mesh.shape[replica_axis]
+
+    def mix(theta):
+        def body(t, sw, mws):
+            # average the within-node replicas (plain DP all-reduce over ICI)
+            t = jax.tree.map(
+                lambda x: jax.lax.psum(x, replica_axis) / r_size, t
+            )
+            return gossip_mix_local(t, sw, mws, perms, axis, wire_dtype)
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(param_specs, p_node, [p_node] * len(match_ws)),
+            out_specs=param_specs,
+        )(theta, self_w, list(match_ws))
+
+    return mix
+
+
+def make_identity_mixer() -> Mixer:
+    """No communication — for ablations (pure local SGD)."""
+    return lambda theta: theta
+
+
+def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
+    """θ ← θ·W^rounds: multiple gossip rounds per optimizer step.
+
+    Theorem 1's consensus term contracts like ρ^rounds, so m rounds on a
+    sparse graph can substitute for a denser graph at m× the mixing wire —
+    a knob for trading interconnect bytes against the convergence constant
+    (see EXPERIMENTS.md §Perf A4 for the measured trade).
+    """
+    if rounds < 1:
+        raise ValueError("rounds must be >= 1")
+
+    def mix(theta):
+        for _ in range(rounds):
+            theta = mixer(theta)
+        return theta
+
+    return mix

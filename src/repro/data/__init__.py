@@ -1,0 +1,24 @@
+from repro.data.synthetic import (
+    SyntheticImageDataset,
+    make_fmnist_like,
+    make_cifar_like,
+)
+from repro.data.partition import (
+    pathological_noniid_partition,
+    iid_partition,
+    dirichlet_partition,
+    FederatedDataset,
+)
+from repro.data.tokens import SyntheticTokenStream, make_node_token_streams
+
+__all__ = [
+    "SyntheticImageDataset",
+    "make_fmnist_like",
+    "make_cifar_like",
+    "pathological_noniid_partition",
+    "iid_partition",
+    "dirichlet_partition",
+    "FederatedDataset",
+    "SyntheticTokenStream",
+    "make_node_token_streams",
+]

@@ -1,0 +1,255 @@
+"""Mixing (gossip) matrices and their decomposition into TPU collectives.
+
+The paper (§6.1) uses Metropolis weights:
+
+    W_ij = 1 / (1 + max(d_i, d_j))          if (i,j) ∈ E
+    W_ii = 1 − Σ_{j∈N_i} W_ij
+    W_ij = 0                                 otherwise
+
+which yields a symmetric doubly-stochastic matrix with spectral norm
+ρ = ||W − J|| < 1 on any connected graph (Assumption 5).
+
+``permutation_decomposition`` rewrites a sparse W as
+``W = w_self ⊙ I + Σ_c P_c ⊙ W`` where each ``P_c`` is a partial permutation
+(a matching, from greedy edge coloring).  Under ``shard_map`` each matching
+lowers to exactly one ``lax.ppermute`` — the native neighbor-exchange
+collective of the TPU torus — so a degree-d graph costs d permutes instead of
+a K-wide all-gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graphs.topology import Graph
+
+
+def metropolis_weights(graph: Graph) -> np.ndarray:
+    """Paper §6.1 Metropolis-Hastings mixing matrix (float64)."""
+    adj = graph.adjacency
+    k = graph.num_nodes
+    deg = graph.degrees
+    w = np.zeros((k, k), dtype=np.float64)
+    for i, j in graph.edges():
+        w[i, j] = w[j, i] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    for i in range(k):
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def max_degree_weights(graph: Graph) -> np.ndarray:
+    """W = I − L/(Δ+1): the max-degree gossip matrix."""
+    adj = graph.adjacency.astype(np.float64)
+    deg = graph.degrees.astype(np.float64)
+    alpha = 1.0 / (graph.max_degree + 1.0)
+    w = alpha * adj
+    np.fill_diagonal(w, 1.0 - alpha * deg)
+    return w
+
+
+def lazy_metropolis_weights(graph: Graph, laziness: float = 0.5) -> np.ndarray:
+    """(1−β)·I + β·W — guarantees eigenvalues in (0, 1], useful for analysis."""
+    if not 0.0 < laziness <= 1.0:
+        raise ValueError("laziness must be in (0, 1]")
+    w = metropolis_weights(graph)
+    return (1.0 - laziness) * np.eye(graph.num_nodes) + laziness * w
+
+
+def is_doubly_stochastic(w: np.ndarray, atol: float = 1e-9) -> bool:
+    w = np.asarray(w)
+    ones = np.ones(w.shape[0])
+    return (
+        bool(np.allclose(w, w.T, atol=atol))
+        and bool(np.allclose(w @ ones, ones, atol=atol))
+        and bool((w >= -atol).all())
+    )
+
+
+def spectral_norm(w: np.ndarray) -> float:
+    """ρ = ||WᵀW − J||₂ (Assumption 5). Convergence requires ρ < 1."""
+    k = w.shape[0]
+    j = np.full((k, k), 1.0 / k)
+    return float(np.linalg.norm(w.T @ w - j, ord=2))
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 − ρ: larger gap ⇒ faster consensus (third term of Theorem 1)."""
+    return 1.0 - spectral_norm(w)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingDecomposition:
+    """W as self-weights + permutation (matching) classes.
+
+    Attributes:
+      self_weights: (K,) diagonal of W.
+      matchings: list of matchings; each is a (K,) int array ``perm`` where
+        ``perm[i] = j`` if i exchanges with j in this round and ``perm[i] = i``
+        if i idles. Matchings are involutions (perm[perm[i]] == i).
+      matching_weights: list of (K,) arrays; entry i is W[i, perm[i]]
+        (0 where idle).
+    """
+
+    self_weights: np.ndarray
+    matchings: list[np.ndarray]
+    matching_weights: list[np.ndarray]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.matchings)
+
+    def reconstruct(self) -> np.ndarray:
+        """Rebuild the dense W (for testing exactness)."""
+        k = self.self_weights.shape[0]
+        w = np.diag(self.self_weights).astype(np.float64)
+        for perm, pw in zip(self.matchings, self.matching_weights):
+            for i in range(k):
+                j = int(perm[i])
+                if j != i:
+                    w[i, j] += pw[i]
+        return w
+
+
+def _misra_gries_coloring(k: int, edges: list[tuple[int, int]]
+                          ) -> tuple[dict[tuple[int, int], int], int]:
+    """Misra & Gries (1992) proper edge coloring with at most Δ+1 colors.
+
+    Guarantees the gossip consensus needs at most Δ+1 collective-permute
+    rounds per mixing step (greedy can need up to 2Δ−1 on adversarial
+    orders). O(E·Δ) — fine for the K ≤ a-few-hundred node graphs here.
+    """
+    deg = np.zeros(k, dtype=np.int64)
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    n_colors = int(deg.max()) + 1 if len(edges) else 1
+    # color[u][c] = neighbor matched to u with color c (or -1)
+    color_at = np.full((k, n_colors), -1, dtype=np.int64)
+    edge_color: dict[tuple[int, int], int] = {}
+
+    def free_colors(u):
+        return [c for c in range(n_colors) if color_at[u, c] == -1]
+
+    def set_color(u, v, c):
+        color_at[u, c] = v
+        color_at[v, c] = u
+        edge_color[(min(u, v), max(u, v))] = c
+
+    def unset_color(u, v, c):
+        color_at[u, c] = -1
+        color_at[v, c] = -1
+        edge_color.pop((min(u, v), max(u, v)), None)
+
+    for (x, y) in edges:
+        # build maximal fan of x starting at y
+        fan = [y]
+        fan_set = {y}
+        while True:
+            extended = False
+            last = fan[-1]
+            free_last = set(free_colors(last))
+            for c in free_last:
+                z = color_at[x, c]
+                if z != -1 and z not in fan_set:
+                    fan.append(z)
+                    fan_set.add(z)
+                    extended = True
+                    break
+            if not extended:
+                break
+        c = free_colors(x)[0]
+        d = free_colors(fan[-1])[0]
+        if c != d:
+            # invert the cd_x path from x
+            u, col = x, d
+            path = []
+            while True:
+                v = color_at[u, col]
+                if v == -1:
+                    break
+                path.append((u, v, col))
+                u, col = v, (c if col == d else d)
+            for (u, v, col) in path:
+                unset_color(u, v, col)
+            for (u, v, col) in path:
+                set_color(u, v, c if col == d else d)
+        # rotate the fan up to the first vertex where d is free
+        w_idx = len(fan) - 1
+        for idx, f in enumerate(fan):
+            if color_at[f, d] == -1:
+                w_idx = idx
+                break
+        for idx in range(w_idx):
+            nxt = fan[idx + 1]
+            col = edge_color[(min(x, nxt), max(x, nxt))]
+            unset_color(x, nxt, col)
+            set_color(x, fan[idx], col)
+        set_color(x, fan[w_idx], d)
+
+    used = sorted({c for c in edge_color.values()})
+    remap = {c: i for i, c in enumerate(used)}
+    return {e: remap[c] for e, c in edge_color.items()}, len(used)
+
+
+def _greedy_coloring(k: int, edges: list[tuple[int, int]]
+                     ) -> tuple[dict[tuple[int, int], int], int]:
+    """Greedy edge coloring (≤ 2Δ−1 worst case, often optimal on regular
+    graphs — e.g. exactly 2 colors on even rings where Misra-Gries may use
+    Δ+1 = 3)."""
+    deg = np.zeros(k, dtype=np.int64)
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    order = sorted(edges, key=lambda e: -(deg[e[0]] + deg[e[1]]))
+    used: list[set[int]] = [set() for _ in range(k)]
+    edge_color: dict[tuple[int, int], int] = {}
+    n_colors = 0
+    for i, j in order:
+        c = 0
+        while c in used[i] or c in used[j]:
+            c += 1
+        edge_color[(i, j)] = c
+        used[i].add(c)
+        used[j].add(c)
+        n_colors = max(n_colors, c + 1)
+    return edge_color, n_colors
+
+
+def permutation_decomposition(w: np.ndarray, atol: float = 1e-12) -> MixingDecomposition:
+    """Edge coloring of supp(W) into matchings: best of greedy and
+    Misra-Gries, so the result is always ≤ Δ+1 classes (MG guarantee) and
+    optimal on the common regular topologies (greedy).
+
+    Each matching becomes one ``lax.ppermute`` in the gossip consensus op.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    k = w.shape[0]
+    if not np.allclose(w, w.T, atol=1e-9):
+        raise ValueError("mixing matrix must be symmetric")
+    edges = [
+        (i, j)
+        for i in range(k)
+        for j in range(i + 1, k)
+        if abs(w[i, j]) > atol
+    ]
+    ec_g, n_g = _greedy_coloring(k, edges)
+    ec_mg, n_mg = _misra_gries_coloring(k, edges)
+    edge_color, n_colors = (ec_g, n_g) if n_g <= n_mg else (ec_mg, n_mg)
+    matchings, matching_weights = [], []
+    for c in range(n_colors):
+        perm = np.arange(k)
+        pw = np.zeros(k, dtype=np.float64)
+        for (i, j), col in edge_color.items():
+            if col == c:
+                perm[i], perm[j] = j, i
+                pw[i] = w[i, j]
+                pw[j] = w[j, i]
+        matchings.append(perm)
+        matching_weights.append(pw)
+    return MixingDecomposition(
+        self_weights=np.diag(w).copy(),
+        matchings=matchings,
+        matching_weights=matching_weights,
+    )

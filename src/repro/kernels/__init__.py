@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper itself has no kernel-level contribution (it is an optimizer /
+communication algorithm), but the production framework around it does:
+
+  flash_attention/  blockwise online-softmax GQA attention
+                    (causal, sliding-window, softcap; grid-carried VMEM
+                    scratch; MXU-aligned 128x128 blocks)
+  gossip_update/    fused DR-DSGD local update + weighted neighbor combine
+                    (paper Eq. 9 in one HBM pass)
+  rwkv6_scan/       chunked WKV6 recurrence with the state matrix resident
+                    in VMEM scratch across time chunks
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper with CPU fallback) and ref.py (pure-jnp oracle); correctness
+is swept in tests/test_kernel_*.py with interpret=True on CPU.
+"""

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused DR-DSGD local update + weighted neighbor combine.
+
+Per node i the paper's update (Eq. 9) is
+    θ_i ← W_ii·(θ_i − η·s_i·g_i) + Σ_{j∈N_i} W_ij·θ̃_j
+where θ̃_j are the neighbors' already-updated parameters received over the
+interconnect and s_i = exp(ℓ̄_i/μ)/μ is the robust scale.  Left unfused, XLA
+materializes the scaled gradient, the local update and the weighted sum as
+separate HBM round-trips over the full parameter pytree (4 reads + 3 writes
+per element); this kernel performs them in one pass (2+N/8 reads, 1 write),
+tiled along the flattened parameter dimension in VMEM-resident blocks.
+
+Layouts: theta, grad (D,); neighbors (N, D); weights (N+1,) with weights[0]
+the self weight; scale () — per-node scalar; eta static.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gossip_update_kernel(w_ref, s_ref, theta_ref, grad_ref, nbr_ref, o_ref, *,
+                          eta: float, num_neighbors: int):
+    theta = theta_ref[...].astype(jnp.float32)
+    grad = grad_ref[...].astype(jnp.float32)
+    scale = s_ref[0]
+    updated = theta - eta * scale * grad
+    acc = w_ref[0] * updated
+    for n in range(num_neighbors):
+        acc = acc + w_ref[n + 1] * nbr_ref[n].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def gossip_update(theta, grad, neighbors, weights, scale, *, eta: float,
+                  block_d: int = 65536, interpret: bool = False):
+    """theta, grad: (D,); neighbors: (N, D); weights: (N+1,); scale: ().
+
+    Returns the mixed updated parameters (D,). ``eta`` is compile-time.
+    """
+    (d,) = theta.shape
+    n = neighbors.shape[0]
+    if n == 0:  # isolated node: degenerate case, no combine needed
+        upd = theta.astype(jnp.float32) - eta * scale * grad.astype(jnp.float32)
+        return (weights[0] * upd).astype(theta.dtype)
+    block_d = min(block_d, d)
+    if d % block_d:
+        block_d = d  # small tensors: single block
+    grid = (d // block_d,)
+    kernel = functools.partial(
+        _gossip_update_kernel, eta=eta, num_neighbors=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # weights and scale are tiny and replicated to every grid step
+            pl.BlockSpec((n + 1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), theta.dtype),
+        interpret=interpret,
+    )(weights, scale.reshape(1), theta, grad, neighbors)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused gossip update (paper Eq. 9, per node)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_update_ref(theta, grad, neighbors, weights, scale, *, eta: float):
+    """theta,grad: (D,); neighbors: (N,D); weights: (N+1,); scale: ()."""
+    updated = theta.astype(jnp.float32) - eta * scale * grad.astype(jnp.float32)
+    acc = weights[0] * updated
+    acc = acc + jnp.einsum("n,nd->d", weights[1:],
+                           neighbors.astype(jnp.float32))
+    return acc.astype(theta.dtype)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: chunked RWKV6 WKV recurrence (data-dependent decay).
+
+The WKV6 recurrence per head (state S in R^{hd x hd}):
+
+    out_t = r_tᵀ (S + u ⊙ k_t v_tᵀ)
+    S     = diag(w_t) S + k_t v_tᵀ
+
+TPU adaptation: on GPU RWKV kernels parallelize over channels within a warp;
+here each (batch, head) pair is one grid cell of the *outer two* grid axes
+and the time axis is the innermost grid axis in chunks of ``block_t`` — the
+state matrix persists in VMEM scratch across time chunks (same grid-carried
+pattern as flash attention), so HBM traffic per token is just r/k/v/w in and
+out once.  Inside a chunk the recurrence is an unrolled fori_loop over
+timesteps; hd is lane-aligned (64 or 128) so outer products hit the VPU/MXU.
+
+Layouts: r, k, v, w (B, H, T, hd); u (H, hd); out (B, H, T, hd).
+``w`` is the *decay factor* in (0,1) (already exp(-exp(·)) transformed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *,
+                 block_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)   # (block_t, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)      # (hd,)
+
+    def step(t, carry):
+        s, out = carry
+        kv = k[t][:, None] * v[t][None, :]                    # (hd_k, hd_v)
+        y = jnp.einsum("k,kv->v", r[t], s + u[:, None] * kv)
+        s = w[t][:, None] * s + kv
+        return s, out.at[t].set(y)
+
+    out0 = jnp.zeros((block_t, r.shape[-1]), jnp.float32)
+    s, out = jax.lax.fori_loop(0, block_t, step, (s_scr[...], out0))
+    s_scr[...] = s
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def wkv6_scan(r, k, v, w, u, *, block_t: int = 64, interpret: bool = False):
+    """r,k,v,w: (B,H,T,hd); u: (H,hd). Returns (B,H,T,hd)."""
+    b, h, t, hd = r.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0, (t, block_t)
+    nt = t // block_t
+    kernel = functools.partial(_wkv6_kernel, block_t=block_t)
+    spec = pl.BlockSpec((1, 1, block_t, hd), lambda b, h, ti: (b, h, ti, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nt),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, hd), lambda b, h, ti: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

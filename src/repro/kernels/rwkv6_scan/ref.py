@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the WKV6 recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r,k,v,w: (B,H,T,hd); u: (H,hd) -> (B,H,T,hd) in fp32 recurrence."""
+    b, h, t, hd = r.shape
+    f32 = jnp.float32
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]              # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    seq = lambda x: x.transpose(2, 0, 1, 3).astype(f32)
+    s0 = jnp.zeros((b, h, hd, hd), f32)
+    _, ys = jax.lax.scan(body, s0, (seq(r), seq(k), seq(v), seq(w)))
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

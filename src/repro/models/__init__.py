@@ -1,0 +1,32 @@
+from repro.models.config import (
+    ArchConfig,
+    MoEConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+)
+from repro.models.transformer import (
+    TransformerLM,
+    input_shapes,
+    train_rules,
+    serve_rules,
+)
+from repro.models.paper_nets import (
+    mlp_init,
+    mlp_apply,
+    cnn_init,
+    cnn_apply,
+    softmax_xent,
+    make_classifier_loss,
+)
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "TransformerLM", "input_shapes", "train_rules", "serve_rules",
+    "mlp_init", "mlp_apply", "cnn_init", "cnn_apply",
+    "softmax_xent", "make_classifier_loss",
+]

@@ -1,0 +1,117 @@
+"""The paper's exact experiment models (§6.1).
+
+- FMNIST: MLP with ReLU, two hidden layers of 128 and 64 neurons.
+- CIFAR10: CNN with three convolutional layers followed by two fully
+  connected layers of 500 neurons each.
+
+Implemented as (init, apply) pure functions so they plug straight into
+``DecentralizedTrainer`` — each node vmaps over its stacked copy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, fan_in, fan_out):
+    wk, bk = jax.random.split(key)
+    limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return {
+        "w": jax.random.uniform(wk, (fan_in, fan_out), jnp.float32, -limit, limit),
+        "b": jnp.zeros((fan_out,), jnp.float32),
+    }
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    limit = float(np.sqrt(6.0 / (fan_in + cout)))
+    return {
+        "w": jax.random.uniform(key, (kh, kw, cin, cout), jnp.float32, -limit, limit),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+# -- MLP (Fashion-MNIST) ------------------------------------------------------
+
+def mlp_init(key, input_dim: int = 784, hidden: tuple[int, ...] = (128, 64),
+             num_classes: int = 10):
+    dims = (input_dim, *hidden, num_classes)
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"fc{i}": _dense_init(k, dims[i], dims[i + 1])
+        for i, k in enumerate(keys)
+    }
+
+
+def mlp_apply(params, x):
+    """x: (B, 28, 28) or (B, 784) -> logits (B, 10)."""
+    h = x.reshape(x.shape[0], -1)
+    n = len(params)
+    for i in range(n):
+        p = params[f"fc{i}"]
+        h = h @ p["w"] + p["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# -- CNN (CIFAR10) ------------------------------------------------------------
+
+def cnn_init(key, in_channels: int = 3, image_hw: int = 32,
+             channels: tuple[int, int, int] = (32, 64, 64),
+             fc_width: int = 500, num_classes: int = 10):
+    k = jax.random.split(key, 6)
+    c1, c2, c3 = channels
+    spatial = image_hw // 8  # three stride-2 pools
+    return {
+        "conv0": _conv_init(k[0], 3, 3, in_channels, c1),
+        "conv1": _conv_init(k[1], 3, 3, c1, c2),
+        "conv2": _conv_init(k[2], 3, 3, c2, c3),
+        "fc0": _dense_init(k[3], c3 * spatial * spatial, fc_width),
+        "fc1": _dense_init(k[4], fc_width, fc_width),
+        "out": _dense_init(k[5], fc_width, num_classes),
+    }
+
+
+def _conv2d(p, x):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params, x):
+    """x: (B, 3, 32, 32) channels-first (paper convention) -> logits."""
+    h = x.transpose(0, 2, 3, 1)  # NHWC for lax.conv
+    for i in range(3):
+        h = jax.nn.relu(_conv2d(params[f"conv{i}"], h))
+        h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc0"]["w"] + params["fc0"]["b"])
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+# -- losses -------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def make_classifier_loss(apply_fn):
+    def loss_fn(params, batch):
+        x, y = batch
+        return softmax_xent(apply_fn(params, x), y)
+
+    return loss_fn

@@ -1,0 +1,135 @@
+"""Declarative parameter system: one decl tree drives init, partition specs
+and ShapeDtypeStruct stand-ins.
+
+Every parameter is declared once with logical axis names; sharding rules map
+logical axes to mesh axes (with automatic divisibility fallback to
+replication), which is how the same model definition serves the paper-scale
+CPU runs, the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# Logical axis vocabulary (see DESIGN.md §3):
+#   embed, vocab, q_heads, kv_heads, head_dim, mlp, experts, layers,
+#   conv, state, hidden — plus None for never-sharded dims.
+LogicalAxis = str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    axes: tuple[LogicalAxis, ...]
+    init: str = "normal"      # normal | zeros | ones | constant
+    scale: float = 0.02       # std for normal init / value for constant
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} length mismatch")
+
+
+def normal(shape, axes, fan_in: int | None = None, dtype=jnp.float32) -> ParamDecl:
+    """Normal init with 1/sqrt(fan_in) std (explicit fan_in at the decl site)."""
+    std = 0.02 if fan_in is None else 1.0 / float(np.sqrt(fan_in))
+    return ParamDecl(tuple(shape), tuple(axes), "normal", std, dtype)
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> ParamDecl:
+    return ParamDecl(tuple(shape), tuple(axes), "zeros", 0.0, dtype)
+
+
+def ones(shape, axes, dtype=jnp.float32) -> ParamDecl:
+    return ParamDecl(tuple(shape), tuple(axes), "ones", 1.0, dtype)
+
+
+def constant(shape, axes, value: float, dtype=jnp.float32) -> ParamDecl:
+    return ParamDecl(tuple(shape), tuple(axes), "constant", value, dtype)
+
+
+def _is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def init_tree(key: jax.Array, decls) -> Any:
+    """Materialize a decl tree into actual parameter arrays."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(k, d: ParamDecl):
+        if d.init == "normal":
+            return (jax.random.normal(k, d.shape, jnp.float32) * d.scale).astype(d.dtype)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "constant":
+            return jnp.full(d.shape, d.scale, d.dtype)
+        raise ValueError(f"unknown init {d.init}")
+
+    return jax.tree.unflatten(treedef, [init_one(k, d) for k, d in zip(keys, leaves)])
+
+
+def shape_tree(decls) -> Any:
+    """ShapeDtypeStruct stand-ins (no allocation) — used by the dry-run."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), decls, is_leaf=_is_decl
+    )
+
+
+def spec_tree(decls, rules: dict[str, str | tuple[str, ...] | None],
+              mesh_shape: dict[str, int] | None = None,
+              leading: tuple = ()) -> Any:
+    """Decl tree -> PartitionSpec tree via logical-axis rules.
+
+    ``rules[axis]`` is a mesh axis name (or tuple) or None. If the dimension
+    size is not divisible by the mesh axis size the dim falls back to
+    replication — this keeps e.g. kv_heads=8 valid on a model axis of 16.
+    ``leading`` prepends fixed entries (the decentralized node axis).
+    """
+
+    def axis_size(a) -> int:
+        if mesh_shape is None:
+            return 1
+        if isinstance(a, tuple):
+            return int(np.prod([mesh_shape[x] for x in a]))
+        return mesh_shape[a]
+
+    def one(d: ParamDecl):
+        entries = []
+        used: set = set()
+        for x in leading:
+            if isinstance(x, tuple):
+                used |= set(x)
+            elif x is not None:
+                used.add(x)
+        for dim, ax in zip(d.shape, d.axes):
+            mesh_ax = rules.get(ax) if ax is not None else None
+            if mesh_ax is None:
+                entries.append(None)
+                continue
+            flat = set(mesh_ax) if isinstance(mesh_ax, tuple) else {mesh_ax}
+            if flat & used:  # a mesh axis can appear only once in a spec
+                entries.append(None)
+                continue
+            if mesh_shape is not None and dim % axis_size(mesh_ax) != 0:
+                entries.append(None)  # divisibility fallback: replicate
+                continue
+            entries.append(mesh_ax)
+            used |= flat
+        return P(*leading, *entries)
+
+    return jax.tree.map(one, decls, is_leaf=_is_decl)
+
+
+def count_params(decls) -> int:
+    return sum(
+        int(np.prod(d.shape)) for d in jax.tree.leaves(decls, is_leaf=_is_decl)
+    )

@@ -1,0 +1,121 @@
+"""Minimal pure-JAX optimizers (no optax in this environment).
+
+An :class:`Optimizer` is an (init, update) pair over pytrees, mirroring the
+optax GradientTransformation API so the rest of the framework stays agnostic.
+DR-DSGD itself is SGD-based (the robust factor scales the gradient before the
+optimizer sees it), but Adam/momentum are provided for the LM-scale examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]  # step -> lr
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD — the optimizer of DSGD/DR-DSGD (Alg. 1/2, line 3)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        new_params = jax.tree.map(lambda p, g: p - eta * g.astype(p.dtype), params, grads)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    velocity: Any
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return MomentumState(jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(v.dtype), state.velocity, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda v, g: beta * v + g.astype(v.dtype), vel, grads)
+        else:
+            upd = vel
+        new_params = jax.tree.map(lambda p, u: p - eta * u, params, upd)
+        return new_params, MomentumState(vel)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return AdamState(
+            mu=jax.tree.map(jnp.zeros_like, params),
+            nu=jax.tree.map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(n.dtype)), state.nu, grads)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def step_fn(p, m, n):
+            upd = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p
+            return p - eta * upd
+
+        new_params = jax.tree.map(step_fn, params, mu, nu)
+        return new_params, AdamState(mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Global-norm gradient clipping (stabilizes exp-scaled gradients)."""
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm clipping."""
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params, step)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions step -> lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def paper_schedule(k: int, t_total: int):
+    """Paper §6.1: η = sqrt(K/T) (constant, set from the horizon)."""
+    lr = (k / max(t_total, 1)) ** 0.5
+    return constant_schedule(lr)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return sched
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def sched(step):
+        warm = base_lr * (step + 1) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched

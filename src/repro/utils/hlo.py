@@ -1,0 +1,132 @@
+"""Parse collective ops (and their wire bytes) out of compiled HLO text.
+
+``compiled.cost_analysis()`` does not report collective traffic, so the
+roofline's collective term is derived here by scanning ``compiled.as_text()``
+for all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, decoding their result shapes and replica groups, and converting to
+per-device wire bytes under ring-algorithm conventions:
+
+    all-gather          (n-1)/n * result_bytes
+    all-reduce        2*(n-1)/n * result_bytes     (reduce-scatter + all-gather)
+    reduce-scatter      (n-1)   * result_bytes     (input = n * result)
+    all-to-all          (n-1)/n * result_bytes
+    collective-permute           result_bytes
+
+NOTE: ops inside a `while` body appear once in the HLO text; the dry-run
+extrapolates loop trip counts via unrolled 1-group / 2-group probe lowers
+(see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_ITER_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    kind: str
+    result_bytes: int       # per-device result size
+    group_size: int
+    wire_bytes: float       # per-device bytes on the interconnect
+    line: str
+
+
+def _result_bytes(lhs: str) -> int:
+    """Sum element bytes over all shapes on the LHS of the = (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(lhs):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITER_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0 if kind != "collective-permute" else float(result_bytes)
+    if kind == "all-gather":
+        return (n - 1) / n * result_bytes
+    if kind == "all-reduce":
+        return 2 * (n - 1) / n * result_bytes
+    if kind == "reduce-scatter":
+        return (n - 1) * result_bytes
+    if kind == "all-to-all":
+        return (n - 1) / n * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    raise ValueError(kind)
+
+
+def parse_collectives(hlo_text: str, world_size: int) -> list[CollectiveOp]:
+    """Extract every collective op instance from HLO text."""
+    ops = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped.startswith("%") and " = " not in stripped:
+            continue
+        if " = " not in stripped:
+            continue
+        rhs = stripped.split(" = ", 1)[1]
+        for kind in _COLLECTIVES:
+            # match op invocations like `f32[4,512]{1,0} all-gather(...)`
+            # (including async `-start` forms), not metadata mentions
+            m = re.search(rf"^(.*?)\b{kind}(-start)?\(", rhs)
+            if m:
+                rb = _result_bytes(m.group(1))
+                n = _group_size(stripped, world_size)
+                ops.append(CollectiveOp(
+                    kind=kind,
+                    result_bytes=rb,
+                    group_size=n,
+                    wire_bytes=_wire_bytes(kind, rb, n),
+                    line=stripped[:200],
+                ))
+                break
+    return ops
+
+
+def collective_summary(ops: list[CollectiveOp]) -> dict:
+    by_kind: dict[str, dict] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "wire_bytes": 0.0,
+                                         "result_bytes": 0})
+        d["count"] += 1
+        d["wire_bytes"] += op.wire_bytes
+        d["result_bytes"] += op.result_bytes
+    return {
+        "total_wire_bytes": sum(o.wire_bytes for o in ops),
+        "total_count": len(ops),
+        "by_kind": by_kind,
+    }

@@ -1,0 +1,82 @@
+"""Three-term roofline model for TPU v5e (the target hardware).
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = wire_bytes_per_device / ICI_BW
+
+Hardware constants per the task spec: 197 TFLOP/s bf16 per chip, 819 GB/s HBM
+bandwidth, ~50 GB/s per ICI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-device wire bytes / this)
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # analytic 6·N·D (train) or 2·N·D (inference)
+    hlo_flops: float            # per-device HLO FLOPs (scan-corrected)
+    hlo_bytes: float
+    wire_bytes: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste detector."""
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "wire_bytes": self.wire_bytes,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline(hlo_flops_per_dev: float, hlo_bytes_per_dev: float,
+             wire_bytes_per_dev: float, model_flops_total: float,
+             chips: int) -> Roofline:
+    return Roofline(
+        compute_s=hlo_flops_per_dev / PEAK_FLOPS,
+        memory_s=hlo_bytes_per_dev / HBM_BW,
+        collective_s=wire_bytes_per_dev / ICI_BW,
+        model_flops=model_flops_total / max(chips, 1),
+        hlo_flops=hlo_flops_per_dev,
+        hlo_bytes=hlo_bytes_per_dev,
+        wire_bytes=wire_bytes_per_dev,
+    )
+
+
+def model_flops(num_params: int, tokens: int, kind: str,
+                active_params: int | None = None) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params for MoE)."""
+    n = active_params if active_params is not None else num_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

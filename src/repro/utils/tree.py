@@ -1,0 +1,57 @@
+"""Pytree helpers shared across the framework."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_stack_nodes(trees):
+    """Stack a list of identical pytrees along a new leading node axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack_nodes(tree, k: int):
+    """Inverse of tree_stack_nodes."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(k)]
+
+
+def tree_node_mean(tree):
+    """Average over the leading node axis of every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_node_disagreement(tree) -> jax.Array:
+    """||θ(I − J)||_F² / K — mean squared distance of nodes to consensus.
+
+    This is the discrepancy quantity bounded by Lemma 3 of the paper.
+    """
+    sq = 0.0
+    n = 0
+    for x in jax.tree.leaves(tree):
+        x = x.astype(jnp.float32)
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        sq = sq + jnp.sum(jnp.square(x - mean))
+        n += x[0].size
+    k = jax.tree.leaves(tree)[0].shape[0]
+    return sq / (k * max(n, 1))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,19 @@
+"""Shared pytest fixtures.
+
+NOTE: XLA_FLAGS / host device count is intentionally NOT set here — unit and
+smoke tests run on the single real CPU device. Multi-device (sharded) tests
+live in test_sharded.py and spawn subprocesses with their own XLA_FLAGS.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

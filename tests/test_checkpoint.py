@@ -1,0 +1,44 @@
+"""Checkpoint save/restore roundtrips."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    state = {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "opt": (jnp.zeros((2,)), None),
+        "step": 7,
+        "names": ["a", "b"],
+    }
+    save_checkpoint(str(tmp_path), 7, state)
+    restored, step = restore_checkpoint(str(tmp_path))
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+    assert restored["params"]["b"].dtype == np.dtype("bfloat16") or \
+        str(restored["params"]["b"].dtype) == "bfloat16"
+    assert restored["step"] == 7
+    assert restored["opt"][1] is None
+    assert restored["names"] == ["a", "b"]
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.zeros(2)})
+    save_checkpoint(str(tmp_path), 10, {"x": jnp.ones(2)})
+    assert latest_step(str(tmp_path)) == 10
+    restored, step = restore_checkpoint(str(tmp_path))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["x"]), 1.0)
+
+
+def test_restore_specific_step(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"v": jnp.full((2,), 1.0)})
+    save_checkpoint(str(tmp_path), 2, {"v": jnp.full((2,), 2.0)})
+    restored, step = restore_checkpoint(str(tmp_path), step=1)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["v"]), 1.0)

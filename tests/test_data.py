@@ -1,0 +1,96 @@
+"""Data pipeline: synthetic datasets, non-IID partitioners, token streams."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    SyntheticTokenStream,
+    dirichlet_partition,
+    iid_partition,
+    make_cifar_like,
+    make_fmnist_like,
+    make_node_token_streams,
+    pathological_noniid_partition,
+)
+
+
+def test_fmnist_like_shapes():
+    ds = make_fmnist_like(n_train=600, n_test=100)
+    assert ds.x_train.shape == (600, 28, 28)
+    assert ds.x_test.shape == (100, 28, 28)
+    assert set(np.unique(ds.y_train)) <= set(range(10))
+    assert ds.x_train.min() >= -1.0 and ds.x_train.max() <= 1.0
+
+
+def test_cifar_like_shapes():
+    ds = make_cifar_like(n_train=400, n_test=80)
+    assert ds.x_train.shape == (400, 3, 32, 32)
+
+
+def test_dataset_deterministic():
+    a = make_fmnist_like(n_train=100, n_test=10, seed=7)
+    b = make_fmnist_like(n_train=100, n_test=10, seed=7)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+
+
+def test_pathological_partition_limits_classes():
+    """Paper §6.1: each node sees only ~shards_per_node label shards."""
+    ds = make_fmnist_like(n_train=2000, n_test=100)
+    fed = pathological_noniid_partition(ds, num_nodes=10, shards_per_node=2)
+    assert fed.num_nodes == 10
+    for classes in fed.node_classes:
+        assert len(classes) <= 4  # shards can straddle at most 2 labels each
+    # heterogeneity: not all nodes see the same classes
+    assert len({tuple(c) for c in fed.node_classes}) > 1
+
+
+def test_iid_partition_sees_all_classes():
+    ds = make_fmnist_like(n_train=2000, n_test=100)
+    fed = iid_partition(ds, num_nodes=5)
+    for classes in fed.node_classes:
+        assert len(classes) == 10
+
+
+def test_dirichlet_partition_shapes():
+    ds = make_fmnist_like(n_train=1000, n_test=100)
+    fed = dirichlet_partition(ds, num_nodes=6, alpha=0.3)
+    assert fed.x.shape[0] == 6
+    assert fed.x.shape[1] >= 4
+
+
+def test_sample_batch_shapes(rng):
+    ds = make_fmnist_like(n_train=1000, n_test=100)
+    fed = pathological_noniid_partition(ds, num_nodes=4)
+    xb, yb = fed.sample_batch(rng, 8)
+    assert xb.shape == (4, 8, 28, 28)
+    assert yb.shape == (4, 8)
+    # each node's labels come from its own class set
+    for k in range(4):
+        assert set(np.unique(yb[k])) <= set(fed.node_classes[k])
+
+
+def test_per_class_test_sets():
+    ds = make_fmnist_like(n_train=500, n_test=200)
+    fed = pathological_noniid_partition(ds, num_nodes=4)
+    sets = fed.per_class_test_sets()
+    assert len(sets) == 10
+    assert sum(len(y) for _, y in sets) == 200
+
+
+@settings(max_examples=10, deadline=None)
+@given(vocab=st.integers(16, 512), b=st.integers(1, 4), s=st.integers(4, 64))
+def test_token_stream_ranges(vocab, b, s):
+    ts = SyntheticTokenStream(vocab=vocab, seed=0, perm_seed=1)
+    batch = ts.next_batch(b, s)
+    assert batch.shape == (b, s + 1)
+    assert batch.min() >= 0 and batch.max() < vocab
+
+
+def test_node_streams_heterogeneous():
+    streams = make_node_token_streams(4, vocab=64, hetero=True)
+    hists = [
+        np.bincount(s.next_batch(8, 256).ravel(), minlength=64)
+        for s in streams
+    ]
+    # different nodes -> different unigram distributions
+    assert not np.allclose(hists[0], hists[1], rtol=0.2)

@@ -1,0 +1,164 @@
+"""DR-DSGD core dynamics on analytically tractable problems."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DecentralizedTrainer,
+    RobustConfig,
+    make_dense_mixer,
+    make_identity_mixer,
+    replicate_params,
+)
+from repro.graphs import metropolis_weights, ring_graph, spectral_norm
+from repro.utils.tree import tree_node_disagreement
+
+
+def _quad_loss(params, batch):
+    (target,) = batch
+    return jnp.mean((params["w"] - target) ** 2)
+
+
+def test_replicate_params():
+    p = {"w": jnp.arange(3.0)}
+    rp = replicate_params(p, 5)
+    assert rp["w"].shape == (5, 3)
+    np.testing.assert_allclose(rp["w"][2], p["w"])
+
+
+def test_consensus_rate_matches_rho():
+    """With zero gradients, disagreement contracts at >= the rho rate (Lemma 1)."""
+    k = 8
+    g = ring_graph(k)
+    w = metropolis_weights(g)
+    rho = spectral_norm(w)
+    mixer = make_dense_mixer(w)
+    theta = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(k, 16)),
+                              jnp.float32)}
+    d_prev = float(tree_node_disagreement(theta))
+    for _ in range(5):
+        theta = mixer(theta)
+        d = float(tree_node_disagreement(theta))
+        assert d <= rho * d_prev + 1e-8
+        d_prev = d
+
+
+def test_mixing_preserves_consensus_mean():
+    """Doubly-stochastic W preserves the node average (Eq. 21)."""
+    k = 8
+    w = metropolis_weights(ring_graph(k))
+    mixer = make_dense_mixer(w)
+    theta = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(k, 7)),
+                              jnp.float32)}
+    before = jnp.mean(theta["w"], axis=0)
+    after = jnp.mean(mixer(theta)["w"], axis=0)
+    np.testing.assert_allclose(after, before, rtol=1e-5, atol=1e-6)
+
+
+def test_drdsgd_improves_worst_node_loss():
+    """The paper's core claim on a heterogeneous toy problem."""
+    k = 10
+    targets = jnp.linspace(-1.5, 1.5, k).reshape(k, 1) * jnp.ones((k, 3))
+
+    def run(robust):
+        tr = DecentralizedTrainer(_quad_loss, num_nodes=k, graph="ring",
+                                  robust=robust, lr=0.02, jit=True)
+        state = tr.init({"w": jnp.zeros((3,))})
+        for _ in range(400):
+            state, m = tr.step(state, (targets,))
+        return m
+
+    m_dr = run(RobustConfig(mu=1.0))
+    m_dsgd = run(RobustConfig(enabled=False))
+    assert float(m_dr["loss_worst"]) < float(m_dsgd["loss_worst"])
+    assert float(m_dr["loss_std"]) < float(m_dsgd["loss_std"])  # fairness
+    # average performance is not sacrificed much (paper: "almost the same")
+    assert float(m_dr["loss_mean"]) < float(m_dsgd["loss_mean"]) * 1.5
+
+
+def test_identity_mixer_no_consensus():
+    k = 4
+    targets = jnp.arange(k, dtype=jnp.float32).reshape(k, 1)
+    tr = DecentralizedTrainer(_quad_loss, num_nodes=k, graph="ring",
+                              mixing="none", robust=RobustConfig(enabled=False),
+                              lr=0.3)
+    state = tr.init({"w": jnp.zeros((1,))})
+    for _ in range(100):
+        state, m = tr.step(state, (targets,))
+    # pure local SGD: every node fits its own target exactly, no consensus
+    np.testing.assert_allclose(
+        state.params["w"][:, 0], targets[:, 0], atol=1e-3)
+    assert float(m["disagreement"]) > 0.1
+
+
+def test_metrics_contract():
+    tr = DecentralizedTrainer(_quad_loss, num_nodes=4, graph="ring",
+                              robust=RobustConfig(mu=2.0), lr=0.05)
+    state = tr.init({"w": jnp.zeros((2,))})
+    state, m = tr.step(state, (jnp.ones((4, 2)),))
+    for key in ("loss_mean", "loss_worst", "loss_std", "robust_objective",
+                "scale_mean", "scale_max", "lambda_max", "disagreement"):
+        assert key in m and np.isfinite(float(m[key])), key
+    assert int(state.step) == 1
+
+
+def test_trainer_rejects_disconnected():
+    import pytest
+
+    # two disconnected pairs: build via custom adjacency is not exposed in
+    # the trainer; the nearest check is that 'none' mixing works while an
+    # unknown graph errors.
+    with pytest.raises(ValueError):
+        DecentralizedTrainer(_quad_loss, num_nodes=4, graph="nope")
+
+
+def test_repeat_mixer_contracts_like_rho_pow_m():
+    """m gossip rounds per step contract disagreement like rho^m (Thm 1)."""
+    from repro.core import repeat_mixer
+
+    k = 8
+    w = metropolis_weights(ring_graph(k))
+    rho = spectral_norm(w)
+    theta = {"w": jnp.asarray(np.random.default_rng(3).normal(size=(k, 32)),
+                              jnp.float32)}
+    d0 = float(tree_node_disagreement(theta))
+    for m in (1, 2, 4):
+        mixed = repeat_mixer(make_dense_mixer(w), m)(theta)
+        d = float(tree_node_disagreement(mixed))
+        assert d <= (rho ** m) * d0 + 1e-7, (m, d, d0)
+    import pytest
+
+    with pytest.raises(ValueError):
+        repeat_mixer(make_dense_mixer(w), 0)
+
+
+def test_periodic_averaging_fedavg_style():
+    """mix_every + complete graph == local SGD with periodic averaging.
+
+    Off-steps must be communication-free (params diverge), averaging steps
+    must restore exact consensus (complete-graph Metropolis W == J)."""
+    from repro.core import TrainStepConfig, build_train_step, make_dense_mixer
+    from repro.core.drdsgd import init_state, replicate_params
+    from repro.core.robust import RobustConfig
+    from repro.graphs import complete_graph
+    from repro.optim import sgd
+
+    k, tau = 4, 3
+    w = metropolis_weights(complete_graph(k))
+    step = build_train_step(
+        _quad_loss, sgd(0.1), make_dense_mixer(w),
+        TrainStepConfig(robust=RobustConfig(enabled=False), mix_every=tau))
+    state = init_state(replicate_params({"w": jnp.zeros((2,))}, k), sgd(0.1))
+    targets = jnp.arange(k, dtype=jnp.float32).reshape(k, 1) * jnp.ones((k, 2))
+    jstep = jax.jit(step)
+    disagreements = []
+    for _ in range(2 * tau):
+        state, m = jstep(state, (targets,))
+        disagreements.append(float(m["disagreement"]))
+    # steps tau-1 and 2tau-1 are averaging steps -> consensus restored
+    assert disagreements[tau - 1] < 1e-10
+    assert disagreements[2 * tau - 1] < 1e-10
+    # off-steps accumulate disagreement (no communication happened)
+    assert disagreements[0] > 1e-4
+    assert disagreements[tau] > 1e-4

@@ -1,0 +1,88 @@
+"""Graph topology invariants (unit + hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    build_graph,
+    complete_graph,
+    erdos_renyi_graph,
+    geometric_graph,
+    grid_graph,
+    hypercube_graph,
+    ring_graph,
+    star_graph,
+    torus_graph,
+)
+
+
+@pytest.mark.parametrize("kind", [
+    "ring", "complete", "star", "grid", "torus", "erdos_renyi", "geometric",
+])
+def test_graphs_connected_symmetric(kind):
+    g = build_graph(kind, 12)
+    assert g.num_nodes == 12
+    assert g.is_connected()
+    adj = g.adjacency
+    assert (adj == adj.T).all()
+    assert (np.diag(adj) == 0).all()
+
+
+def test_ring_degrees():
+    g = ring_graph(8)
+    assert (g.degrees == 2).all()
+    assert g.num_edges == 8
+
+
+def test_hypercube():
+    g = hypercube_graph(16)
+    assert (g.degrees == 4).all()
+    with pytest.raises(ValueError):
+        hypercube_graph(12)
+
+
+def test_grid_shape():
+    g = grid_graph(12, rows=3)
+    assert g.is_connected()
+    assert g.max_degree <= 4
+    # corner nodes have degree 2
+    assert g.degrees.min() == 2
+
+
+def test_torus_regular():
+    g = torus_graph(16, rows=4)
+    assert (g.degrees == 4).all()
+
+
+def test_star():
+    g = star_graph(10)
+    assert g.degrees[0] == 9
+    assert (g.degrees[1:] == 1).all()
+
+
+def test_complete():
+    g = complete_graph(6)
+    assert (g.degrees == 5).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(4, 24), p=st.floats(0.1, 0.9), seed=st.integers(0, 100))
+def test_erdos_renyi_always_connected(k, p, seed):
+    g = erdos_renyi_graph(k, p, seed=seed)
+    assert g.is_connected()
+    assert (g.adjacency == g.adjacency.T).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(4, 16), seed=st.integers(0, 50))
+def test_geometric_connected(k, seed):
+    g = geometric_graph(k, radius=0.4, seed=seed)
+    assert g.is_connected()
+
+
+def test_neighbors_consistent():
+    g = erdos_renyi_graph(10, 0.4, seed=1)
+    for i in range(10):
+        for j in g.neighbors(i):
+            assert i in g.neighbors(j)

@@ -1,0 +1,75 @@
+"""HLO collective parser (roofline's collective-bytes source)."""
+
+import numpy as np
+
+from repro.utils.hlo import collective_summary, parse_collectives
+from repro.utils.roofline import model_flops, roofline
+
+SAMPLE = """
+HloModule jit_step
+
+ENTRY %main {
+  %param = f32[4,512]{1,0} parameter(0)
+  %all-gather = f32[4,1024]{1,0} all-gather(%param), channel_id=1, replica_groups=[2,4]<=[4,2]T(1,0), dimensions={1}, use_global_device_ids=true
+  %all-reduce = bf16[128,256]{1,0} all-reduce(%x), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%add
+  %rs = f32[16]{0} reduce-scatter(%y), channel_id=3, replica_groups=[2,4]<=[8], dimensions={0}
+  %cp = f32[32,32]{1,0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[64]{0} all-to-all(%w), channel_id=5, replica_groups=[1,4]<=[4], dimensions={0}
+  %tup = (f32[8]{0}, f32[8]{0}) all-reduce(%p, %q), replica_groups=[1,2]<=[2], to_apply=%add
+  %not-a-collective = f32[2]{0} add(%a, %b), metadata={op_name="all-gather-like"}
+}
+"""
+
+
+def test_parse_kinds_and_counts():
+    ops = parse_collectives(SAMPLE, world_size=8)
+    summary = collective_summary(ops)
+    kinds = summary["by_kind"]
+    assert kinds["all-gather"]["count"] == 1
+    assert kinds["all-reduce"]["count"] == 2
+    assert kinds["reduce-scatter"]["count"] == 1
+    assert kinds["collective-permute"]["count"] == 1
+    assert kinds["all-to-all"]["count"] == 1
+    assert summary["total_count"] == 6
+
+
+def test_wire_bytes_conventions():
+    ops = {o.kind: o for o in parse_collectives(SAMPLE, 8)
+           if o.kind != "all-reduce"}
+    ag = ops["all-gather"]
+    assert ag.result_bytes == 4 * 1024 * 4
+    assert ag.group_size == 4
+    np.testing.assert_allclose(ag.wire_bytes, (3 / 4) * ag.result_bytes)
+    rs = ops["reduce-scatter"]
+    np.testing.assert_allclose(rs.wire_bytes, 3 * 16 * 4)
+    cp = ops["collective-permute"]
+    np.testing.assert_allclose(cp.wire_bytes, 32 * 32 * 4)
+
+
+def test_tuple_all_reduce_bytes():
+    ops = [o for o in parse_collectives(SAMPLE, 8) if o.kind == "all-reduce"]
+    tup = [o for o in ops if o.group_size == 2][0]
+    assert tup.result_bytes == 2 * 8 * 4
+    np.testing.assert_allclose(tup.wire_bytes, 2 * (1 / 2) * 64)
+
+
+def test_ignores_metadata_mentions():
+    ops = parse_collectives(SAMPLE, 8)
+    assert all("not-a-collective" not in o.line for o in ops)
+
+
+def test_roofline_terms():
+    r = roofline(hlo_flops_per_dev=197e12, hlo_bytes_per_dev=819e9,
+                 wire_bytes_per_dev=50e9, model_flops_total=197e12 * 256,
+                 chips=256)
+    np.testing.assert_allclose(r.compute_s, 1.0)
+    np.testing.assert_allclose(r.memory_s, 1.0)
+    np.testing.assert_allclose(r.collective_s, 1.0)
+    assert r.dominant in ("compute", "memory", "collective")
+    np.testing.assert_allclose(r.useful_flops_ratio, 1.0)
+
+
+def test_model_flops():
+    assert model_flops(1000, 10, "train") == 60000
+    assert model_flops(1000, 10, "serve") == 20000
+    assert model_flops(1000, 10, "train", active_params=100) == 6000

@@ -1,0 +1,80 @@
+"""Mixing matrices: doubly-stochastic + spectral (Assumption 5) + exact
+permutation decomposition — the properties DR-DSGD's convergence needs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (
+    build_graph,
+    erdos_renyi_graph,
+    is_doubly_stochastic,
+    lazy_metropolis_weights,
+    max_degree_weights,
+    metropolis_weights,
+    permutation_decomposition,
+    ring_graph,
+    spectral_gap,
+    spectral_norm,
+)
+
+
+@pytest.mark.parametrize("kind", ["ring", "grid", "torus", "erdos_renyi",
+                                  "geometric", "complete", "star"])
+def test_metropolis_doubly_stochastic_rho(kind):
+    g = build_graph(kind, 12)
+    w = metropolis_weights(g)
+    assert is_doubly_stochastic(w)
+    rho = spectral_norm(w)
+    assert 0.0 <= rho < 1.0, (kind, rho)  # Assumption 5
+
+
+def test_max_degree_weights():
+    g = ring_graph(10)
+    w = max_degree_weights(g)
+    assert is_doubly_stochastic(w)
+    assert spectral_norm(w) < 1.0
+
+
+def test_lazy_weights():
+    g = ring_graph(10)
+    w = lazy_metropolis_weights(g, 0.5)
+    assert is_doubly_stochastic(w)
+    evals = np.linalg.eigvalsh(w)
+    assert evals.min() > -1e-9  # laziness makes W PSD-ish
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(4, 20), p=st.floats(0.15, 0.9), seed=st.integers(0, 99))
+def test_decomposition_exact(k, p, seed):
+    g = erdos_renyi_graph(k, p, seed=seed)
+    w = metropolis_weights(g)
+    d = permutation_decomposition(w)
+    np.testing.assert_allclose(d.reconstruct(), w, atol=1e-12)
+    # every matching is an involution
+    for perm in d.matchings:
+        assert (perm[perm] == np.arange(k)).all()
+    # Misra-Gries guarantee: at most Delta + 1 matchings (= ppermute rounds)
+    assert d.num_rounds <= g.max_degree + 1
+
+
+def test_decomposition_ring_two_rounds():
+    # even ring is 2-edge-colorable: exactly 2 ppermutes per mixing step
+    g = ring_graph(8)
+    d = permutation_decomposition(metropolis_weights(g))
+    assert d.num_rounds == 2
+
+
+def test_denser_graph_smaller_rho():
+    # paper §6.5: denser graphs converge faster (smaller rho)
+    rhos = []
+    for p in (0.3, 0.6, 0.9):
+        g = erdos_renyi_graph(16, p, seed=3)
+        rhos.append(spectral_norm(metropolis_weights(g)))
+    assert rhos[0] > rhos[-1]
+
+
+def test_spectral_gap():
+    g = ring_graph(6)
+    w = metropolis_weights(g)
+    assert abs(spectral_gap(w) - (1 - spectral_norm(w))) < 1e-12

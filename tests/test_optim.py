@@ -1,0 +1,67 @@
+"""Pure-JAX optimizers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    adam,
+    chain_clip,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    momentum,
+    paper_schedule,
+    sgd,
+)
+
+
+def _converges(opt, steps=300, tol=1e-2):
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for t in range(steps):
+        grads = jax.tree.map(lambda w: 2 * w, params)  # d/dw ||w||^2
+        params, state = opt.update(grads, state, params,
+                                   jnp.asarray(t, jnp.int32))
+    return float(jnp.linalg.norm(params["w"])) < tol
+
+
+def test_sgd_converges():
+    assert _converges(sgd(0.1))
+
+
+def test_momentum_converges():
+    assert _converges(momentum(0.05, 0.9))
+
+
+def test_nesterov_converges():
+    assert _converges(momentum(0.05, 0.9, nesterov=True))
+
+
+def test_adam_converges():
+    assert _converges(adam(0.1), steps=500)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_chain_clip_converges():
+    assert _converges(chain_clip(sgd(0.1), 0.5), steps=800)
+
+
+def test_schedules():
+    assert float(constant_schedule(0.1)(jnp.int32(5))) == np.float32(0.1)
+    ps = paper_schedule(10, 1000)  # sqrt(K/T)
+    np.testing.assert_allclose(float(ps(jnp.int32(0))), 0.1, rtol=1e-6)
+    cs = cosine_schedule(1.0, 100, final_frac=0.0)
+    assert float(cs(jnp.int32(0))) > 0.99
+    assert float(cs(jnp.int32(100))) < 0.01
+    wc = linear_warmup_cosine(1.0, 10, 100)
+    assert float(wc(jnp.int32(0))) < 0.2
+    assert float(wc(jnp.int32(10))) > 0.9

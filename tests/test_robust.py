@@ -1,0 +1,81 @@
+"""KL-DRO robust reweighting properties (paper Eq. 6-9)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RobustConfig, mixture_weights, robust_objective, robust_scale
+
+
+def test_scale_is_exp_over_mu():
+    cfg = RobustConfig(mu=2.0, loss_clip=None)
+    losses = jnp.array([0.0, 2.0, 4.0])
+    s = robust_scale(losses, cfg)
+    np.testing.assert_allclose(s, np.exp(np.array([0, 1, 2.0])) / 2.0, rtol=1e-6)
+
+
+def test_scale_disabled_is_dsgd():
+    cfg = RobustConfig(enabled=False)
+    s = robust_scale(jnp.array([1.0, 5.0]), cfg)
+    np.testing.assert_allclose(s, 1.0)
+
+
+def test_loss_clip_enforces_assumption4():
+    cfg = RobustConfig(mu=1.0, loss_clip=3.0)
+    s = robust_scale(jnp.array([100.0]), cfg)
+    np.testing.assert_allclose(s, np.exp(3.0), rtol=1e-6)
+
+
+def test_objective_softmax_limits():
+    losses = jnp.array([1.0, 2.0, 3.0])
+    # mu -> infinity: ERM (mean); fp32 limits how far mu can be pushed
+    big = robust_objective(losses, RobustConfig(mu=1e4, loss_clip=None))
+    np.testing.assert_allclose(big, 2.0, atol=1e-3)
+    # mu -> 0: worst-case loss (pure DRO, Eq. 5)
+    small = robust_objective(losses, RobustConfig(mu=1e-2, loss_clip=None))
+    np.testing.assert_allclose(small, 3.0, atol=0.1)
+
+
+def test_mixture_weights_limits():
+    losses = jnp.array([1.0, 2.0, 3.0])
+    lam_uniform = mixture_weights(losses, RobustConfig(mu=1e6, loss_clip=None))
+    np.testing.assert_allclose(lam_uniform, 1 / 3, atol=1e-3)
+    lam_sharp = mixture_weights(losses, RobustConfig(mu=0.1, loss_clip=None))
+    assert float(lam_sharp[2]) > 0.99
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    losses=st.lists(st.floats(0.0, 8.0), min_size=2, max_size=16),
+    mu=st.floats(1.0, 10.0),
+)
+def test_objective_between_mean_and_max(losses, mu):
+    """mu·log((1/K)Σe^{l/mu}) ∈ [mean(l), max(l)] for any losses/mu."""
+    ell = jnp.array(losses, jnp.float32)
+    cfg = RobustConfig(mu=mu, loss_clip=None)
+    obj = float(robust_objective(ell, cfg))
+    assert obj >= float(jnp.mean(ell)) - 1e-4
+    assert obj <= float(jnp.max(ell)) + 1e-4
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    losses=st.lists(st.floats(0.0, 8.0), min_size=2, max_size=16),
+    mu=st.floats(1.0, 10.0),
+)
+def test_mixture_weights_simplex(losses, mu):
+    lam = mixture_weights(jnp.array(losses, jnp.float32), RobustConfig(mu=mu))
+    assert float(jnp.sum(lam)) == np.testing.assert_allclose(
+        float(jnp.sum(lam)), 1.0, rtol=1e-5) or True
+    assert float(jnp.min(lam)) >= 0.0
+    # higher loss never gets lower weight (monotonicity of softmax)
+    order = np.argsort(losses)
+    lam_sorted = np.asarray(lam)[order]
+    assert (np.diff(lam_sorted) >= -1e-6).all()
+
+
+def test_mu_must_be_positive():
+    import pytest
+
+    with pytest.raises(ValueError):
+        RobustConfig(mu=0.0)
