@@ -39,7 +39,8 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       lr: float | None = None, seed: int = 0,
                       eval_every: int = 25,
                       grad_clip: float | None = 2.0,
-                      lr_compensate: bool = True) -> dict:
+                      lr_compensate: bool = True,
+                      compression=None) -> dict:
     """One (DR-)DSGD training run; returns metrics + eval history + timing.
 
     ``lr_compensate`` equalizes the *initial* effective step size across
@@ -66,6 +67,7 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         robust=RobustConfig(mu=mu, enabled=robust),
         lr=base_lr,
         grad_clip=grad_clip,
+        compression=compression,
     )
     state = trainer.init(init_fn(jax.random.PRNGKey(seed)))
     rng = np.random.default_rng(seed)
@@ -73,7 +75,8 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     history = []
     # warm up the jit before timing
     xb, yb = fed.sample_batch(rng, batch)
-    state, _ = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+    state, warm_metrics = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+    comm_bytes = float(warm_metrics["comm_bytes"])
     t0 = time.perf_counter()
     for step in range(1, steps):
         xb, yb = fed.sample_batch(rng, batch)
@@ -93,6 +96,8 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         "num_nodes": num_nodes,
         "rho": trainer.rho,
         "steps": steps,
+        "compress": compression.kind if compression is not None else "none",
+        "comm_bytes_per_round": comm_bytes,
         "us_per_step": wall / (steps - 1) * 1e6,
         "acc_avg": final["acc_avg"],
         "acc_worst_dist": final["acc_worst_dist"],

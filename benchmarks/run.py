@@ -17,7 +17,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,table1,"
-                         "fig5,fig6,roofline")
+                         "fig5,fig6,fig7,roofline")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -26,6 +26,7 @@ def main() -> None:
         fig4_fairness,
         fig5_sparsity,
         fig6_topology,
+        fig7_compression,
         roofline,
         table1_mu_tradeoff,
     )
@@ -37,6 +38,7 @@ def main() -> None:
         "table1": table1_mu_tradeoff.run,
         "fig5": fig5_sparsity.run,
         "fig6": fig6_topology.run,
+        "fig7": fig7_compression.run,
         "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -1,0 +1,38 @@
+"""Compressed-gossip communication subsystem.
+
+compressors.py — wire codecs (bf16 / int8 / int4 stochastic rounding /
+                 topk / randk) behind the :class:`Compressor` protocol.
+mixers.py      — CHOCO-style stateful consensus operators with error
+                 feedback: dense (einsum simulation) and gossip (shard_map +
+                 compressed-payload ppermute) lowerings.
+
+The fused Pallas quantize/dequantize-accumulate kernel lives in
+``repro.kernels.quant_gossip`` and plugs in via
+``CompressionConfig(use_kernel=True)``.
+"""
+
+from repro.comm.compressors import (
+    BF16Compressor,
+    CompressionConfig,
+    Compressor,
+    IntQuantizer,
+    KernelInt8Quantizer,
+    NoCompressor,
+    RandKCompressor,
+    TopKCompressor,
+    make_compressor,
+)
+from repro.comm.mixers import (
+    CommState,
+    CompressedDenseMixer,
+    CompressedGossipMixer,
+    ef_residual,
+)
+
+__all__ = [
+    "CompressionConfig", "Compressor", "make_compressor",
+    "NoCompressor", "BF16Compressor", "IntQuantizer", "KernelInt8Quantizer",
+    "TopKCompressor", "RandKCompressor",
+    "CommState", "CompressedDenseMixer", "CompressedGossipMixer",
+    "ef_residual",
+]

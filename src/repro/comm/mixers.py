@@ -1,0 +1,291 @@
+"""Compressed consensus operators with error feedback.
+
+Plain mixing sends full-precision parameters; quantizing them naively stalls
+consensus at the quantization noise floor, because the message magnitude
+stays O(‖θ‖) while the disagreement shrinks.  With ``error_feedback=True``
+(the default) we instead gossip *innovations* (CHOCO-style): every node
+keeps a public copy θ̂_i that all of its neighbors can reconstruct, transmits
+only the compressed innovation, and applies the consensus correction against
+the public copies:
+
+    q_i = C(θ_i − θ̂_i),   θ̂_i ← θ̂_i + q_i,
+    θ_i ← θ_i + γ·(Σ_j W_ij θ̂_j − θ̂_i).
+
+The *error-feedback residual* of this scheme is e_i = θ_i − θ̂_i: exactly the
+mass compression dropped so far, re-offered to the compressor every round
+(see :func:`ef_residual`).  Keeping it implicit in θ̂ rather than as a second
+accumulator is deliberate — an explicit accumulator *on top of* θ̂ double
+counts the unsent mass (the next message becomes Δθ + 2e) and diverges for
+biased compressors.  Because W is doubly stochastic the node *average* is
+preserved exactly no matter how lossy C is, and since the transmitted
+innovation shrinks with the disagreement, the relative compression error per
+round stays constant and consensus contracts geometrically (Koloskova et
+al., 2019).  γ = ``CompressionConfig.resolved_gamma`` damps the correction
+for the low-fidelity sparsifiers, which destabilize the loop at γ = 1.
+
+``error_feedback=False`` is the naive memoryless scheme — nodes exchange
+C(θ) directly, θ_i ← θ_i + γ·(Σ_j W_ij C(θ_j) − C(θ_i)) — kept as the
+ablation baseline: it stalls at the quantization noise floor instead of
+tracking the uncompressed mixer.
+
+Two lowerings, mirroring ``repro.core.consensus``:
+
+* :class:`CompressedDenseMixer`  — einsum over the public copies; the wire
+  payload is only *accounted* (simulation / CPU), math is identical.
+* :class:`CompressedGossipMixer` — shard_map; each matching ppermutes the
+  actual compressed payload (int8 values + scales, or topk values+indices),
+  and the receiver dequantize-accumulates into its running mix buffer
+  s_i = Σ_j W_ij θ̂_j.  A full-precision wire buffer is never materialized.
+
+Both are *stateful* mixers: ``mix(theta, CommState) -> (theta, CommState)``
+with ``stateful = True`` so ``build_train_step`` threads the state through
+``DecentralizedState.ef_state``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.compressors import CompressionConfig, make_compressor
+from repro.utils.compat import shard_map_unchecked
+
+
+class CommState(NamedTuple):
+    """Per-node compression state threaded through the train loop.
+
+    hat:     public copies θ̂ (float32, same structure/shape as params); the
+             error-feedback residual is θ − θ̂.  () when error_feedback=False
+             (memoryless scheme).
+    hat_mix: running s_i = Σ_j W_ij θ̂_j (gossip lowering only, EF mode; ()
+             otherwise) so each round only adds the received innovations.
+    key:     PRNG key for stochastic rounding / random sparsification.
+    """
+
+    hat: Any
+    hat_mix: Any
+    key: jax.Array
+
+
+def ef_residual(theta, state: CommState):
+    """The error-feedback residual e = θ − θ̂ (what compression still owes)."""
+    if state.hat == ():
+        raise ValueError("memoryless mixer (error_feedback=False) "
+                         "keeps no residual")
+    return jax.tree.map(
+        lambda x, h: x.astype(jnp.float32) - h, theta, state.hat)
+
+
+def _f32_zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _leaf_payload_bytes(compressor, params) -> int:
+    """Per-round payload bytes one node injects (sum over leaves)."""
+    total = 0
+    for x in jax.tree.leaves(params):
+        total += compressor.payload_bytes(x.size // x.shape[0])
+    return total
+
+
+class _CompressedMixerBase:
+    stateful = True
+
+    def __init__(self, compression: CompressionConfig):
+        self.compression = compression
+        self.compressor = make_compressor(compression)
+        self.gamma = compression.resolved_gamma
+        self.ef = compression.error_feedback
+
+    # -- state ----------------------------------------------------------------
+
+    def init_state(self, params) -> CommState:
+        return CommState(
+            hat=_f32_zeros_like(params) if self.ef else (),
+            hat_mix=self._init_hat_mix(params),
+            key=jax.random.PRNGKey(self.compression.seed),
+        )
+
+    def _init_hat_mix(self, params):
+        return ()
+
+    def state_specs(self, param_specs) -> CommState:
+        """PartitionSpecs matching :meth:`init_state` (for pjit shardings)."""
+        return CommState(
+            hat=param_specs if self.ef else (),
+            hat_mix=param_specs if self._uses_hat_mix() else (),
+            key=jax.sharding.PartitionSpec(),
+        )
+
+    def _uses_hat_mix(self) -> bool:
+        return False
+
+    # -- shared per-leaf codec step -------------------------------------------
+
+    def _encode_leaf(self, x, hat, key):
+        """Compress one flattened leaf.
+
+        Returns (payload, public', hat') where ``public'`` is this node's
+        new publicly-reconstructible value (θ̂' in EF mode, C(θ) memoryless)
+        and ``hat'`` is the state to carry (θ̂' or ()).
+        """
+        if self.ef:
+            payload = self.compressor.compress(x - hat, key)
+            qhat = self.compressor.decompress(payload, x.shape[1])
+            new_hat = hat + qhat
+            return payload, new_hat, new_hat
+        payload = self.compressor.compress(x, key)
+        public = self.compressor.decompress(payload, x.shape[1])
+        return payload, public, ()
+
+
+class CompressedDenseMixer(_CompressedMixerBase):
+    """Compressed consensus via einsum over the public copies (simulation)."""
+
+    def __init__(self, w: np.ndarray, compression: CompressionConfig):
+        super().__init__(compression)
+        self.w = jnp.asarray(np.asarray(w), jnp.float32)
+        self.k = int(np.asarray(w).shape[0])
+
+    def __call__(self, theta, state: CommState):
+        key, sub = jax.random.split(state.key)
+        leaves, treedef = jax.tree.flatten(theta)
+        hats = (treedef.flatten_up_to(state.hat) if self.ef
+                else [() for _ in leaves])
+        out_theta, out_hat = [], []
+        for i, (x, h) in enumerate(zip(leaves, hats)):
+            k = x.shape[0]
+            xf = x.reshape(k, -1).astype(jnp.float32)
+            hf = h.reshape(k, -1) if self.ef else None
+            _, public, new_hat = self._encode_leaf(
+                xf, hf, jax.random.fold_in(sub, i))
+            mixed = jnp.einsum(
+                "kl,ld->kd", self.w, public,
+                precision=jax.lax.Precision.HIGHEST)
+            out = xf + self.gamma * (mixed - public)
+            out_theta.append(out.reshape(x.shape).astype(x.dtype))
+            if self.ef:
+                out_hat.append(new_hat.reshape(x.shape))
+        unflat = treedef.unflatten
+        return unflat(out_theta), CommState(
+            hat=unflat(out_hat) if self.ef else (), hat_mix=(), key=key)
+
+    def bytes_per_round(self, params) -> int:
+        """Total payload bytes injected per round (every node sends once)."""
+        return self.k * _leaf_payload_bytes(self.compressor, params)
+
+
+class CompressedGossipMixer(_CompressedMixerBase):
+    """Compressed consensus lowered to per-matching ppermutes of the payload.
+
+    Requires K == prod(mesh node axes) (one node per shard), like the
+    uncompressed gossip mixer.  With ``replica_axis`` set, a psum-mean over
+    the inner replica axis runs before the gossip round (the hierarchical
+    FSDP-inside / gossip-across composition).
+    """
+
+    def __init__(self, decomp, mesh, node_axis, param_specs,
+                 compression: CompressionConfig, replica_axis: str | None = None):
+        super().__init__(compression)
+        axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+        k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
+        k = decomp.self_weights.shape[0]
+        if k != k_mesh:
+            raise ValueError(
+                f"gossip mixer needs K == mesh node size: K={k}, "
+                f"mesh {axes}={k_mesh}")
+        self.k = k
+        self.mesh = mesh
+        self.axis = node_axis if isinstance(node_axis, str) else tuple(node_axis)
+        self.param_specs = param_specs
+        self.replica_axis = replica_axis
+        self.decomp = decomp
+        self.self_w = jnp.asarray(decomp.self_weights, jnp.float32)
+        self.match_ws = [jnp.asarray(w, jnp.float32)
+                         for w in decomp.matching_weights]
+        self.perms = decomp.ppermute_pairs()
+
+    def _init_hat_mix(self, params):
+        return _f32_zeros_like(params) if self.ef else ()
+
+    def _uses_hat_mix(self) -> bool:
+        return self.ef
+
+    def _node_index(self):
+        if isinstance(self.axis, str):
+            return jax.lax.axis_index(self.axis)
+        idx = jax.lax.axis_index(self.axis[0])
+        for a in self.axis[1:]:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def __call__(self, theta, state: CommState):
+        key, sub = jax.random.split(state.key)
+        p_node = jax.sharding.PartitionSpec(self.axis)
+        p_rep = jax.sharding.PartitionSpec()
+        specs = self.param_specs
+        ef = self.ef
+
+        def body(t, hat, s, self_w, match_ws, k0):
+            kb = jax.random.fold_in(k0, self._node_index())
+            leaves, treedef = jax.tree.flatten(t)
+            hats = (treedef.flatten_up_to(hat) if ef
+                    else [() for _ in leaves])
+            mixes = (treedef.flatten_up_to(s) if ef
+                     else [() for _ in leaves])
+            o_t, o_h, o_s = [], [], []
+            for i, (x, h, sm) in enumerate(zip(leaves, hats, mixes)):
+                k_local = x.shape[0]
+                d = x.size // k_local
+                xf = x.reshape(k_local, d).astype(jnp.float32)
+                if self.replica_axis is not None:
+                    r = self.mesh.shape[self.replica_axis]
+                    xf = jax.lax.psum(xf, self.replica_axis) / r
+                payload, public, new_hat = self._encode_leaf(
+                    xf, h.reshape(k_local, d) if ef else None,
+                    jax.random.fold_in(kb, i))
+                # EF: s_i += W_ii q_i + Σ_m W_i,perm(i)·dequant(recv) keeps
+                # s_i = Σ_j W_ij θ̂_j current; memoryless: same combine of the
+                # fresh C(θ) messages.  Only the payload crosses the wire.
+                base = sm.reshape(k_local, d) if ef else jnp.zeros_like(xf)
+                delta_or_msg = (public - h.reshape(k_local, d)) if ef else public
+                acc = base + self_w[:, None] * delta_or_msg
+                for pw, perm in zip(match_ws, self.perms):
+                    recv = jax.tree.map(
+                        lambda leaf: jax.lax.ppermute(leaf, self.axis, perm),
+                        payload)
+                    acc = self._accumulate(acc, recv, pw[:, None], d)
+                out = xf + self.gamma * (acc - public)
+                o_t.append(out.reshape(x.shape).astype(x.dtype))
+                if ef:
+                    o_h.append(new_hat.reshape(x.shape))
+                    o_s.append(acc.reshape(x.shape))
+            u = treedef.unflatten
+            return (u(o_t), u(o_h) if ef else (), u(o_s) if ef else ())
+
+        in_hat = (specs if ef else (), specs if ef else ())
+        shard = shard_map_unchecked(
+            body,
+            mesh=self.mesh,
+            in_specs=(specs, in_hat[0], in_hat[1], p_node,
+                      [p_node] * len(self.match_ws), p_rep),
+            out_specs=(specs, in_hat[0], in_hat[1]),
+        )
+        t2, h2, s2 = shard(theta, state.hat, state.hat_mix,
+                           self.self_w, list(self.match_ws), sub)
+        return t2, CommState(hat=h2, hat_mix=s2, key=key)
+
+    def _accumulate(self, acc, payload, weight, d):
+        fused = getattr(self.compressor, "accumulate", None)
+        if fused is not None:
+            return fused(acc, payload, weight)
+        return acc + weight * self.compressor.decompress(payload, d)
+
+    def bytes_per_round(self, params) -> int:
+        """Payload bytes per round: active senders per matching × payload."""
+        per_node = _leaf_payload_bytes(self.compressor, params)
+        sends = sum(len(pairs) for pairs in self.perms)
+        return sends * per_node

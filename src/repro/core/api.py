@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CompressionConfig
 from repro.core.consensus import Mixer, make_dense_mixer, make_identity_mixer
 from repro.core.drdsgd import (
     DecentralizedState,
@@ -49,6 +50,9 @@ class DecentralizedTrainer:
     grad_clip: float | None = None
     mixer: Mixer | None = None            # override (e.g. gossip mixer on a mesh)
     mixing: str = "metropolis"            # or "max_degree", "none"
+    compression: CompressionConfig | None = None
+                                          # wire codec for the consensus step
+                                          # (repro.comm); None = full precision
     loss_has_aux: bool = False
     jit: bool = True
 
@@ -71,11 +75,17 @@ class DecentralizedTrainer:
         if self.mixer is None:
             self.mixer = (
                 make_identity_mixer() if self.mixing == "none"
-                else make_dense_mixer(self.w)
+                else make_dense_mixer(self.w, compression=self.compression)
             )
+        elif self.compression is not None and self.compression.enabled \
+                and not getattr(self.mixer, "stateful", False):
+            raise ValueError(
+                "compression is set but the provided mixer is uncompressed; "
+                "build the mixer with the same CompressionConfig")
         if self.optimizer is None:
             self.optimizer = sgd(self.lr)
-        step_cfg = TrainStepConfig(robust=self.robust, grad_clip=self.grad_clip)
+        step_cfg = TrainStepConfig(robust=self.robust, grad_clip=self.grad_clip,
+                                   compression=self.compression)
         self._train_step = build_train_step(
             self.loss_fn, self.optimizer, self.mixer, step_cfg,
             loss_has_aux=self.loss_has_aux,
@@ -92,10 +102,10 @@ class DecentralizedTrainer:
     def init(self, params_single) -> DecentralizedState:
         """All nodes start at the same point (Lemma 3 precondition)."""
         node_params = replicate_params(params_single, self.num_nodes)
-        return init_state(node_params, self.optimizer)
+        return init_state(node_params, self.optimizer, mixer=self.mixer)
 
     def init_stacked(self, node_params) -> DecentralizedState:
-        return init_state(node_params, self.optimizer)
+        return init_state(node_params, self.optimizer, mixer=self.mixer)
 
     def step(self, state: DecentralizedState, batch):
         return self._train_step(state, batch)

@@ -16,6 +16,13 @@ doubly-stochastic mixing; they differ in the collectives XLA emits:
   ``replica`` mesh axis (data-parallel replicas inside each node) composed
   with gossip over the outer node axis. Lets K ≪ data-parallel world size so
   that per-chip parameter memory stays bounded for multi-100B models.
+
+Every factory accepts a ``compression: CompressionConfig`` (``repro.comm``):
+when enabled it returns the corresponding *stateful* compressed mixer
+(``mix(theta, CommState) -> (theta, CommState)``, ``stateful = True``) that
+gossips error-feedback-corrected compressed innovations instead of raw
+parameters.  Plain mixers stay simple ``theta -> theta`` callables and carry
+a ``bytes_per_round`` estimator for the per-step ``comm_bytes`` metric.
 """
 
 from __future__ import annotations
@@ -27,15 +34,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CompressedDenseMixer, CompressedGossipMixer, CompressionConfig
 from repro.graphs.mixing import MixingDecomposition
+from repro.utils.compat import shard_map
+from repro.utils.tree import tree_bytes
 
 Mixer = Callable[[Any], Any]  # node-stacked pytree -> node-stacked pytree
 
 AxisName = str | tuple[str, ...]
 
 
-def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32) -> Mixer:
+def _compression_enabled(compression: CompressionConfig | None) -> bool:
+    return compression is not None and compression.enabled
+
+
+def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32,
+                     compression: CompressionConfig | None = None) -> Mixer:
     """θ_i ← Σ_j W_ij θ_j via einsum along the leading node axis."""
+    if _compression_enabled(compression):
+        return CompressedDenseMixer(w, compression)
     w = jnp.asarray(np.asarray(w), dtype=compute_dtype)
 
     def mix(theta):
@@ -48,6 +65,8 @@ def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32) -> Mixer:
 
         return jax.tree.map(leaf, theta)
 
+    # uncompressed round: every node injects its full param block once
+    mix.bytes_per_round = tree_bytes
     return mix
 
 
@@ -56,8 +75,7 @@ def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
     return v.reshape(v.shape + (1,) * (like.ndim - 1))
 
 
-def gossip_mix_local(theta_local, self_w, match_ws, perms, axis: AxisName,
-                     wire_dtype=None):
+def gossip_mix_local(theta_local, self_w, match_ws, perms, axis: AxisName):
     """The per-shard body of the gossip mixer (must run inside shard_map).
 
     Args:
@@ -66,19 +84,29 @@ def gossip_mix_local(theta_local, self_w, match_ws, perms, axis: AxisName,
       match_ws: list of (k_local,) per-matching edge weights.
       perms: list of ppermute (src, dst) pair lists (static python).
       axis: mesh axis name(s) carrying the node dimension.
-      wire_dtype: optional dtype for the exchanged tensors (bf16 compression —
-        a beyond-paper option; None keeps the leaf dtype).
+
+    Wire compression is not an ad-hoc dtype cast here anymore: compressed
+    gossip (bf16 / int8 / int4 / topk / randk + error feedback) lives in
+    ``repro.comm.mixers.CompressedGossipMixer``.
     """
 
     def leaf(x):
         acc = x.astype(jnp.float32) * _bcast(self_w, x)
         for pw, perm in zip(match_ws, perms):
-            msg = x if wire_dtype is None else x.astype(wire_dtype)
-            recv = jax.lax.ppermute(msg, axis, perm)
+            recv = jax.lax.ppermute(x, axis, perm)
             acc = acc + recv.astype(jnp.float32) * _bcast(pw, x)
         return acc.astype(x.dtype)
 
     return jax.tree.map(leaf, theta_local)
+
+
+def _gossip_bytes_per_round(decomp: MixingDecomposition, k: int):
+    sends = sum(len(pairs) for pairs in decomp.ppermute_pairs())
+
+    def estimate(params):
+        return sends * tree_bytes(params) // k
+
+    return estimate
 
 
 def make_gossip_mixer(
@@ -86,7 +114,7 @@ def make_gossip_mixer(
     mesh: jax.sharding.Mesh,
     node_axis: AxisName,
     param_specs,
-    wire_dtype=None,
+    compression: CompressionConfig | None = None,
 ) -> Mixer:
     """Sparse gossip mixing: one collective-permute per graph matching.
 
@@ -94,6 +122,9 @@ def make_gossip_mixer(
     params (leading dim partitioned over ``node_axis``); it is used for
     shard_map in/out specs so tensor-parallel dims stay sharded.
     """
+    if _compression_enabled(compression):
+        return CompressedGossipMixer(decomp, mesh, node_axis, param_specs,
+                                     compression)
     axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
     k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
     k = decomp.self_weights.shape[0]
@@ -104,24 +135,19 @@ def make_gossip_mixer(
     axis: AxisName = node_axis if isinstance(node_axis, str) else tuple(node_axis)
     self_w = jnp.asarray(decomp.self_weights, jnp.float32)
     match_ws = [jnp.asarray(w, jnp.float32) for w in decomp.matching_weights]
-    # ppermute pairs: node i receives from j=perm[i] -> pair (j, i).
-    perms = [
-        [(int(p[i]), i) for i in range(k) if int(p[i]) != i]
-        for p in decomp.matchings
-    ]
+    perms = decomp.ppermute_pairs()
     p_node = jax.sharding.PartitionSpec(axis)
 
     def mix(theta):
-        body = partial(
-            gossip_mix_local, axis=axis, perms=perms, wire_dtype=wire_dtype
-        )
-        return jax.shard_map(
+        body = partial(gossip_mix_local, axis=axis, perms=perms)
+        return shard_map(
             lambda t, sw, mws: body(t, sw, mws),
             mesh=mesh,
             in_specs=(param_specs, p_node, [p_node] * len(match_ws)),
             out_specs=param_specs,
         )(theta, self_w, list(match_ws))
 
+    mix.bytes_per_round = _gossip_bytes_per_round(decomp, k)
     return mix
 
 
@@ -131,7 +157,7 @@ def make_hierarchical_mixer(
     node_axis: AxisName,
     replica_axis: str,
     param_specs,
-    wire_dtype=None,
+    compression: CompressionConfig | None = None,
 ) -> Mixer:
     """FSDP-inside / gossip-across: psum-mean over ``replica_axis`` then gossip.
 
@@ -139,6 +165,9 @@ def make_hierarchical_mixer(
     replicas hold divergent gradient contributions that are averaged here),
     then the per-node consensus step runs over ``node_axis``.
     """
+    if _compression_enabled(compression):
+        return CompressedGossipMixer(decomp, mesh, node_axis, param_specs,
+                                     compression, replica_axis=replica_axis)
     axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
     k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
     k = decomp.self_weights.shape[0]
@@ -147,10 +176,7 @@ def make_hierarchical_mixer(
     axis: AxisName = node_axis if isinstance(node_axis, str) else tuple(node_axis)
     self_w = jnp.asarray(decomp.self_weights, jnp.float32)
     match_ws = [jnp.asarray(w, jnp.float32) for w in decomp.matching_weights]
-    perms = [
-        [(int(p[i]), i) for i in range(k) if int(p[i]) != i]
-        for p in decomp.matchings
-    ]
+    perms = decomp.ppermute_pairs()
     p_node = jax.sharding.PartitionSpec(axis)
     r_size = mesh.shape[replica_axis]
 
@@ -160,21 +186,27 @@ def make_hierarchical_mixer(
             t = jax.tree.map(
                 lambda x: jax.lax.psum(x, replica_axis) / r_size, t
             )
-            return gossip_mix_local(t, sw, mws, perms, axis, wire_dtype)
+            return gossip_mix_local(t, sw, mws, perms, axis)
 
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(param_specs, p_node, [p_node] * len(match_ws)),
             out_specs=param_specs,
         )(theta, self_w, list(match_ws))
 
+    mix.bytes_per_round = _gossip_bytes_per_round(decomp, k)
     return mix
 
 
 def make_identity_mixer() -> Mixer:
     """No communication — for ablations (pure local SGD)."""
-    return lambda theta: theta
+
+    def mix(theta):
+        return theta
+
+    mix.bytes_per_round = lambda params: 0
+    return mix
 
 
 def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
@@ -187,10 +219,24 @@ def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
     """
     if rounds < 1:
         raise ValueError("rounds must be >= 1")
+    if getattr(mixer, "stateful", False):
+        def mix_stateful(theta, comm_state):
+            for _ in range(rounds):
+                theta, comm_state = mixer(theta, comm_state)
+            return theta, comm_state
+
+        mix_stateful.stateful = True
+        mix_stateful.init_state = mixer.init_state
+        mix_stateful.state_specs = getattr(mixer, "state_specs", None)
+        mix_stateful.bytes_per_round = (
+            lambda params: rounds * mixer.bytes_per_round(params))
+        return mix_stateful
 
     def mix(theta):
         for _ in range(rounds):
             theta = mixer(theta)
         return theta
 
+    inner_bytes = getattr(mixer, "bytes_per_round", tree_bytes)
+    mix.bytes_per_round = lambda params: rounds * inner_bytes(params)
     return mix

@@ -21,10 +21,11 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CompressionConfig
 from repro.core.consensus import Mixer
 from repro.core.robust import RobustConfig, mixture_weights, robust_objective, robust_scale
 from repro.optim.optimizers import Optimizer
-from repro.utils.tree import tree_node_disagreement
+from repro.utils.tree import tree_bytes, tree_node_disagreement
 
 LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar loss
 
@@ -33,6 +34,7 @@ class DecentralizedState(NamedTuple):
     params: Any          # node-stacked pytree, leading axis K
     opt_state: Any
     step: jax.Array      # scalar int32
+    ef_state: Any = ()   # comm.CommState for compressed mixers, else ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,14 +45,26 @@ class TrainStepConfig:
     mix_every: int = 1                    # consensus period: 1 = DSGD/DR-DSGD;
                                           # >1 + complete graph = FedAvg-style
                                           # local SGD with periodic averaging
+    compression: CompressionConfig | None = None
+                                          # wire codec the mixer was built
+                                          # with (repro.comm); recorded here
+                                          # so the step can sanity-check the
+                                          # mixer and report comm_bytes
 
 
-def init_state(node_params, optimizer: Optimizer) -> DecentralizedState:
-    """Build state from node-stacked params (see utils.tree.tree_stack_nodes)."""
+def init_state(node_params, optimizer: Optimizer,
+               mixer: Mixer | None = None) -> DecentralizedState:
+    """Build state from node-stacked params (see utils.tree.tree_stack_nodes).
+
+    Pass the mixer when it is a stateful compressed mixer so its per-node
+    error-feedback / public-copy state is allocated into ``ef_state``.
+    """
+    stateful = mixer is not None and getattr(mixer, "stateful", False)
     return DecentralizedState(
         params=node_params,
         opt_state=optimizer.init(node_params),
         step=jnp.zeros((), jnp.int32),
+        ef_state=mixer.init_state(node_params) if stateful else (),
     )
 
 
@@ -79,6 +93,14 @@ def build_train_step(
     """
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=loss_has_aux)
+    stateful_mixer = bool(getattr(mixer, "stateful", False))
+    if cfg.compression is not None and cfg.compression.enabled \
+            and not stateful_mixer:
+        raise ValueError(
+            "TrainStepConfig.compression is set but the mixer is not a "
+            "compressed (stateful) mixer — build it with the same "
+            "CompressionConfig (see repro.core.consensus factories)")
+    bytes_per_round = getattr(mixer, "bytes_per_round", tree_bytes)
 
     def per_node(params_i, batch_i):
         if loss_has_aux:
@@ -107,13 +129,27 @@ def build_train_step(
         # --- consensus: the only cross-node communication of the algorithm.
         # mix_every > 1 skips communication on off-steps (local SGD /
         # periodic averaging, the FedAvg-style PS baseline of paper §1-2).
-        if cfg.mix_every == 1:
-            mixed = mixer(updated)
+        is_mix_step = state.step % cfg.mix_every == cfg.mix_every - 1
+        if stateful_mixer:
+            if cfg.mix_every == 1:
+                mixed, ef_state = mixer(updated, state.ef_state)
+            else:
+                mixed, ef_state = jax.lax.cond(
+                    is_mix_step,
+                    lambda args: mixer(*args), lambda args: args,
+                    (updated, state.ef_state))
         else:
-            mixed = jax.lax.cond(
-                state.step % cfg.mix_every == cfg.mix_every - 1,
-                mixer, lambda t: t, updated)
+            ef_state = state.ef_state
+            if cfg.mix_every == 1:
+                mixed = mixer(updated)
+            else:
+                mixed = jax.lax.cond(is_mix_step, mixer, lambda t: t, updated)
+        # estimated wire bytes this step (static estimate, gated on mixing)
+        round_bytes = float(bytes_per_round(state.params))
         metrics = {
+            "comm_bytes": (
+                jnp.float32(round_bytes) if cfg.mix_every == 1
+                else jnp.where(is_mix_step, round_bytes, 0.0)),
             "loss_mean": jnp.mean(losses),
             "loss_worst": jnp.max(losses),
             "loss_std": jnp.std(losses),
@@ -127,7 +163,7 @@ def build_train_step(
         for k, v in aux.items():
             metrics[f"aux_{k}"] = jnp.mean(v)
         return (
-            DecentralizedState(mixed, opt_state, state.step + 1),
+            DecentralizedState(mixed, opt_state, state.step + 1, ef_state),
             metrics,
         )
 

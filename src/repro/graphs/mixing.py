@@ -100,6 +100,20 @@ class MixingDecomposition:
     def num_rounds(self) -> int:
         return len(self.matchings)
 
+    def ppermute_pairs(self) -> list[list[tuple[int, int]]]:
+        """Per-matching ``lax.ppermute`` (src, dst) pairs.
+
+        Node i receives from j = perm[i] -> pair (j, i); idle nodes (fixed
+        points of the matching) are omitted, so ppermute zero-fills them.
+        The single source of truth for gossip edge routing — both the plain
+        and the compressed gossip mixers consume this.
+        """
+        k = self.self_weights.shape[0]
+        return [
+            [(int(p[i]), i) for i in range(k) if int(p[i]) != i]
+            for p in self.matchings
+        ]
+
     def reconstruct(self) -> np.ndarray:
         """Rebuild the dense W (for testing exactness)."""
         k = self.self_weights.shape[0]

@@ -10,8 +10,13 @@ communication algorithm), but the production framework around it does:
                     (paper Eq. 9 in one HBM pass)
   rwkv6_scan/       chunked WKV6 recurrence with the state matrix resident
                     in VMEM scratch across time chunks
+  quant_gossip/     fused int8 quantize / dequantize-accumulate for the
+                    compressed gossip consensus (repro.comm): per-block
+                    absmax scales + stochastic rounding in one pass, so the
+                    only wire buffer is the int8 payload
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper with CPU fallback) and ref.py (pure-jnp oracle); correctness
-is swept in tests/test_kernel_*.py with interpret=True on CPU.
+is swept in tests/test_kernel_*.py and tests/test_comm.py with
+interpret=True on CPU.
 """

@@ -1,0 +1,77 @@
+"""Jitted wrappers for the fused quantize-gossip kernels with CPU fallback.
+
+On TPU (or with ``interpret=True``) these dispatch to the Pallas kernels;
+elsewhere they run the bit-identical jnp oracle, so the compressed gossip
+mixer works unchanged in CPU simulation.
+
+``quant_gossip_round`` composes one full compressed matching exchange —
+quantize → ppermute(int8 payload + scales) → dequantize-accumulate — for use
+inside ``shard_map``; the full-precision message never exists on the wire.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_gossip import kernel as _k
+from repro.kernels.quant_gossip import ref as _r
+
+
+def _use_pallas(interpret: bool, use_kernel: bool) -> bool:
+    return use_kernel and (jax.default_backend() == "tpu" or interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("qmax", "block_d", "interpret", "use_kernel"))
+def quantize_blockwise(x, u, *, qmax: int = 127, block_d: int = 65536,
+                       interpret: bool = False, use_kernel: bool = True):
+    """(K, D) f32 -> (q int8 (K, D), per-block scales f32 (K, n_blk))."""
+    if _use_pallas(interpret, use_kernel):
+        on_tpu = jax.default_backend() == "tpu"
+        return _k.quantize_blockwise(x, u, qmax=qmax, block_d=block_d,
+                                     interpret=interpret or not on_tpu)
+    return _r.quantize_blockwise_ref(x, u, qmax=qmax, block_d=block_d)
+
+
+@jax.jit
+def dequantize_blockwise(q, scales):
+    return _r.dequantize_blockwise_ref(q, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def dequant_accumulate(acc, q, scales, w, *, interpret: bool = False,
+                       use_kernel: bool = True):
+    """acc + w·dequant(q, scales), one fused pass over the int8 payload."""
+    w = jnp.reshape(jnp.asarray(w, jnp.float32), (-1,))
+    if _use_pallas(interpret, use_kernel):
+        on_tpu = jax.default_backend() == "tpu"
+        return _k.dequant_accumulate(acc, q, scales, w,
+                                     interpret=interpret or not on_tpu)
+    return _r.dequant_accumulate_ref(acc, q, scales, w)
+
+
+def quant_gossip_round(x, acc, weight, axis, perm, key, *, qmax: int = 127,
+                       block_d: int = 65536, interpret: bool = False,
+                       use_kernel: bool = True):
+    """One compressed matching exchange (must run inside shard_map).
+
+    Args:
+      x: (K_local, D) local block to transmit.
+      acc: (K_local, D) accumulator the received message is combined into.
+      weight: (K_local,) receive weights W_{i, perm(i)}.
+      axis: mesh axis name(s) carrying the node dimension.
+      perm: static list of (src, dst) ppermute pairs.
+      key: PRNG key for the stochastic-rounding uniforms.
+
+    Returns acc + weight · dequant(ppermute(quantize(x))).
+    """
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q, scales = quantize_blockwise(x, u, qmax=qmax, block_d=block_d,
+                                   interpret=interpret, use_kernel=use_kernel)
+    q = jax.lax.ppermute(q, axis, perm)
+    scales = jax.lax.ppermute(scales, axis, perm)
+    return dequant_accumulate(acc, q, scales, weight, interpret=interpret,
+                              use_kernel=use_kernel)

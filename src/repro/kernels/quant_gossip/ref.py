@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the fused quantize / dequantize-accumulate kernels.
+
+Bit-exact against the Pallas kernels given the same uniforms ``u`` (both
+compute ``clip(floor(x/scale + u))`` with a per-(node, block) absmax scale).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _blocked(x, n_blk):
+    k, d = x.shape
+    return x.reshape(k, n_blk, d // n_blk)
+
+
+def quantize_blockwise_ref(x, u, *, qmax: int = 127, block_d: int = 65536):
+    """x, u: (K, D) -> (q int8 (K, D), scales f32 (K, D/block_d))."""
+    k, d = x.shape
+    block_d = min(block_d, d)
+    if d % block_d:
+        block_d = d
+    n_blk = d // block_d
+    xb = _blocked(x.astype(jnp.float32), n_blk)
+    absmax = jnp.max(jnp.abs(xb), axis=2, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    y = jnp.floor(xb / scale + _blocked(u.astype(jnp.float32), n_blk))
+    q = jnp.clip(y, -qmax, qmax).astype(jnp.int8)
+    return q.reshape(k, d), scale.reshape(k, n_blk)
+
+
+def dequantize_blockwise_ref(q, scales):
+    """(K, D) int8 + (K, n_blk) scales -> (K, D) float32."""
+    k, d = q.shape
+    n_blk = scales.shape[1]
+    out = _blocked(q.astype(jnp.float32), n_blk) * scales[:, :, None]
+    return out.reshape(k, d)
+
+
+def dequant_accumulate_ref(acc, q, scales, w):
+    """acc + w[:, None] * dequantize(q, scales)."""
+    w = jnp.reshape(w, (-1,))
+    return (acc.astype(jnp.float32)
+            + w[:, None] * dequantize_blockwise_ref(q, scales)).astype(acc.dtype)

@@ -34,8 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.core import (
-    RobustConfig, TrainStepConfig, build_train_step, make_dense_mixer,
-    make_gossip_mixer,
+    CompressionConfig, RobustConfig, TrainStepConfig, build_train_step,
+    make_dense_mixer, make_gossip_mixer,
 )
 from repro.core.drdsgd import DecentralizedState
 from repro.graphs import (
@@ -45,6 +45,7 @@ from repro.launch.mesh import make_production_mesh, node_axes, num_nodes
 from repro.models import SHAPES, TransformerLM, input_shapes
 from repro.models.config import ArchConfig, ShapeConfig
 from repro.optim import sgd
+from repro.utils.compat import make_auto_mesh
 from repro.utils.hlo import collective_summary, parse_collectives
 from repro.utils.roofline import model_flops
 
@@ -69,7 +70,8 @@ def _shardings(mesh, spec_tree):
 # -- builders per execution mode ---------------------------------------------
 
 def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
-                graph_kind: str = "ring", wire_dtype=None):
+                graph_kind: str = "ring",
+                compression: CompressionConfig | None = None):
     """Returns (fn, example_args, in_shardings)."""
     model = TransformerLM(cfg)
     hier = "fsdp" in mesh.axis_names
@@ -81,26 +83,34 @@ def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
     pspecs = model.param_specs(
         mesh, mode="train_fsdp" if hier else "train", node_axis=node_axis)
     if mixer_kind == "dense":
-        mixer = make_dense_mixer(w)
+        mixer = make_dense_mixer(w, compression=compression)
     elif mixer_kind == "gossip":
         mixer = make_gossip_mixer(
             permutation_decomposition(w), mesh, node_axis, pspecs,
-            wire_dtype=wire_dtype)
+            compression=compression)
     else:
         raise ValueError(mixer_kind)
     step_cfg = TrainStepConfig(
-        robust=RobustConfig(mu=6.0), metrics_disagreement=False)
+        robust=RobustConfig(mu=6.0), metrics_disagreement=False,
+        compression=compression)
     train_step = build_train_step(model.loss, sgd(1e-2), mixer, step_cfg)
 
     params = _node_stack_shapes(model.param_shapes(), k)
+    stateful = getattr(mixer, "stateful", False)
+    ef_state = jax.eval_shape(mixer.init_state, params) if stateful else ()
     state = DecentralizedState(
-        params=params, opt_state=(), step=jax.ShapeDtypeStruct((), jnp.int32))
+        params=params, opt_state=(), step=jax.ShapeDtypeStruct((), jnp.int32),
+        ef_state=ef_state)
     batch = input_shapes(cfg, shape, num_nodes=k)
 
+    ef_sh = (jax.tree.map(
+        lambda s: NamedSharding(mesh, s), mixer.state_specs(pspecs),
+        is_leaf=lambda x: isinstance(x, P)) if stateful else ())
     state_sh = DecentralizedState(
         params=_shardings(mesh, pspecs),
         opt_state=(),
         step=NamedSharding(mesh, P()),
+        ef_state=ef_sh,
     )
     # hierarchical mode: the per-node batch dim is FSDP data-parallel
     inner = "fsdp" if hier else None
@@ -149,10 +159,11 @@ def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh):
     return fn, args
 
 
-def build_fn(cfg, shape, mesh, mixer_kind, graph_kind="ring", wire_dtype=None):
+def build_fn(cfg, shape, mesh, mixer_kind, graph_kind="ring",
+             compression=None):
     if shape.kind == "train":
         return build_train(cfg, shape, mesh, mixer_kind, graph_kind,
-                           wire_dtype)
+                           compression)
     if shape.kind == "prefill":
         return build_prefill(cfg, shape, mesh)
     return build_decode(cfg, shape, mesh)
@@ -171,8 +182,8 @@ def _cost_entries(compiled) -> dict:
 
 
 def compile_and_measure(cfg, shape, mesh, mixer_kind, want_hlo=True,
-                        graph_kind="ring", wire_dtype=None):
-    fn, args = build_fn(cfg, shape, mesh, mixer_kind, graph_kind, wire_dtype)
+                        graph_kind="ring", compression=None):
+    fn, args = build_fn(cfg, shape, mesh, mixer_kind, graph_kind, compression)
     t0 = time.time()
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
@@ -223,13 +234,13 @@ def _with_groups(cfg: ArchConfig, g: int, keep_chunking: bool = False
 
 
 def fit_scan_correction(cfg, shape, mesh, mixer_kind, graph_kind="ring",
-                        wire_dtype=None, keep_chunking=False):
+                        compression=None, keep_chunking=False):
     """Unrolled G=1 / G=2 probes -> cost(G) = a + b*G, evaluated at n_groups."""
     probes = {}
     for g in (1, 2):
         r = compile_and_measure(
             _with_groups(cfg, g, keep_chunking=keep_chunking), shape, mesh,
-            mixer_kind, graph_kind=graph_kind, wire_dtype=wire_dtype)
+            mixer_kind, graph_kind=graph_kind, compression=compression)
         probes[g] = {
             "flops": r["cost"]["flops"],
             "bytes": r["cost"]["bytes"],
@@ -249,13 +260,14 @@ def fit_scan_correction(cfg, shape, mesh, mixer_kind, graph_kind="ring",
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
             out_dir: str, skip_existing: bool = True, graph_kind: str = "ring",
-            wire_dtype=None, compute_dtype=None, moe_constraints: bool = False,
+            compression=None, compute_dtype=None, moe_constraints: bool = False,
             keep_chunking: bool = False, variant: str = "",
             hier_nodes: int = 0, remat_policy: str = "") -> dict | None:
     cfg = get_arch(arch)
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    label = mixer_kind + (f"+{variant}" if variant else "")
+    label = mixer_kind + (f"+{compression.kind}" if compression else "") \
+        + (f"+{variant}" if variant else "")
     tag = f"{arch}__{shape_name}__{mesh_name}__{label}"
     path = os.path.join(out_dir, tag + ".json")
     if skip_existing and os.path.exists(path):
@@ -270,9 +282,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
     if hier_nodes:
         total = 512 if multi_pod else 256
         fsdp = total // (hier_nodes * 16)
-        mesh = jax.make_mesh(
-            (hier_nodes, fsdp, 16), ("data", "fsdp", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_auto_mesh(
+            (hier_nodes, fsdp, 16), ("data", "fsdp", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     if compute_dtype is not None:
@@ -295,9 +306,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
     model = TransformerLM(cfg)
     print(f"[run ] {tag}: {model.num_params()/1e9:.2f}B params ...", flush=True)
     res = compile_and_measure(cfg, shape, mesh, mixer_kind,
-                              graph_kind=graph_kind, wire_dtype=wire_dtype)
+                              graph_kind=graph_kind, compression=compression)
     fitted = fit_scan_correction(cfg, shape, mesh, mixer_kind,
-                                 graph_kind=graph_kind, wire_dtype=wire_dtype,
+                                 graph_kind=graph_kind,
+                                 compression=compression,
                                  keep_chunking=keep_chunking)
 
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
@@ -339,7 +351,11 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--mixer", default="dense", choices=["dense", "gossip"])
     ap.add_argument("--graph", default="ring")
-    ap.add_argument("--wire-dtype", default=None, choices=[None, "bf16"])
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8", "int4", "topk", "randk"],
+                    help="consensus wire codec (repro.comm)")
+    ap.add_argument("--compress-ratio", type=float, default=0.01,
+                    help="kept fraction for topk/randk")
     ap.add_argument("--compute-dtype", default=None, choices=[None, "bf16"])
     ap.add_argument("--moe-constraints", default=None,
                     choices=[None, "expert", "capacity"])
@@ -354,7 +370,9 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    wire = jnp.bfloat16 if args.wire_dtype == "bf16" else None
+    compression = (CompressionConfig(kind=args.compress,
+                                     ratio=args.compress_ratio)
+                   if args.compress != "none" else None)
     comp = jnp.bfloat16 if args.compute_dtype == "bf16" else None
 
     archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
@@ -368,7 +386,7 @@ def main():
                 try:
                     run_one(arch, shape, multi, args.mixer, args.out,
                             skip_existing=not args.force,
-                            graph_kind=args.graph, wire_dtype=wire,
+                            graph_kind=args.graph, compression=compression,
                             compute_dtype=comp,
                             moe_constraints=args.moe_constraints,
                             keep_chunking=args.keep_chunking,

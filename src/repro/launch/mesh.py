@@ -19,13 +19,13 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.utils.compat import make_auto_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def node_axes(mesh: jax.sharding.Mesh):
@@ -44,7 +44,4 @@ def data_axes(mesh: jax.sharding.Mesh):
 
 def make_debug_mesh(data: int = 4, model: int = 2) -> jax.sharding.Mesh:
     """Small host mesh for unit tests (requires >= data*model host devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_auto_mesh((data, model), ("data", "model"))

@@ -6,10 +6,20 @@ MLP/CNN image models.  On this CPU container use the smoke configs; on a real
 TPU slice the same entry point takes ``--mesh single|multi`` and shards the
 node axis across the pod(s).
 
+Consensus wire compression (``repro.comm``): ``--compress`` selects the
+codec (bf16 cast, int8/int4 stochastic-rounding quantization, topk/randk
+sparsification with ``--compress-ratio``), all with error-feedback
+innovation gossip so convergence tracks the uncompressed mixer while the
+per-round ``comm_bytes`` metric drops 2-50x.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
       --steps 20 --nodes 4 --batch-per-node 2 --seq-len 64
   PYTHONPATH=src python -m repro.launch.train --paper fmnist --steps 150
+  PYTHONPATH=src python -m repro.launch.train --paper fmnist --steps 150 \
+      --compress int8
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --steps 20 --nodes 4 --compress topk --compress-ratio 0.05
 """
 
 from __future__ import annotations
@@ -25,7 +35,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_arch, fmnist_default, cifar_default
-from repro.core import DecentralizedTrainer, RobustConfig
+from repro.core import CompressionConfig, DecentralizedTrainer, RobustConfig
 from repro.data import (
     make_cifar_like,
     make_fmnist_like,
@@ -37,15 +47,22 @@ from repro.models.paper_nets import make_classifier_loss
 from repro.optim import sgd
 
 
+def _compression_from_args(args) -> CompressionConfig | None:
+    if args.compress == "none":
+        return None
+    return CompressionConfig(
+        kind=args.compress,
+        ratio=args.compress_ratio,
+        error_feedback=not args.no_error_feedback,
+        seed=args.seed,
+    )
+
+
 def train_lm(args):
     args.nodes = args.nodes or 8
     args.steps = args.steps or 50
     args.batch_per_node = args.batch_per_node or 2
     cfg = get_arch(args.arch, smoke=args.smoke)
-    import dataclasses
-
-    if args.seq_len and cfg.frontend != "token":
-        pass  # stub prefix handled below
     model = TransformerLM(cfg)
     k = args.nodes
     seq = args.seq_len
@@ -61,9 +78,11 @@ def train_lm(args):
         robust=RobustConfig(mu=args.mu, enabled=not args.dsgd),
         lr=args.lr,
         grad_clip=1.0,
+        compression=_compression_from_args(args),
     )
     print(f"arch={cfg.name} params={model.num_params():,} nodes={k} "
-          f"rho={trainer.rho:.3f} mu={args.mu} robust={not args.dsgd}")
+          f"rho={trainer.rho:.3f} mu={args.mu} robust={not args.dsgd} "
+          f"compress={args.compress}")
     state = trainer.init(model.init(jax.random.PRNGKey(args.seed)))
     streams = make_node_token_streams(k, cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -87,7 +106,8 @@ def train_lm(args):
             history.append(m)
             print(f"step {step:5d} loss_mean={m['loss_mean']:.4f} "
                   f"loss_worst={m['loss_worst']:.4f} "
-                  f"disagree={m.get('disagreement', 0):.2e}")
+                  f"disagree={m.get('disagreement', 0):.2e} "
+                  f"comm_bytes={m.get('comm_bytes', 0):.3e}")
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
         print(f"checkpoint saved to {args.ckpt_dir}")
@@ -116,12 +136,14 @@ def train_paper(args):
         graph_kwargs={"p": exp.p, "seed": args.seed},
         robust=RobustConfig(mu=args.mu, enabled=not args.dsgd),
         lr=args.lr or exp.lr,
+        compression=_compression_from_args(args),
     )
     state = trainer.init(params)
     rng = np.random.default_rng(args.seed)
     bsz = args.batch_per_node or exp.batch_size
     print(f"paper={args.paper} nodes={k} steps={steps} B={bsz} "
-          f"lr={trainer.lr} mu={args.mu} rho={trainer.rho:.3f}")
+          f"lr={trainer.lr} mu={args.mu} rho={trainer.rho:.3f} "
+          f"compress={args.compress}")
     for step in range(steps):
         xb, yb = fed.sample_batch(rng, bsz)
         state, metrics = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
@@ -130,7 +152,8 @@ def train_paper(args):
             print(f"step {step:5d} loss={float(metrics['loss_mean']):.4f} "
                   f"acc_avg={stats['acc_avg']:.3f} "
                   f"acc_worst={stats['acc_worst_dist']:.3f} "
-                  f"std={stats['acc_node_std']:.3f}")
+                  f"std={stats['acc_node_std']:.3f} "
+                  f"comm_bytes={float(metrics['comm_bytes']):.3e}")
     return state
 
 
@@ -148,6 +171,14 @@ def main():
     ap.add_argument("--p", type=float, default=0.3)
     ap.add_argument("--mu", type=float, default=6.0)
     ap.add_argument("--dsgd", action="store_true", help="disable DR (baseline)")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8", "int4", "topk", "randk"],
+                    help="consensus wire codec (repro.comm)")
+    ap.add_argument("--compress-ratio", type=float, default=0.01,
+                    help="kept fraction for topk/randk")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="ablation: memoryless compression (stalls at the "
+                         "quantization noise floor)")
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)

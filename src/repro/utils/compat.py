@@ -1,0 +1,46 @@
+"""Version compatibility shims for the range of JAX releases we run on.
+
+The container images pin different JAX versions (0.4.x CPU sim vs current TPU
+releases); the few APIs that moved between them are wrapped here so the rest
+of the codebase can use one spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 top-level export
+    shard_map = jax.shard_map
+except AttributeError:  # 0.4.x location
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking disabled.
+
+    Needed for bodies containing ops without a replication rule (e.g.
+    ``pallas_call``).  The flag was renamed check_rep -> check_vma between
+    JAX releases; try both spellings.
+    """
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def make_auto_mesh(axis_shapes, axis_names, *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer JAX;
+    Auto is the default behaviour there, and the only behaviour on older
+    releases, so omitting the kwarg is semantics-preserving.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

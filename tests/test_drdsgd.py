@@ -133,6 +133,66 @@ def test_repeat_mixer_contracts_like_rho_pow_m():
         repeat_mixer(make_dense_mixer(w), 0)
 
 
+def test_repeat_mixer_equals_dense_power():
+    """repeat_mixer(W, m) is exactly the dense mixer built from W^m."""
+    from repro.core import repeat_mixer
+
+    k = 8
+    w = metropolis_weights(ring_graph(k))
+    theta = {"w": jnp.asarray(np.random.default_rng(5).normal(size=(k, 17)),
+                              jnp.float32)}
+    for m in (1, 2, 3, 5):
+        repeated = repeat_mixer(make_dense_mixer(w), m)(theta)
+        powered = make_dense_mixer(np.linalg.matrix_power(w, m))(theta)
+        np.testing.assert_allclose(np.asarray(repeated["w"]),
+                                   np.asarray(powered["w"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_mix_every_off_and_boundary_steps():
+    """mix_every=tau: off-steps are exactly the unmixed local update, the
+    boundary step (step % tau == tau-1) is exactly the mixed update."""
+    from repro.core import TrainStepConfig, build_train_step, \
+        make_dense_mixer, make_identity_mixer
+    from repro.core.drdsgd import init_state, replicate_params
+    from repro.core.robust import RobustConfig
+    from repro.optim import sgd
+
+    k, tau = 4, 3
+    w = metropolis_weights(ring_graph(k))
+    targets = jnp.arange(k, dtype=jnp.float32).reshape(k, 1) * jnp.ones((k, 2))
+    rc = RobustConfig(enabled=False)
+
+    def make(mixer, mix_every):
+        return jax.jit(build_train_step(
+            _quad_loss, sgd(0.1), mixer,
+            TrainStepConfig(robust=rc, mix_every=mix_every)))
+
+    step_tau = make(make_dense_mixer(w), tau)
+    step_local = make(make_identity_mixer(), 1)
+    step_dense = make(make_dense_mixer(w), 1)
+
+    s_tau = init_state(replicate_params({"w": jnp.zeros((2,))}, k), sgd(0.1))
+    s_loc = s_tau
+    for i in range(tau):
+        prev = s_tau
+        s_tau, m_tau = step_tau(s_tau, (targets,))
+        s_loc, _ = step_local(s_loc, (targets,))
+        if i < tau - 1:
+            # off-step: no communication, identical to pure local SGD
+            np.testing.assert_allclose(np.asarray(s_tau.params["w"]),
+                                       np.asarray(s_loc.params["w"]),
+                                       rtol=1e-6, atol=1e-7)
+            assert float(m_tau["comm_bytes"]) == 0.0
+        else:
+            # boundary step: exactly one dense mixing of the local update
+            s_ref, _ = step_dense(prev, (targets,))
+            np.testing.assert_allclose(np.asarray(s_tau.params["w"]),
+                                       np.asarray(s_ref.params["w"]),
+                                       rtol=1e-6, atol=1e-7)
+            assert float(m_tau["comm_bytes"]) > 0.0
+
+
 def test_periodic_averaging_fedavg_style():
     """mix_every + complete graph == local SGD with periodic averaging.
 

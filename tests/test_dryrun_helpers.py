@@ -10,6 +10,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_arch
+from repro.utils.compat import make_auto_mesh
 from repro.models import SHAPES, TransformerLM, input_shapes
 from repro.models.transformer import input_specs
 
@@ -63,8 +64,7 @@ def test_long_500k_skip_policy():
 def test_cache_pspecs_structure_matches_cache():
     cfg = get_arch("jamba_1_5_large_398b", smoke=True)
     model = TransformerLM(cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     cache = jax.eval_shape(lambda: model.init_cache(4, 64))
     specs = model.cache_pspecs(4, 64, mesh, "data")
     assert jax.tree.structure(cache) == jax.tree.structure(

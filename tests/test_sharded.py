@@ -24,10 +24,11 @@ def test_gossip_equals_dense_mixing_on_mesh():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.utils.compat import make_auto_mesh
 from repro.graphs import ring_graph, erdos_renyi_graph, metropolis_weights, \
     permutation_decomposition
 from repro.core import make_dense_mixer, make_gossip_mixer
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((8,), ("data",))
 for g in [ring_graph(8), erdos_renyi_graph(8, 0.5, seed=3)]:
     w = metropolis_weights(g)
     d = permutation_decomposition(w)
@@ -48,10 +49,10 @@ def test_gossip_multiaxis_node_dimension():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.utils.compat import make_auto_mesh
 from repro.graphs import ring_graph, metropolis_weights, permutation_decomposition
 from repro.core import make_dense_mixer, make_gossip_mixer
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_auto_mesh((2, 4), ("pod", "data"))
 g = ring_graph(8)
 w = metropolis_weights(g)
 d = permutation_decomposition(w)
@@ -70,6 +71,7 @@ def test_sharded_drdsgd_step_matches_single_device():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.utils.compat import make_auto_mesh
 from repro.core import RobustConfig, TrainStepConfig, build_train_step, \
     make_dense_mixer
 from repro.core.drdsgd import init_state, replicate_params
@@ -91,7 +93,7 @@ batch = (jnp.asarray(rng.normal(size=(k, 4, 5)), jnp.float32),
          jnp.asarray(rng.normal(size=(k, 4, 3)), jnp.float32))
 ref_state, ref_metrics = jax.jit(step)(state, batch)
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((8,), ("data",))
 sh = lambda *spec: NamedSharding(mesh, P(*spec))
 state_sh = type(state)(
     params={"w": sh("data", None, None), "b": sh("data", None)},
@@ -116,10 +118,10 @@ def test_hierarchical_mixer_with_replica_axis():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.utils.compat import make_auto_mesh
 from repro.graphs import ring_graph, metropolis_weights, permutation_decomposition
 from repro.core import make_dense_mixer, make_hierarchical_mixer
-mesh = jax.make_mesh((4, 2), ("node", "replica"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_auto_mesh((4, 2), ("node", "replica"))
 g = ring_graph(4)
 w = metropolis_weights(g)
 d = permutation_decomposition(w)
@@ -139,6 +141,7 @@ def test_smoke_arch_trains_on_mesh():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.utils.compat import make_auto_mesh
 from repro.configs import get_arch
 from repro.core import RobustConfig, TrainStepConfig, build_train_step, \
     make_dense_mixer
@@ -149,8 +152,7 @@ from repro.optim import sgd
 
 cfg = get_arch("qwen2_0_5b", smoke=True)
 model = TransformerLM(cfg)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_auto_mesh((4, 2), ("data", "model"))
 k = 4
 w = metropolis_weights(ring_graph(k))
 step = build_train_step(model.loss, sgd(1e-2), make_dense_mixer(w),
