@@ -77,15 +77,26 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     xb, yb = fed.sample_batch(rng, batch)
     state, warm_metrics = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
     comm_bytes = float(warm_metrics["comm_bytes"])
+    # cumulative wire bytes: under an adaptive schedule comm_bytes moves
+    # per round, so the bytes axis must integrate the traced metric rather
+    # than multiply a per-round constant by the step count.  Accumulate as
+    # a device array — float() every step would force a host sync inside
+    # the timed loop and pollute us_per_step.
+    cum_bytes_dev = warm_metrics["comm_bytes"]
     t0 = time.perf_counter()
     for step in range(1, steps):
         xb, yb = fed.sample_batch(rng, batch)
         state, metrics = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+        cum_bytes_dev = cum_bytes_dev + metrics["comm_bytes"]
         if step % eval_every == 0 or step == steps - 1:
             stats = trainer.eval_local_distributions(state, x_nodes, y_nodes)
             stats["step"] = step
+            stats["cum_bytes"] = float(cum_bytes_dev)
+            if "ef_residual_norm" in metrics:
+                stats["ef_residual_norm"] = float(metrics["ef_residual_norm"])
             history.append(stats)
     wall = time.perf_counter() - t0
+    cum_bytes = float(cum_bytes_dev)
     final = history[-1]
     return {
         "dataset": dataset,
@@ -98,6 +109,7 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         "steps": steps,
         "compress": compression.kind if compression is not None else "none",
         "comm_bytes_per_round": comm_bytes,
+        "comm_bytes_total": cum_bytes,
         "us_per_step": wall / (steps - 1) * 1e6,
         "acc_avg": final["acc_avg"],
         "acc_worst_dist": final["acc_worst_dist"],
@@ -111,6 +123,14 @@ def rounds_to_target(history, target: float) -> int | None:
     for h in history:
         if h["acc_worst_dist"] >= target:
             return h["step"]
+    return None
+
+
+def bytes_to_target(history, target: float) -> float | None:
+    """Cumulative wire bytes needed to reach a worst-distribution accuracy."""
+    for h in history:
+        if h["acc_worst_dist"] >= target:
+            return h["cum_bytes"]
     return None
 
 

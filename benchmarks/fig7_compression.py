@@ -12,6 +12,8 @@ paper's robustness metric while cutting the wire 2-50x.
 
 from __future__ import annotations
 
+import argparse
+
 from benchmarks.common import fmt_row, run_decentralized
 
 
@@ -44,5 +46,17 @@ def run(steps: int = 400, seed: int = 0) -> list[str]:
     return rows
 
 
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (codec plumbing, not "
+                         "converged accuracy)")
+    args = ap.parse_args()
+    steps = 30 if args.smoke else args.steps
+    print("\n".join(run(steps=steps, seed=args.seed)))
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -17,7 +17,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2,fig3,fig4,table1,"
-                         "fig5,fig6,fig7,roofline")
+                         "fig5,fig6,fig7,fig8,roofline")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -27,6 +27,7 @@ def main() -> None:
         fig5_sparsity,
         fig6_topology,
         fig7_compression,
+        fig8_adaptive,
         roofline,
         table1_mu_tradeoff,
     )
@@ -39,6 +40,7 @@ def main() -> None:
         "fig5": fig5_sparsity.run,
         "fig6": fig6_topology.run,
         "fig7": fig7_compression.run,
+        "fig8": fig8_adaptive.run,
         "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)

@@ -1,7 +1,11 @@
 """Compressed-gossip communication subsystem.
 
 compressors.py — wire codecs (bf16 / int8 / int4 stochastic rounding /
-                 topk / randk) behind the :class:`Compressor` protocol.
+                 topk / randk) behind the :class:`Compressor` protocol,
+                 with traced dynamic-rate support.
+schedule.py    — :class:`CompressionSchedule`: anneal the codec rate
+                 (int8→int4, topk ratio) during training, driven by the
+                 round counter or the error-feedback innovation norm.
 mixers.py      — CHOCO-style stateful consensus operators with error
                  feedback: dense (einsum simulation) and gossip (shard_map +
                  compressed-payload ppermute) lowerings.
@@ -20,7 +24,10 @@ from repro.comm.compressors import (
     NoCompressor,
     RandKCompressor,
     TopKCompressor,
+    fold_leaf,
     make_compressor,
+    per_node_keys,
+    quant_bits,
 )
 from repro.comm.mixers import (
     CommState,
@@ -28,11 +35,13 @@ from repro.comm.mixers import (
     CompressedGossipMixer,
     ef_residual,
 )
+from repro.comm.schedule import CompressionSchedule, ScheduleConfig
 
 __all__ = [
     "CompressionConfig", "Compressor", "make_compressor",
     "NoCompressor", "BF16Compressor", "IntQuantizer", "KernelInt8Quantizer",
     "TopKCompressor", "RandKCompressor",
     "CommState", "CompressedDenseMixer", "CompressedGossipMixer",
-    "ef_residual",
+    "ef_residual", "per_node_keys", "fold_leaf", "quant_bits",
+    "ScheduleConfig", "CompressionSchedule",
 ]

@@ -6,6 +6,23 @@ what actually crosses the interconnect, plus the inverse map.  Per-node
 granularity matters: each node quantizes against its own dynamic range, so a
 single outlier node cannot destroy every node's resolution.
 
+PRNG contract: ``compress`` takes ``keys`` — a *batched* key array with one
+key per node row (see :func:`per_node_keys`) — and draws its stochastic-
+rounding / sparsification noise row-by-row from them.  Both consensus
+lowerings (dense einsum and shard_map gossip) derive the row keys the same
+way, ``fold_in(fold_in(round_key, node), leaf)``, so they agree bit-for-bit
+at a fixed seed no matter how the node axis is sharded.
+
+Dynamic rate: ``compress(..., rate=...)`` accepts a *traced* scalar so a
+:class:`~repro.comm.schedule.CompressionSchedule` can move the codec rate
+every round without recompiling.  For the quantizers ``rate`` is the
+quantization ceiling qmax (127 = int8 wire, 7 = int4); the buffer stays
+int8-shaped but only ``ceil(log2(2·qmax+1))`` bits per entry carry
+information — ``payload_bits`` reports that traced count, which is what a
+bit-packing transport moves.  For the sparsifiers ``rate`` is the kept
+fraction: the payload buffer is sized for the static ``ratio`` maximum and
+entries past the dynamic count are masked (never sent).
+
 Implementations:
 
 * ``NoCompressor``     — identity (float32 wire), the paper baseline.
@@ -13,7 +30,8 @@ Implementations:
 * ``IntQuantizer``     — QSGD-style int8/int4 uniform quantization with
   *stochastic rounding* (``floor(x/scale + u)``, u ~ U[0,1)), per-node scale.
   Unbiased: E[decompress(compress(x))] = x.  int4 packs two nibbles per int8
-  byte so the wire buffer is genuinely half the int8 size.
+  byte so the wire buffer is genuinely half the int8 size (static rate only;
+  the dynamic-rate path keeps the unpacked buffer and accounts bits).
 * ``TopKCompressor``   — magnitude top-k sparsification per node (biased;
   pair with error feedback).
 * ``RandKCompressor``  — uniform random-k sparsification per node.
@@ -31,7 +49,35 @@ from typing import Any, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.comm.schedule import ScheduleConfig
+
 _SCALE_BYTES = 4  # one float32 scale per node per leaf
+
+
+def per_node_keys(key: jax.Array, node_ids) -> jax.Array:
+    """One independent PRNG key per node row: ``fold_in(key, node_id)``.
+
+    ``node_ids`` are *global* node indices, so a shard holding rows
+    [s·k_local, (s+1)·k_local) of the stacked leaf derives exactly the keys
+    the dense (unsharded) lowering derives for those rows.
+    """
+    return jax.vmap(lambda n: jax.random.fold_in(key, n))(
+        jnp.asarray(node_ids))
+
+
+def fold_leaf(keys: jax.Array, leaf_idx: int) -> jax.Array:
+    """Fold a static leaf index into a batch of per-node keys."""
+    return jax.vmap(lambda kk: jax.random.fold_in(kk, leaf_idx))(keys)
+
+
+def _uniform_rows(keys: jax.Array, d: int) -> jax.Array:
+    """(K,) keys -> (K, d) uniforms, each row drawn from its own key."""
+    return jax.vmap(lambda kk: jax.random.uniform(kk, (d,), jnp.float32))(keys)
+
+
+def quant_bits(qmax) -> jax.Array:
+    """Wire bits per entry for a symmetric integer code with ceiling qmax."""
+    return jnp.ceil(jnp.log2(2.0 * jnp.asarray(qmax, jnp.float32) + 1.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +87,7 @@ class CompressionConfig:
     Attributes:
       kind: "none" | "bf16" | "int8" | "int4" | "topk" | "randk".
       ratio: kept fraction for topk/randk (of each leaf's per-node size).
+        With a schedule this is the *maximum* (buffer-sizing) fraction.
       error_feedback: accumulate the compression residual and re-inject it
         next round (EF; required for the biased sparsifiers, helps the
         quantizers too).
@@ -54,6 +101,9 @@ class CompressionConfig:
         high-fidelity codecs (bf16/int8/int4); the sparsifiers need γ < 1 or
         the innovation loop diverges (Koloskova et al. 2019, Thm. 2). None
         picks 1.0 for quantizers and min(1, 2·ratio) for topk/randk.
+      schedule: optional :class:`~repro.comm.schedule.ScheduleConfig` that
+        moves the codec rate during training (int8→int4 / annealed ratio),
+        driven by the round counter or the error-feedback innovation norm.
     """
 
     kind: str = "none"
@@ -64,6 +114,7 @@ class CompressionConfig:
     interpret: bool = False
     block_d: int = 65536
     gamma: float | None = None
+    schedule: ScheduleConfig | None = None
 
     def __post_init__(self):
         if self.kind not in ("none", "bf16", "int8", "int4", "topk", "randk"):
@@ -72,6 +123,14 @@ class CompressionConfig:
             raise ValueError("ratio must be in (0, 1]")
         if self.use_kernel and self.kind != "int8":
             raise ValueError("the fused quant_gossip kernel serves kind='int8'")
+        if self.schedule is not None:
+            if self.kind not in ("int8", "int4", "topk", "randk"):
+                raise ValueError(
+                    f"kind {self.kind!r} has no adjustable rate to schedule")
+            if self.schedule.kind == "adaptive" and not self.error_feedback:
+                raise ValueError(
+                    "adaptive schedules are driven by the error-feedback "
+                    "innovation norm; set error_feedback=True")
 
     @property
     def enabled(self) -> bool:
@@ -92,8 +151,13 @@ class Compressor(Protocol):
 
     name: str
 
-    def compress(self, x: jax.Array, key: jax.Array) -> Any:
-        """Encode ``x`` into the wire payload (what ppermute actually moves)."""
+    def compress(self, x: jax.Array, keys: jax.Array,
+                 rate: jax.Array | None = None) -> Any:
+        """Encode ``x`` into the wire payload (what ppermute actually moves).
+
+        ``keys`` is a batch of per-node-row PRNG keys (:func:`per_node_keys`);
+        ``rate`` is an optional traced codec rate from a schedule.
+        """
         ...
 
     def decompress(self, payload: Any, d: int) -> jax.Array:
@@ -101,14 +165,20 @@ class Compressor(Protocol):
         ...
 
     def payload_bytes(self, d: int) -> int:
-        """Estimated wire bytes *per node* for a leaf of per-node size d."""
+        """Static wire bytes *per node* for a leaf of per-node size d, at
+        the full (unscheduled) rate."""
+        ...
+
+    def payload_bits(self, d: int, rate: jax.Array | None = None):
+        """Wire bits per node for per-node size d — traced when ``rate``
+        is; equals ``8 * payload_bytes(d)`` at rate None."""
         ...
 
 
 class NoCompressor:
     name = "none"
 
-    def compress(self, x, key):
+    def compress(self, x, keys, rate=None):
         return x
 
     def decompress(self, payload, d):
@@ -117,11 +187,14 @@ class NoCompressor:
     def payload_bytes(self, d):
         return 4 * d
 
+    def payload_bits(self, d, rate=None):
+        return 8 * self.payload_bytes(d)
+
 
 class BF16Compressor:
     name = "bf16"
 
-    def compress(self, x, key):
+    def compress(self, x, keys, rate=None):
         return x.astype(jnp.bfloat16)
 
     def decompress(self, payload, d):
@@ -129,6 +202,9 @@ class BF16Compressor:
 
     def payload_bytes(self, d):
         return 2 * d
+
+    def payload_bits(self, d, rate=None):
+        return 8 * self.payload_bytes(d)
 
 
 def _pack_int4(q: jax.Array) -> jax.Array:
@@ -150,36 +226,53 @@ def _unpack_int4(packed: jax.Array, d: int) -> jax.Array:
 
 
 class IntQuantizer:
-    """Stochastically rounded uniform quantizer with per-node float32 scale."""
+    """Stochastically rounded uniform quantizer with per-node float32 scale.
 
-    def __init__(self, bits: int):
+    With a traced ``rate`` (the dynamic qmax) the buffer stays (K, D) int8 —
+    packing is shape-static — and ``payload_bits`` accounts the effective
+    bit-width; the static int4 path nibble-packs for a genuinely halved
+    buffer.
+    """
+
+    def __init__(self, bits: int, dynamic: bool = False):
         if bits not in (4, 8):
             raise ValueError("bits must be 4 or 8")
         self.bits = bits
         self.qmax = (1 << (bits - 1)) - 1  # 127 / 7
+        self.dynamic = dynamic
         self.name = f"int{bits}"
 
-    def _scale(self, x):
-        absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
-        return jnp.where(absmax > 0, absmax / self.qmax, 1.0)
+    def _pack(self) -> bool:
+        return self.bits == 4 and not self.dynamic
 
-    def compress(self, x, key):
-        scale = self._scale(x)
-        u = jax.random.uniform(key, x.shape, jnp.float32)
-        q = jnp.clip(jnp.floor(x / scale + u), -self.qmax, self.qmax)
+    def _scale(self, x, qmax):
+        absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+        return jnp.where(absmax > 0, absmax / qmax, 1.0)
+
+    def compress(self, x, keys, rate=None):
+        qmax = jnp.float32(self.qmax) if rate is None else rate
+        scale = self._scale(x, qmax)
+        u = _uniform_rows(keys, x.shape[1])
+        q = jnp.clip(jnp.floor(x / scale + u), -qmax, qmax)
         q = q.astype(jnp.int8)
-        if self.bits == 4:
+        if self._pack():
             q = _pack_int4(q)
         return q, scale
 
     def decompress(self, payload, d):
         q, scale = payload
-        if self.bits == 4:
+        if self._pack():
             q = _unpack_int4(q, d)
         return q.astype(jnp.float32) * scale
 
     def payload_bytes(self, d):
-        return (d if self.bits == 8 else (d + 1) // 2) + _SCALE_BYTES
+        # packed nibbles for static int4, full bytes otherwise, + f32 scale
+        return (d if not self._pack() else (d + 1) // 2) + _SCALE_BYTES
+
+    def payload_bits(self, d, rate=None):
+        if rate is None:
+            return 8 * self.payload_bytes(d)
+        return quant_bits(rate) * d + 8 * _SCALE_BYTES
 
 
 class KernelInt8Quantizer(IntQuantizer):
@@ -189,19 +282,23 @@ class KernelInt8Quantizer(IntQuantizer):
     (node, block): the kernel computes each block's absmax and quantizes it
     in one VMEM-resident pass, and ``accumulate`` fuses dequantize with the
     weighted neighbor combine so the full-precision message never exists.
+    The dynamic qmax rides into the kernel as a traced SMEM-style scalar, so
+    a schedule's int8→int4 switch costs no recompile.
     """
 
-    def __init__(self, block_d: int = 65536, interpret: bool = False):
-        super().__init__(bits=8)
+    def __init__(self, block_d: int = 65536, interpret: bool = False,
+                 dynamic: bool = False):
+        super().__init__(bits=8, dynamic=dynamic)
         self.name = "int8-kernel"
         self.block_d = block_d
         self.interpret = interpret
 
-    def compress(self, x, key):
+    def compress(self, x, keys, rate=None):
         from repro.kernels.quant_gossip.ops import quantize_blockwise
 
-        u = jax.random.uniform(key, x.shape, jnp.float32)
-        return quantize_blockwise(x, u, qmax=self.qmax, block_d=self.block_d,
+        qmax = jnp.float32(self.qmax) if rate is None else rate
+        u = _uniform_rows(keys, x.shape[1])
+        return quantize_blockwise(x, u, qmax=qmax, block_d=self.block_d,
                                   interpret=self.interpret)
 
     def decompress(self, payload, d):
@@ -218,10 +315,18 @@ class KernelInt8Quantizer(IntQuantizer):
         return dequant_accumulate(acc, q, scale, weight,
                                   interpret=self.interpret)
 
-    def payload_bytes(self, d):
+    def _n_blocks(self, d):
         from repro.kernels.quant_gossip.kernel import num_blocks
 
-        return d + _SCALE_BYTES * num_blocks(d, self.block_d)
+        return num_blocks(d, self.block_d)
+
+    def payload_bytes(self, d):
+        return d + _SCALE_BYTES * self._n_blocks(d)
+
+    def payload_bits(self, d, rate=None):
+        if rate is None:
+            return 8 * self.payload_bytes(d)
+        return quant_bits(rate) * d + 8 * _SCALE_BYTES * self._n_blocks(d)
 
 
 def _num_kept(d: int, ratio: float) -> int:
@@ -229,16 +334,34 @@ def _num_kept(d: int, ratio: float) -> int:
 
 
 class TopKCompressor:
-    """Keep the ``ratio`` fraction of largest-magnitude entries per node."""
+    """Keep the ``ratio`` fraction of largest-magnitude entries per node.
+
+    ``ratio`` sizes the (static) payload buffer; a traced ``rate`` ≤ ratio
+    masks the tail of the magnitude-sorted buffer so only ``round(rate·d)``
+    entries are live on the wire (``payload_bits`` counts exactly those).
+    """
 
     def __init__(self, ratio: float):
         self.ratio = ratio
         self.name = "topk"
 
-    def compress(self, x, key):
+    def _dynamic_kept(self, d, rate):
+        kk_max = _num_kept(d, self.ratio)
+        return jnp.clip(jnp.round(rate * d), 1, kk_max)
+
+    def _mask_tail(self, vals, d, rate):
+        # top_k output is magnitude-sorted, so masking the tail keeps the
+        # largest entries (randk: an arbitrary-but-fixed subset, also fine)
+        kk_t = self._dynamic_kept(d, rate)
+        live = jnp.arange(vals.shape[1], dtype=jnp.float32)[None, :] < kk_t
+        return jnp.where(live, vals, 0.0)
+
+    def compress(self, x, keys, rate=None):
         kk = _num_kept(x.shape[1], self.ratio)
         _, idx = jax.lax.top_k(jnp.abs(x), kk)
         vals = jnp.take_along_axis(x, idx, axis=1)
+        if rate is not None:
+            vals = self._mask_tail(vals, x.shape[1], rate)
         return vals, idx.astype(jnp.int32)
 
     def decompress(self, payload, d):
@@ -248,6 +371,11 @@ class TopKCompressor:
 
     def payload_bytes(self, d):
         return _num_kept(d, self.ratio) * 8  # f32 value + int32 index
+
+    def payload_bits(self, d, rate=None):
+        if rate is None:
+            return 8 * self.payload_bytes(d)
+        return self._dynamic_kept(d, rate) * 64.0
 
 
 class RandKCompressor(TopKCompressor):
@@ -261,26 +389,31 @@ class RandKCompressor(TopKCompressor):
         super().__init__(ratio)
         self.name = "randk"
 
-    def compress(self, x, key):
+    def compress(self, x, keys, rate=None):
         k, d = x.shape
         kk = _num_kept(d, self.ratio)
-        scores = jax.random.uniform(key, (k, d))
+        scores = _uniform_rows(keys, d)
         idx = jax.lax.top_k(scores, kk)[1]
         vals = jnp.take_along_axis(x, idx, axis=1)
+        if rate is not None:
+            vals = self._mask_tail(vals, d, rate)
         return vals, idx.astype(jnp.int32)
 
 
 def make_compressor(cfg: CompressionConfig) -> Compressor:
+    dynamic = cfg.schedule is not None
     if cfg.kind == "none":
         return NoCompressor()
     if cfg.kind == "bf16":
         return BF16Compressor()
-    if cfg.kind == "int8":
+    if cfg.kind in ("int8", "int4"):
         if cfg.use_kernel:
-            return KernelInt8Quantizer(cfg.block_d, cfg.interpret)
-        return IntQuantizer(8)
-    if cfg.kind == "int4":
-        return IntQuantizer(4)
+            return KernelInt8Quantizer(cfg.block_d, cfg.interpret,
+                                       dynamic=dynamic)
+        # scheduled quantizers share the int8 container (packing is
+        # shape-static); the schedule drives the effective bit-width
+        return IntQuantizer(8 if dynamic else int(cfg.kind[3:]),
+                            dynamic=dynamic)
     if cfg.kind == "topk":
         return TopKCompressor(cfg.ratio)
     if cfg.kind == "randk":

@@ -28,6 +28,18 @@ C(θ) directly, θ_i ← θ_i + γ·(Σ_j W_ij C(θ_j) − C(θ_i)) — kept as 
 ablation baseline: it stalls at the quantization noise floor instead of
 tracking the uncompressed mixer.
 
+Both mixers track schedule/accounting state in :class:`CommState` each round:
+the innovation norm ‖θ − θ̂‖ actually offered to the codec (``res_norm``, the
+signal that drives adaptive :mod:`repro.comm.schedule` rates), the latched
+post-warmup reference norm (``res_ref``), a round counter, and the traced
+wire bits the round injected (``wire_bits`` — rate-aware, so scheduled runs
+report honest per-round bytes to ``build_train_step``).
+
+PRNG: every round splits ``CommState.key`` and derives one key per
+(node, leaf) as ``fold_in(fold_in(round_key, global_node_index), leaf_idx)``
+in *both* lowerings, so dense and gossip produce bit-identical stochastic
+rounding at a fixed seed regardless of sharding.
+
 Two lowerings, mirroring ``repro.core.consensus``:
 
 * :class:`CompressedDenseMixer`  — einsum over the public copies; the wire
@@ -50,24 +62,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.compressors import CompressionConfig, make_compressor
+from repro.comm.compressors import (
+    CompressionConfig,
+    fold_leaf,
+    make_compressor,
+    per_node_keys,
+)
+from repro.comm.schedule import CompressionSchedule
 from repro.utils.compat import shard_map_unchecked
 
 
 class CommState(NamedTuple):
     """Per-node compression state threaded through the train loop.
 
-    hat:     public copies θ̂ (float32, same structure/shape as params); the
-             error-feedback residual is θ − θ̂.  () when error_feedback=False
-             (memoryless scheme).
-    hat_mix: running s_i = Σ_j W_ij θ̂_j (gossip lowering only, EF mode; ()
-             otherwise) so each round only adds the received innovations.
-    key:     PRNG key for stochastic rounding / random sparsification.
+    hat:      public copies θ̂ (float32, same structure/shape as params); the
+              error-feedback residual is θ − θ̂.  () when error_feedback=False
+              (memoryless scheme).
+    hat_mix:  running s_i = Σ_j W_ij θ̂_j (gossip lowering only, EF mode; ()
+              otherwise) so each round only adds the received innovations.
+    key:      PRNG key for stochastic rounding / random sparsification.
+    res_norm: f32 — innovation norm ‖θ − θ̂‖_F (over all nodes and leaves)
+              offered to the codec on the last round; 0 before the first
+              round and in memoryless mode.  Drives adaptive schedules and
+              the ``ef_residual_norm`` metric.
+    res_ref:  f32 — post-warmup reference norm latched by an adaptive
+              schedule (0 until latched / for other schedule kinds).
+    rounds:   int32 — compressed gossip rounds completed.
+    wire_bits: f32 — wire bits injected by the last round (all senders,
+              rate-aware under a schedule).
     """
 
     hat: Any
     hat_mix: Any
     key: jax.Array
+    res_norm: jax.Array
+    res_ref: jax.Array
+    rounds: jax.Array
+    wire_bits: jax.Array
 
 
 def ef_residual(theta, state: CommState):
@@ -83,11 +114,19 @@ def _f32_zeros_like(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
 
-def _leaf_payload_bytes(compressor, params) -> int:
-    """Per-round payload bytes one node injects (sum over leaves)."""
+def _leaf_payload_bytes(compressor, params, k: int) -> int:
+    """Per-round payload bytes one node injects (sum over leaves).
+
+    ``params`` must be the *global* node-stacked view; the per-node leaf
+    size is ``x.size // k`` with ``k`` the mixer's node count, not the
+    leaf's own leading dim — a leaf sharded over extra mesh axes (tensor
+    parallel, fsdp) or a multi-axis node dimension would otherwise make the
+    divisor whatever the local leading extent happens to be and silently
+    skew the fig7/fig8 bytes axes.
+    """
     total = 0
     for x in jax.tree.leaves(params):
-        total += compressor.payload_bytes(x.size // x.shape[0])
+        total += compressor.payload_bytes(x.size // k)
     return total
 
 
@@ -99,6 +138,10 @@ class _CompressedMixerBase:
         self.compressor = make_compressor(compression)
         self.gamma = compression.resolved_gamma
         self.ef = compression.error_feedback
+        self.schedule = (
+            CompressionSchedule(compression.schedule, compression.kind,
+                                compression.ratio)
+            if compression.schedule is not None else None)
 
     # -- state ----------------------------------------------------------------
 
@@ -107,6 +150,10 @@ class _CompressedMixerBase:
             hat=_f32_zeros_like(params) if self.ef else (),
             hat_mix=self._init_hat_mix(params),
             key=jax.random.PRNGKey(self.compression.seed),
+            res_norm=jnp.float32(0.0),
+            res_ref=jnp.float32(0.0),
+            rounds=jnp.int32(0),
+            wire_bits=jnp.float32(0.0),
         )
 
     def _init_hat_mix(self, params):
@@ -114,30 +161,55 @@ class _CompressedMixerBase:
 
     def state_specs(self, param_specs) -> CommState:
         """PartitionSpecs matching :meth:`init_state` (for pjit shardings)."""
+        rep = jax.sharding.PartitionSpec()
         return CommState(
             hat=param_specs if self.ef else (),
             hat_mix=param_specs if self._uses_hat_mix() else (),
-            key=jax.sharding.PartitionSpec(),
+            key=rep, res_norm=rep, res_ref=rep, rounds=rep, wire_bits=rep,
         )
 
     def _uses_hat_mix(self) -> bool:
         return False
 
+    # -- schedule / accounting -------------------------------------------------
+
+    def _rate(self, state: CommState):
+        """Traced codec rate for the round about to run (None = static)."""
+        if self.schedule is None:
+            return None
+        return self.schedule.rate(state.rounds, state.res_norm, state.res_ref)
+
+    def _next_sched_state(self, state: CommState, res_norm):
+        """(res_norm', res_ref', rounds') after a round observing res_norm."""
+        res_ref = (self.schedule.update_ref(state.rounds, res_norm,
+                                            state.res_ref)
+                   if self.schedule is not None else state.res_ref)
+        return res_norm, res_ref, state.rounds + 1
+
+    def _round_wire_bits(self, params, rate, senders: int):
+        """Traced wire bits one round injects: senders × per-node payload."""
+        per_node = 0.0
+        for x in jax.tree.leaves(params):
+            per_node = per_node + self.compressor.payload_bits(
+                x.size // self.k, rate)
+        return jnp.asarray(senders * per_node, jnp.float32)
+
     # -- shared per-leaf codec step -------------------------------------------
 
-    def _encode_leaf(self, x, hat, key):
+    def _encode_leaf(self, x, hat, keys, rate):
         """Compress one flattened leaf.
 
         Returns (payload, public', hat') where ``public'`` is this node's
         new publicly-reconstructible value (θ̂' in EF mode, C(θ) memoryless)
-        and ``hat'`` is the state to carry (θ̂' or ()).
+        and ``hat'`` is the state to carry (θ̂' or ()).  ``keys`` is one PRNG
+        key per node row; ``rate`` the traced schedule rate (or None).
         """
         if self.ef:
-            payload = self.compressor.compress(x - hat, key)
+            payload = self.compressor.compress(x - hat, keys, rate)
             qhat = self.compressor.decompress(payload, x.shape[1])
             new_hat = hat + qhat
             return payload, new_hat, new_hat
-        payload = self.compressor.compress(x, key)
+        payload = self.compressor.compress(x, keys, rate)
         public = self.compressor.decompress(payload, x.shape[1])
         return payload, public, ()
 
@@ -152,16 +224,21 @@ class CompressedDenseMixer(_CompressedMixerBase):
 
     def __call__(self, theta, state: CommState):
         key, sub = jax.random.split(state.key)
+        rate = self._rate(state)
+        node_ks = per_node_keys(sub, jnp.arange(self.k))
         leaves, treedef = jax.tree.flatten(theta)
         hats = (treedef.flatten_up_to(state.hat) if self.ef
                 else [() for _ in leaves])
         out_theta, out_hat = [], []
+        res_sq = jnp.float32(0.0)
         for i, (x, h) in enumerate(zip(leaves, hats)):
             k = x.shape[0]
             xf = x.reshape(k, -1).astype(jnp.float32)
             hf = h.reshape(k, -1) if self.ef else None
+            if self.ef:
+                res_sq = res_sq + jnp.sum(jnp.square(xf - hf))
             _, public, new_hat = self._encode_leaf(
-                xf, hf, jax.random.fold_in(sub, i))
+                xf, hf, fold_leaf(node_ks, i), rate)
             mixed = jnp.einsum(
                 "kl,ld->kd", self.w, public,
                 precision=jax.lax.Precision.HIGHEST)
@@ -169,13 +246,18 @@ class CompressedDenseMixer(_CompressedMixerBase):
             out_theta.append(out.reshape(x.shape).astype(x.dtype))
             if self.ef:
                 out_hat.append(new_hat.reshape(x.shape))
+        res_norm, res_ref, rounds = self._next_sched_state(
+            state, jnp.sqrt(res_sq))
         unflat = treedef.unflatten
         return unflat(out_theta), CommState(
-            hat=unflat(out_hat) if self.ef else (), hat_mix=(), key=key)
+            hat=unflat(out_hat) if self.ef else (), hat_mix=(), key=key,
+            res_norm=res_norm, res_ref=res_ref, rounds=rounds,
+            wire_bits=self._round_wire_bits(theta, rate, senders=self.k))
 
     def bytes_per_round(self, params) -> int:
-        """Total payload bytes injected per round (every node sends once)."""
-        return self.k * _leaf_payload_bytes(self.compressor, params)
+        """Total payload bytes injected per round (every node sends once),
+        at the static full rate (scheduled runs report traced wire_bits)."""
+        return self.k * _leaf_payload_bytes(self.compressor, params, self.k)
 
 
 class CompressedGossipMixer(_CompressedMixerBase):
@@ -224,19 +306,26 @@ class CompressedGossipMixer(_CompressedMixerBase):
 
     def __call__(self, theta, state: CommState):
         key, sub = jax.random.split(state.key)
+        rate = self._rate(state)
         p_node = jax.sharding.PartitionSpec(self.axis)
         p_rep = jax.sharding.PartitionSpec()
         specs = self.param_specs
         ef = self.ef
+        have_rate = rate is not None
 
-        def body(t, hat, s, self_w, match_ws, k0):
-            kb = jax.random.fold_in(k0, self._node_index())
+        def body(t, hat, s, self_w, match_ws, k0, rate_op):
+            r_op = rate_op if have_rate else None
             leaves, treedef = jax.tree.flatten(t)
+            k_local = leaves[0].shape[0] if leaves else 1
+            # global node ids of the local rows -> dense-identical keys
+            rows = self._node_index() * k_local + jnp.arange(k_local)
+            node_ks = per_node_keys(k0, rows)
             hats = (treedef.flatten_up_to(hat) if ef
                     else [() for _ in leaves])
             mixes = (treedef.flatten_up_to(s) if ef
                      else [() for _ in leaves])
             o_t, o_h, o_s = [], [], []
+            res_sq = jnp.float32(0.0)
             for i, (x, h, sm) in enumerate(zip(leaves, hats, mixes)):
                 k_local = x.shape[0]
                 d = x.size // k_local
@@ -244,9 +333,12 @@ class CompressedGossipMixer(_CompressedMixerBase):
                 if self.replica_axis is not None:
                     r = self.mesh.shape[self.replica_axis]
                     xf = jax.lax.psum(xf, self.replica_axis) / r
+                if ef:
+                    res_sq = res_sq + jnp.sum(
+                        jnp.square(xf - h.reshape(k_local, d)))
                 payload, public, new_hat = self._encode_leaf(
                     xf, h.reshape(k_local, d) if ef else None,
-                    jax.random.fold_in(kb, i))
+                    fold_leaf(node_ks, i), r_op)
                 # EF: s_i += W_ii q_i + Σ_m W_i,perm(i)·dequant(recv) keeps
                 # s_i = Σ_j W_ij θ̂_j current; memoryless: same combine of the
                 # fresh C(θ) messages.  Only the payload crosses the wire.
@@ -263,20 +355,30 @@ class CompressedGossipMixer(_CompressedMixerBase):
                 if ef:
                     o_h.append(new_hat.reshape(x.shape))
                     o_s.append(acc.reshape(x.shape))
+            res_sq = jax.lax.psum(res_sq, self.axis)
             u = treedef.unflatten
-            return (u(o_t), u(o_h) if ef else (), u(o_s) if ef else ())
+            return (u(o_t), u(o_h) if ef else (), u(o_s) if ef else (),
+                    res_sq)
 
         in_hat = (specs if ef else (), specs if ef else ())
         shard = shard_map_unchecked(
             body,
             mesh=self.mesh,
             in_specs=(specs, in_hat[0], in_hat[1], p_node,
-                      [p_node] * len(self.match_ws), p_rep),
-            out_specs=(specs, in_hat[0], in_hat[1]),
+                      [p_node] * len(self.match_ws), p_rep, p_rep),
+            out_specs=(specs, in_hat[0], in_hat[1], p_rep),
         )
-        t2, h2, s2 = shard(theta, state.hat, state.hat_mix,
-                           self.self_w, list(self.match_ws), sub)
-        return t2, CommState(hat=h2, hat_mix=s2, key=key)
+        rate_op = rate if have_rate else jnp.float32(0.0)
+        t2, h2, s2, res_sq = shard(theta, state.hat, state.hat_mix,
+                                   self.self_w, list(self.match_ws), sub,
+                                   rate_op)
+        res_norm, res_ref, rounds = self._next_sched_state(
+            state, jnp.sqrt(res_sq))
+        sends = sum(len(pairs) for pairs in self.perms)
+        return t2, CommState(
+            hat=h2, hat_mix=s2, key=key,
+            res_norm=res_norm, res_ref=res_ref, rounds=rounds,
+            wire_bits=self._round_wire_bits(theta, rate, senders=sends))
 
     def _accumulate(self, acc, payload, weight, d):
         fused = getattr(self.compressor, "accumulate", None)
@@ -285,7 +387,8 @@ class CompressedGossipMixer(_CompressedMixerBase):
         return acc + weight * self.compressor.decompress(payload, d)
 
     def bytes_per_round(self, params) -> int:
-        """Payload bytes per round: active senders per matching × payload."""
-        per_node = _leaf_payload_bytes(self.compressor, params)
+        """Payload bytes per round: active senders per matching × payload,
+        at the static full rate (scheduled runs report traced wire_bits)."""
+        per_node = _leaf_payload_bytes(self.compressor, params, self.k)
         sends = sum(len(pairs) for pairs in self.perms)
         return sends * per_node

@@ -1,0 +1,161 @@
+"""Adaptive compression schedules: anneal the wire codec as consensus contracts.
+
+A static :class:`~repro.comm.compressors.CompressionConfig` fixes the codec
+rate for the whole run, but with error feedback the quantity actually crossing
+the wire is the *innovation* θ − θ̂, whose norm shrinks as training converges
+and consensus contracts.  Early rounds therefore need the codec's full
+fidelity (the innovation is O(‖θ‖) and a crude code slows the initial
+contraction), while late rounds waste wire: a 4-bit code of a tiny innovation
+has a tiny absolute error.  A schedule moves the rate between those regimes —
+int8 → int4 for the quantizers, annealed kept-fraction for topk/randk — so the
+cumulative bytes to a target worst-distribution accuracy drop below any fixed
+rate (see ``benchmarks/fig8_adaptive.py`` and EXPERIMENTS.md §Fig8).
+
+The schedule output is a *traced* scalar ``rate`` fed to
+``Compressor.compress(x, keys, rate=...)`` every round, so the whole train
+step stays a single jitted program (no recompiles at switch points):
+
+* quantizers (int8/int4): ``rate`` is the quantization ceiling ``qmax``; the
+  wire buffer stays int8-shaped but only ``ceil(log2(2·qmax+1))`` bits per
+  entry carry information, which is what the ``wire_bits`` metric and a
+  bit-packing transport layer would move (qmax = 7 is exactly the int4 code).
+* sparsifiers (topk/randk): ``rate`` is the kept fraction; the payload buffer
+  is sized for ``CompressionConfig.ratio`` (the static maximum) and entries
+  beyond the dynamic count are masked to zero, i.e. never sent.
+
+Drivers (``ScheduleConfig.kind``):
+
+* ``constant`` — always the full rate (dynamic plumbing, static behavior;
+  used to test traced-rate parity against the config-frozen path).
+* ``linear``   — anneal full → aggressive over ``anneal_rounds`` rounds.
+* ``adaptive`` — driven by the error-feedback innovation norm tracked in
+  ``CommState.res_norm``: after ``warmup_rounds`` rounds the norm is latched
+  as the reference ``res_ref``; as ``res_norm / res_ref`` decays below
+  ``threshold`` the rate anneals toward the aggressive end.  This is the
+  ROADMAP item: reduction scheduled against optimization progress.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_QMAX8 = 127.0
+_QMAX4 = 7.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """How the codec rate moves during training.
+
+    Attributes:
+      kind: "constant" | "linear" | "adaptive".
+      rate_hi: full-fidelity rate (qmax for quantizers, kept fraction for
+        sparsifiers).  None resolves from the codec kind: 127 for int8,
+        7 for int4, ``CompressionConfig.ratio`` for topk/randk.
+      rate_lo: most aggressive rate.  None resolves to 7 (int4) for the
+        quantizers and ratio/8 for the sparsifiers.
+      anneal_rounds: rounds to go hi → lo for kind="linear".
+      threshold: adaptive only — the innovation-norm decay fraction
+        ``res_norm / res_ref`` at (or above) which the codec runs at
+        ``rate_hi``; below it the rate falls proportionally to the norm
+        (constant absolute resolution) until it pins at ``rate_lo``.
+      warmup_rounds: adaptive only — rounds run at ``rate_hi`` before the
+        reference norm is latched (round 0 compresses the whole of θ against
+        θ̂ = 0, so the very first norms are not representative).
+    """
+
+    kind: str = "adaptive"
+    rate_hi: float | None = None
+    rate_lo: float | None = None
+    anneal_rounds: int = 300
+    threshold: float = 0.5
+    warmup_rounds: int = 10
+
+    def __post_init__(self):
+        if self.kind not in ("constant", "linear", "adaptive"):
+            raise ValueError(f"unknown schedule kind {self.kind!r}")
+        if not 0.0 < self.threshold <= 1.0:
+            raise ValueError("threshold must be in (0, 1]")
+        if self.anneal_rounds < 1:
+            raise ValueError("anneal_rounds must be >= 1")
+
+
+class CompressionSchedule:
+    """Maps schedule state (rounds, innovation norms) to the traced rate.
+
+    Built by the compressed mixers from ``CompressionConfig.schedule``; the
+    codec-native hi/lo rates are resolved from the compression kind so the
+    same ScheduleConfig works for quantizers and sparsifiers.
+    """
+
+    def __init__(self, cfg: ScheduleConfig, compression_kind: str,
+                 ratio: float):
+        if compression_kind in ("int8", "int4"):
+            hi = _QMAX8 if compression_kind == "int8" else _QMAX4
+            lo = _QMAX4
+        elif compression_kind in ("topk", "randk"):
+            hi = ratio
+            lo = ratio / 8.0
+        else:
+            raise ValueError(
+                f"compression kind {compression_kind!r} has no adjustable "
+                "rate; schedules support int8/int4/topk/randk")
+        self.cfg = cfg
+        self.hi = float(cfg.rate_hi) if cfg.rate_hi is not None else hi
+        self.lo = float(cfg.rate_lo) if cfg.rate_lo is not None else lo
+        if not self.lo <= self.hi:
+            raise ValueError(f"rate_lo {self.lo} > rate_hi {self.hi}")
+        if compression_kind in ("int8", "int4"):
+            # the wire container is int8: qmax beyond 127 would wrap in the
+            # int8 cast (sign-flipped codes), below 1 has no code points
+            if not (1.0 <= self.lo and self.hi <= _QMAX8):
+                raise ValueError(
+                    f"quantizer rates must lie in [1, {_QMAX8:.0f}] "
+                    f"(got lo={self.lo}, hi={self.hi})")
+        elif not (0.0 < self.lo and self.hi <= 1.0):
+            raise ValueError(
+                f"sparsifier rates must lie in (0, 1] "
+                f"(got lo={self.lo}, hi={self.hi})")
+
+    def rate(self, rounds: jax.Array, res_norm: jax.Array,
+             res_ref: jax.Array) -> jax.Array:
+        """Traced rate for the round about to run.
+
+        Args:
+          rounds: int32 — compressed rounds completed so far.
+          res_norm: f32 — innovation norm ‖θ − θ̂‖ offered to the codec on
+            the previous round (0 before the first round).
+          res_ref: f32 — reference norm latched after warmup (0 until then).
+        """
+        cfg = self.cfg
+        hi, lo = jnp.float32(self.hi), jnp.float32(self.lo)
+        if cfg.kind == "constant":
+            return jnp.broadcast_to(hi, ())
+        if cfg.kind == "linear":
+            t = jnp.clip(rounds.astype(jnp.float32) / cfg.anneal_rounds,
+                         0.0, 1.0)
+            return hi + (lo - hi) * t
+        # adaptive: constant-resolution rule.  The quantization step is
+        # scale = absmax/qmax, so rate ∝ innovation norm keeps the *absolute*
+        # codec resolution pinned at its reference level while the bits per
+        # entry fall like log2 of the norm decay (one bit per halving).
+        # ``threshold`` is the decay fraction at which annealing starts.
+        frac = res_norm / jnp.maximum(res_ref, jnp.float32(1e-20))
+        r = jnp.clip(hi * frac / cfg.threshold, lo, hi)
+        return jnp.where((rounds >= cfg.warmup_rounds) & (res_ref > 0),
+                         r, hi)
+
+    def update_ref(self, rounds: jax.Array, res_norm: jax.Array,
+                   res_ref: jax.Array) -> jax.Array:
+        """New reference norm after a round observing ``res_norm``.
+
+        Latches the first post-warmup observation; constant/linear schedules
+        keep the field at 0 (unused).
+        """
+        if self.cfg.kind != "adaptive":
+            return res_ref
+        latch = (rounds >= self.cfg.warmup_rounds) & (res_ref == 0)
+        return jnp.where(latch, res_norm, res_ref)

@@ -6,7 +6,7 @@ drdsgd.py     — DR-DSGD & DSGD train-step builders over node-stacked pytrees
 api.py        — DecentralizedTrainer high-level API
 """
 
-from repro.comm import CommState, CompressionConfig
+from repro.comm import CommState, CompressionConfig, ScheduleConfig
 from repro.core.robust import (
     RobustConfig,
     robust_scale,
@@ -32,7 +32,7 @@ from repro.core.drdsgd import (
 from repro.core.api import DecentralizedTrainer
 
 __all__ = [
-    "CommState", "CompressionConfig",
+    "CommState", "CompressionConfig", "ScheduleConfig",
     "RobustConfig", "robust_scale", "robust_objective", "mixture_weights",
     "Mixer", "make_dense_mixer", "make_gossip_mixer",
     "make_hierarchical_mixer", "make_identity_mixer", "repeat_mixer",

@@ -53,6 +53,7 @@ class DecentralizedTrainer:
     compression: CompressionConfig | None = None
                                           # wire codec for the consensus step
                                           # (repro.comm); None = full precision
+    mix_every: int = 1                    # consensus period (local SGD when >1)
     loss_has_aux: bool = False
     jit: bool = True
 
@@ -85,7 +86,8 @@ class DecentralizedTrainer:
         if self.optimizer is None:
             self.optimizer = sgd(self.lr)
         step_cfg = TrainStepConfig(robust=self.robust, grad_clip=self.grad_clip,
-                                   compression=self.compression)
+                                   compression=self.compression,
+                                   mix_every=self.mix_every)
         self._train_step = build_train_step(
             self.loss_fn, self.optimizer, self.mixer, step_cfg,
             loss_has_aux=self.loss_has_aux,

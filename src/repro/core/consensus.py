@@ -221,9 +221,12 @@ def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
         raise ValueError("rounds must be >= 1")
     if getattr(mixer, "stateful", False):
         def mix_stateful(theta, comm_state):
+            total_bits = jnp.float32(0.0)
             for _ in range(rounds):
                 theta, comm_state = mixer(theta, comm_state)
-            return theta, comm_state
+                total_bits = total_bits + comm_state.wire_bits
+            # wire_bits is per-*step* accounting: sum the inner rounds
+            return theta, comm_state._replace(wire_bits=total_bits)
 
         mix_stateful.stateful = True
         mix_stateful.init_state = mixer.init_state

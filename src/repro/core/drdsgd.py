@@ -101,6 +101,10 @@ def build_train_step(
             "compressed (stateful) mixer — build it with the same "
             "CompressionConfig (see repro.core.consensus factories)")
     bytes_per_round = getattr(mixer, "bytes_per_round", tree_bytes)
+    # scheduled codecs move the rate every round, so the static estimate is
+    # wrong for them: report the mixer's traced per-round wire_bits instead
+    scheduled = (cfg.compression is not None and cfg.compression.enabled
+                 and cfg.compression.schedule is not None)
 
     def per_node(params_i, batch_i):
         if loss_has_aux:
@@ -144,12 +148,18 @@ def build_train_step(
                 mixed = mixer(updated)
             else:
                 mixed = jax.lax.cond(is_mix_step, mixer, lambda t: t, updated)
-        # estimated wire bytes this step (static estimate, gated on mixing)
+        # estimated wire bytes this step (static estimate, gated on mixing;
+        # traced wire_bits/8 when a schedule makes the rate dynamic)
         round_bytes = float(bytes_per_round(state.params))
+        if scheduled:
+            comm_bytes = jnp.where(
+                is_mix_step, ef_state.wire_bits / 8.0, 0.0)
+        elif cfg.mix_every == 1:
+            comm_bytes = jnp.float32(round_bytes)
+        else:
+            comm_bytes = jnp.where(is_mix_step, round_bytes, 0.0)
         metrics = {
-            "comm_bytes": (
-                jnp.float32(round_bytes) if cfg.mix_every == 1
-                else jnp.where(is_mix_step, round_bytes, 0.0)),
+            "comm_bytes": comm_bytes,
             "loss_mean": jnp.mean(losses),
             "loss_worst": jnp.max(losses),
             "loss_std": jnp.std(losses),
@@ -158,6 +168,13 @@ def build_train_step(
             "scale_max": jnp.max(scale),
             "lambda_max": jnp.max(mixture_weights(losses, cfg.robust)),
         }
+        if stateful_mixer:
+            # wire_bits is "bits injected by the last round" — gate on the
+            # mix predicate so off-steps (mix_every > 1) report 0, not the
+            # stale value the lax.cond pass-through branch carries
+            metrics["wire_bits"] = jnp.where(
+                is_mix_step, ef_state.wire_bits, 0.0)
+            metrics["ef_residual_norm"] = ef_state.res_norm
         if cfg.metrics_disagreement:
             metrics["disagreement"] = tree_node_disagreement(mixed)
         for k, v in aux.items():

@@ -23,14 +23,15 @@ reproducible against ``ref.py`` in interpret mode.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _quantize_kernel(x_ref, u_ref, q_ref, scale_ref, *, qmax: int):
+def _quantize_kernel(qmax_ref, x_ref, u_ref, q_ref, scale_ref):
+    # qmax rides in as a (1, 1) traced scalar so an adaptive schedule can
+    # switch int8 -> int4 wire (qmax 127 -> 7) without recompiling
+    qmax = qmax_ref[0, 0]
     x = x_ref[...].astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x))
     scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
@@ -58,18 +59,22 @@ def num_blocks(d: int, block_d: int) -> int:
     return d // _pick_block(d, block_d)
 
 
-def quantize_blockwise(x, u, *, qmax: int = 127, block_d: int = 65536,
+def quantize_blockwise(x, u, *, qmax=127, block_d: int = 65536,
                        interpret: bool = False):
-    """x, u: (K, D) -> (q int8 (K, D), scales f32 (K, D/block_d))."""
+    """x, u: (K, D) -> (q int8 (K, D), scales f32 (K, D/block_d)).
+
+    ``qmax`` may be a python int or a traced f32 scalar (schedule-driven).
+    """
     k, d = x.shape
     block_d = _pick_block(d, block_d)
     n_blk = d // block_d
     grid = (k, n_blk)
-    kernel = functools.partial(_quantize_kernel, qmax=qmax)
+    qmax_arr = jnp.reshape(jnp.asarray(qmax, jnp.float32), (1, 1))
     return pl.pallas_call(
-        kernel,
+        _quantize_kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
             pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
         ],
@@ -82,7 +87,7 @@ def quantize_blockwise(x, u, *, qmax: int = 127, block_d: int = 65536,
             jax.ShapeDtypeStruct((k, n_blk), jnp.float32),
         ],
         interpret=interpret,
-    )(x, u)
+    )(qmax_arr, x, u)
 
 
 def dequant_accumulate(acc, q, scales, w, *, block_d: int = 65536,

@@ -25,10 +25,14 @@ def _use_pallas(interpret: bool, use_kernel: bool) -> bool:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("qmax", "block_d", "interpret", "use_kernel"))
-def quantize_blockwise(x, u, *, qmax: int = 127, block_d: int = 65536,
+                   static_argnames=("block_d", "interpret", "use_kernel"))
+def quantize_blockwise(x, u, *, qmax=127, block_d: int = 65536,
                        interpret: bool = False, use_kernel: bool = True):
-    """(K, D) f32 -> (q int8 (K, D), per-block scales f32 (K, n_blk))."""
+    """(K, D) f32 -> (q int8 (K, D), per-block scales f32 (K, n_blk)).
+
+    ``qmax`` is traced (not static), so schedule-driven int8 -> int4 rate
+    switches reuse one compiled program.
+    """
     if _use_pallas(interpret, use_kernel):
         on_tpu = jax.default_backend() == "tpu"
         return _k.quantize_blockwise(x, u, qmax=qmax, block_d=block_d,

@@ -14,8 +14,11 @@ def _blocked(x, n_blk):
     return x.reshape(k, n_blk, d // n_blk)
 
 
-def quantize_blockwise_ref(x, u, *, qmax: int = 127, block_d: int = 65536):
-    """x, u: (K, D) -> (q int8 (K, D), scales f32 (K, D/block_d))."""
+def quantize_blockwise_ref(x, u, *, qmax=127, block_d: int = 65536):
+    """x, u: (K, D) -> (q int8 (K, D), scales f32 (K, D/block_d)).
+
+    ``qmax`` may be a python int or a traced f32 scalar.
+    """
     k, d = x.shape
     block_d = min(block_d, d)
     if d % block_d:

@@ -34,8 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.core import (
-    CompressionConfig, RobustConfig, TrainStepConfig, build_train_step,
-    make_dense_mixer, make_gossip_mixer,
+    CompressionConfig, RobustConfig, ScheduleConfig, TrainStepConfig,
+    build_train_step, make_dense_mixer, make_gossip_mixer,
 )
 from repro.core.drdsgd import DecentralizedState
 from repro.graphs import (
@@ -267,6 +267,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     label = mixer_kind + (f"+{compression.kind}" if compression else "") \
+        + (f"+sched-{compression.schedule.kind}"
+           if compression and compression.schedule else "") \
         + (f"+{variant}" if variant else "")
     tag = f"{arch}__{shape_name}__{mesh_name}__{label}"
     path = os.path.join(out_dir, tag + ".json")
@@ -356,6 +358,11 @@ def main():
                     help="consensus wire codec (repro.comm)")
     ap.add_argument("--compress-ratio", type=float, default=0.01,
                     help="kept fraction for topk/randk")
+    ap.add_argument("--compress-schedule", default="none",
+                    choices=["none", "constant", "linear", "adaptive"],
+                    help="traced-rate codec schedule (repro.comm.schedule); "
+                         "proves the dynamic-rate train step lowers and "
+                         "compiles on the production meshes")
     ap.add_argument("--compute-dtype", default=None, choices=[None, "bf16"])
     ap.add_argument("--moe-constraints", default=None,
                     choices=[None, "expert", "capacity"])
@@ -370,8 +377,14 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+    schedule = (ScheduleConfig(kind=args.compress_schedule)
+                if args.compress_schedule != "none" else None)
+    if schedule is not None and args.compress == "none":
+        raise SystemExit("--compress-schedule needs a codec: pass "
+                         "--compress int8|int4|topk|randk")
     compression = (CompressionConfig(kind=args.compress,
-                                     ratio=args.compress_ratio)
+                                     ratio=args.compress_ratio,
+                                     schedule=schedule)
                    if args.compress != "none" else None)
     comp = jnp.bfloat16 if args.compute_dtype == "bf16" else None
 

@@ -35,7 +35,9 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_arch, fmnist_default, cifar_default
-from repro.core import CompressionConfig, DecentralizedTrainer, RobustConfig
+from repro.core import (
+    CompressionConfig, DecentralizedTrainer, RobustConfig, ScheduleConfig,
+)
 from repro.data import (
     make_cifar_like,
     make_fmnist_like,
@@ -49,12 +51,25 @@ from repro.optim import sgd
 
 def _compression_from_args(args) -> CompressionConfig | None:
     if args.compress == "none":
+        if args.compress_schedule != "none":
+            raise SystemExit(
+                "--compress-schedule needs a codec: pass --compress "
+                "int8|int4|topk|randk")
         return None
+    schedule = None
+    if args.compress_schedule != "none":
+        schedule = ScheduleConfig(
+            kind=args.compress_schedule,
+            threshold=args.schedule_threshold,
+            warmup_rounds=args.schedule_warmup,
+            anneal_rounds=args.schedule_rounds,
+        )
     return CompressionConfig(
         kind=args.compress,
         ratio=args.compress_ratio,
         error_feedback=not args.no_error_feedback,
         seed=args.seed,
+        schedule=schedule,
     )
 
 
@@ -104,10 +119,14 @@ def train_lm(args):
             m["step"] = step
             m["wall_s"] = time.time() - t0
             history.append(m)
+            extra = ""
+            if "ef_residual_norm" in m:
+                extra = (f" ef_res={m['ef_residual_norm']:.2e}"
+                         f" wire_bits={m['wire_bits']:.3e}")
             print(f"step {step:5d} loss_mean={m['loss_mean']:.4f} "
                   f"loss_worst={m['loss_worst']:.4f} "
                   f"disagree={m.get('disagreement', 0):.2e} "
-                  f"comm_bytes={m.get('comm_bytes', 0):.3e}")
+                  f"comm_bytes={m.get('comm_bytes', 0):.3e}" + extra)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
         print(f"checkpoint saved to {args.ckpt_dir}")
@@ -176,6 +195,20 @@ def main():
                     help="consensus wire codec (repro.comm)")
     ap.add_argument("--compress-ratio", type=float, default=0.01,
                     help="kept fraction for topk/randk")
+    ap.add_argument("--compress-schedule", default="none",
+                    choices=["none", "constant", "linear", "adaptive"],
+                    help="adapt the codec rate during training "
+                         "(repro.comm.schedule): int8->int4 / annealed "
+                         "topk ratio, driven by rounds (linear) or the "
+                         "error-feedback innovation norm (adaptive)")
+    ap.add_argument("--schedule-threshold", type=float, default=0.5,
+                    help="adaptive: innovation-norm fraction below which "
+                         "the rate anneals")
+    ap.add_argument("--schedule-warmup", type=int, default=10,
+                    help="adaptive: full-rate rounds before the reference "
+                         "norm is latched")
+    ap.add_argument("--schedule-rounds", type=int, default=300,
+                    help="linear: rounds to anneal full -> aggressive rate")
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="ablation: memoryless compression (stalls at the "
                          "quantization noise floor)")

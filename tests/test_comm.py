@@ -16,6 +16,7 @@ from repro.comm import (
     CompressionConfig,
     ef_residual,
     make_compressor,
+    per_node_keys,
 )
 from repro.core import (
     DecentralizedTrainer,
@@ -34,6 +35,11 @@ def _x(k=4, d=1000, seed=0):
     return jax.random.normal(jax.random.PRNGKey(seed), (k, d), jnp.float32)
 
 
+def _keys(seed, k):
+    """Per-node key batch for direct Compressor.compress calls."""
+    return per_node_keys(jax.random.PRNGKey(seed), jnp.arange(k))
+
+
 @pytest.mark.parametrize("kind,tol", [
     ("none", 0.0),
     ("bf16", 1.0 / 64),          # bf16 has 8 mantissa bits
@@ -43,7 +49,7 @@ def _x(k=4, d=1000, seed=0):
 def test_roundtrip_within_tolerance(kind, tol):
     x = _x()
     c = make_compressor(CompressionConfig(kind=kind))
-    xh = c.decompress(c.compress(x, jax.random.PRNGKey(1)), x.shape[1])
+    xh = c.decompress(c.compress(x, _keys(1, x.shape[0])), x.shape[1])
     scale = float(jnp.max(jnp.abs(x)))
     err = float(jnp.max(jnp.abs(xh - x)))
     assert err <= tol * scale + 1e-7, (kind, err)
@@ -53,7 +59,7 @@ def test_roundtrip_within_tolerance(kind, tol):
 def test_sparsifier_keeps_ratio(kind):
     x = _x(d=400)
     c = make_compressor(CompressionConfig(kind=kind, ratio=0.1))
-    vals, idx = c.compress(x, jax.random.PRNGKey(2))
+    vals, idx = c.compress(x, _keys(2, x.shape[0]))
     assert vals.shape == (4, 40) and idx.shape == (4, 40)
     xh = c.decompress((vals, idx), 400)
     nonzero = int(jnp.sum(xh != 0))
@@ -74,7 +80,7 @@ def test_stochastic_rounding_unbiased(kind):
     acc = jnp.zeros_like(x)
     for i in range(n):
         acc = acc + c.decompress(
-            c.compress(x, jax.random.PRNGKey(i)), x.shape[1])
+            c.compress(x, _keys(i, x.shape[0])), x.shape[1])
     mean = acc / n
     # per-element bias ~ scale/sqrt(12 n); allow 6 sigma
     scale = float(jnp.max(jnp.abs(x))) / (127 if kind == "int8" else 7)
@@ -84,8 +90,8 @@ def test_stochastic_rounding_unbiased(kind):
 def test_int4_packing_halves_wire():
     c8 = make_compressor(CompressionConfig(kind="int8"))
     c4 = make_compressor(CompressionConfig(kind="int4"))
-    q8, _ = c8.compress(_x(), jax.random.PRNGKey(0))
-    q4, _ = c4.compress(_x(), jax.random.PRNGKey(0))
+    q8, _ = c8.compress(_x(), _keys(0, 4))
+    q4, _ = c4.compress(_x(), _keys(0, 4))
     assert q4.shape[1] == q8.shape[1] // 2 and q4.dtype == jnp.int8
     assert c4.payload_bytes(1000) < c8.payload_bytes(1000) * 0.6
 

@@ -1,0 +1,435 @@
+"""Adaptive compression schedules + accounting: traced-rate codecs, dynamic
+vs static parity, dense-vs-gossip PRNG equivalence at a fixed seed, the
+int4 kernel accumulate parity, mix_every off-step CommState consistency, and
+the static comm_bytes estimate cross-checked against compiled-HLO
+collective-permute byte counts."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (
+    CommState,
+    CompressionConfig,
+    ScheduleConfig,
+    make_compressor,
+    per_node_keys,
+    quant_bits,
+)
+from repro.core import (
+    RobustConfig,
+    TrainStepConfig,
+    build_train_step,
+    init_state,
+    make_dense_mixer,
+    repeat_mixer,
+)
+from repro.graphs import metropolis_weights, ring_graph
+from repro.optim import sgd
+from repro.utils.tree import tree_node_disagreement
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _keys(seed, k):
+    return per_node_keys(jax.random.PRNGKey(seed), jnp.arange(k))
+
+
+# -- (a) ScheduleConfig / CompressionSchedule unit behavior --------------------
+
+def test_schedule_config_validation():
+    with pytest.raises(ValueError):
+        ScheduleConfig(kind="cosine")
+    with pytest.raises(ValueError):
+        ScheduleConfig(threshold=0.0)
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="bf16", schedule=ScheduleConfig())
+    with pytest.raises(ValueError):
+        CompressionConfig(kind="int8", error_feedback=False,
+                          schedule=ScheduleConfig(kind="adaptive"))
+    # linear schedules do not need the EF residual signal
+    CompressionConfig(kind="int8", error_feedback=False,
+                      schedule=ScheduleConfig(kind="linear"))
+    # quantizer rates beyond the int8 container would wrap in the cast
+    from repro.comm.schedule import CompressionSchedule
+
+    with pytest.raises(ValueError):
+        CompressionSchedule(ScheduleConfig(rate_hi=200.0), "int8", 0.01)
+    with pytest.raises(ValueError):
+        CompressionSchedule(ScheduleConfig(rate_lo=0.5), "int8", 0.01)
+    with pytest.raises(ValueError):
+        CompressionSchedule(ScheduleConfig(rate_hi=1.5), "topk", 0.1)
+
+
+def test_schedule_rates():
+    from repro.comm.schedule import CompressionSchedule
+
+    const = CompressionSchedule(ScheduleConfig(kind="constant"), "int8", 0.01)
+    assert float(const.rate(jnp.int32(99), jnp.float32(0.0),
+                            jnp.float32(0.0))) == 127.0
+    lin = CompressionSchedule(
+        ScheduleConfig(kind="linear", anneal_rounds=100), "int8", 0.01)
+    assert float(lin.rate(jnp.int32(0), jnp.float32(0), jnp.float32(0))) == 127.0
+    assert float(lin.rate(jnp.int32(100), jnp.float32(0), jnp.float32(0))) == 7.0
+    mid = float(lin.rate(jnp.int32(50), jnp.float32(0), jnp.float32(0)))
+    assert 7.0 < mid < 127.0
+    ada = CompressionSchedule(
+        ScheduleConfig(kind="adaptive", warmup_rounds=5, threshold=1.0),
+        "int8", 0.01)
+    # pre-warmup / unlatched reference: full rate
+    assert float(ada.rate(jnp.int32(2), jnp.float32(0.1),
+                          jnp.float32(0.0))) == 127.0
+    # constant-resolution: rate tracks the norm decay, pinned at [lo, hi]
+    assert float(ada.rate(jnp.int32(10), jnp.float32(1.0),
+                          jnp.float32(1.0))) == 127.0
+    half = float(ada.rate(jnp.int32(10), jnp.float32(0.5), jnp.float32(1.0)))
+    assert abs(half - 63.5) < 1e-4
+    assert float(ada.rate(jnp.int32(10), jnp.float32(1e-6),
+                          jnp.float32(1.0))) == 7.0
+    # sparsifier rates resolve from the config ratio
+    tk = CompressionSchedule(ScheduleConfig(kind="adaptive"), "topk", 0.08)
+    assert tk.hi == pytest.approx(0.08) and tk.lo == pytest.approx(0.01)
+
+
+def test_quant_bits():
+    assert float(quant_bits(127.0)) == 8.0
+    assert float(quant_bits(7.0)) == 4.0
+    assert float(quant_bits(63.0)) == 7.0
+
+
+# -- (b) traced-rate codecs: parity with the static paths ----------------------
+
+def test_dynamic_qmax_matches_static_int4_values():
+    """A scheduled quantizer at rate qmax=7 emits exactly the static int4
+    code values (the static path just nibble-packs them)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 256), jnp.float32)
+    keys = _keys(3, 4)
+    dyn = make_compressor(CompressionConfig(
+        kind="int8", schedule=ScheduleConfig(kind="constant")))
+    st4 = make_compressor(CompressionConfig(kind="int4"))
+    qd, sd = dyn.compress(x, keys, rate=jnp.float32(7.0))
+    q4, s4 = st4.compress(x, keys)
+    from repro.comm.compressors import _unpack_int4
+
+    np.testing.assert_array_equal(np.asarray(qd),
+                                  np.asarray(_unpack_int4(q4, 256)))
+    np.testing.assert_allclose(np.asarray(sd), np.asarray(s4), rtol=1e-6)
+    # and at qmax=127 it is exactly the static int8 code
+    st8 = make_compressor(CompressionConfig(kind="int8"))
+    qd8, _ = dyn.compress(x, keys, rate=jnp.float32(127.0))
+    q8, _ = st8.compress(x, keys)
+    np.testing.assert_array_equal(np.asarray(qd8), np.asarray(q8))
+
+
+def test_dynamic_sparsifier_masks_tail():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 400), jnp.float32)
+    c = make_compressor(CompressionConfig(
+        kind="topk", ratio=0.1, schedule=ScheduleConfig(kind="constant")))
+    vals, idx = c.compress(x, _keys(0, 4), rate=jnp.float32(0.025))
+    assert vals.shape == (4, 40)  # buffer sized for the static max ratio
+    assert int(jnp.sum(vals != 0)) <= 4 * 10  # only round(0.025*400) live
+    # the live entries are still the largest-magnitude ones
+    xh = c.decompress((vals, idx), 400)
+    kept_min = jnp.min(jnp.where(vals[:, :10] != 0,
+                                 jnp.abs(vals[:, :10]), jnp.inf), axis=1)
+    dropped_max = jnp.where(xh == 0, jnp.abs(x), 0.0).max(axis=1)
+    assert bool(jnp.all(dropped_max <= kept_min + 1e-6))
+    # traced bits account only the live entries
+    bits_full = float(c.payload_bits(400, jnp.float32(0.1)))
+    bits_low = float(c.payload_bits(400, jnp.float32(0.025)))
+    assert bits_low == pytest.approx(10 * 64.0)
+    assert bits_full == pytest.approx(40 * 64.0)
+
+
+def test_int4_kernel_accumulate_parity():
+    """ISSUE satellite: the fused kernel path at traced qmax=7 (the int4
+    wire) round-trips through dequant_accumulate bit-identically to the jnp
+    int4 oracle."""
+    from repro.kernels.quant_gossip.ops import (
+        dequant_accumulate, quantize_blockwise)
+    from repro.kernels.quant_gossip.ref import dequant_accumulate_ref
+
+    k, d = 4, 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (k, d), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(1), (k, d), jnp.float32)
+    acc = jax.random.normal(jax.random.PRNGKey(2), (k, d), jnp.float32)
+    w = jnp.linspace(0.1, 0.5, k)
+    # kernel with traced qmax=7 (block_d >= d -> per-node scale)
+    qk, sk = quantize_blockwise(x, u, qmax=jnp.float32(7.0), block_d=d,
+                                interpret=True, use_kernel=True)
+    # jnp int4 codec given the same uniforms
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / 7.0
+    q_ref = jnp.clip(jnp.floor(x / scale + u), -7, 7).astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(scale), rtol=1e-6)
+    out_k = dequant_accumulate(acc, qk, sk, w, interpret=True, use_kernel=True)
+    out_r = dequant_accumulate_ref(acc, q_ref, scale, w)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -- (c) scheduled mixers: one compiled program, annealing wire ----------------
+
+def _ring8_theta():
+    rng = np.random.default_rng(0)
+    return {
+        "a": jnp.asarray(rng.normal(size=(8, 64)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(8, 3, 5)), jnp.float32),
+    }
+
+
+def test_scheduled_dense_mixer_anneals_and_contracts():
+    w = metropolis_weights(ring_graph(8))
+    theta = _ring8_theta()
+    cfg = CompressionConfig(kind="int8", schedule=ScheduleConfig(
+        kind="adaptive", warmup_rounds=3, threshold=1.0))
+    mixer = make_dense_mixer(w, compression=cfg)
+    st = mixer.init_state(theta)
+    assert float(st.wire_bits) == 0.0 and int(st.rounds) == 0
+    step = jax.jit(mixer)
+    t = theta
+    bits = []
+    for _ in range(40):
+        t, st = step(t, st)
+        bits.append(float(st.wire_bits))
+    # static int8 wire for this tree: 8 nodes x (64+4 + 15+4) bytes
+    assert bits[0] == pytest.approx(8 * 8 * (64 + 4 + 15 + 4))
+    # the innovation norm collapses under pure mixing -> anneal to int4 wire
+    assert bits[-1] == pytest.approx(8 * (4 * 64 + 32 + 4 * 15 + 32))
+    assert int(st.rounds) == 40 and float(st.res_ref) > 0
+    # and consensus still contracts like the uncompressed mixer
+    t_unc = theta
+    unc = make_dense_mixer(w)
+    for _ in range(40):
+        t_unc = unc(t_unc)
+    assert float(tree_node_disagreement(t)) <= \
+        10 * float(tree_node_disagreement(t_unc)) + 1e-10
+
+
+def test_scheduled_constant_matches_static_path():
+    """kind='constant' exercises the traced-rate plumbing but must produce
+    exactly the static codec's mixing trajectory."""
+    w = metropolis_weights(ring_graph(8))
+    theta = _ring8_theta()
+    m_static = make_dense_mixer(w, compression=CompressionConfig(kind="int8"))
+    m_dyn = make_dense_mixer(w, compression=CompressionConfig(
+        kind="int8", schedule=ScheduleConfig(kind="constant")))
+    ts, ss = theta, m_static.init_state(theta)
+    td, sd = theta, m_dyn.init_state(theta)
+    for _ in range(5):
+        ts, ss = m_static(ts, ss)
+        td, sd = m_dyn(td, sd)
+    for k in theta:
+        np.testing.assert_array_equal(np.asarray(ts[k]), np.asarray(td[k]))
+    assert float(ss.wire_bits) == float(sd.wire_bits)
+
+
+def test_scheduled_kernel_quantizer_in_mixer():
+    """use_kernel + schedule: the Pallas path takes the traced qmax."""
+    w = metropolis_weights(ring_graph(8))
+    theta = {"a": jax.random.normal(jax.random.PRNGKey(5), (8, 128))}
+    cfg = CompressionConfig(kind="int8", use_kernel=True, interpret=True,
+                            block_d=64,
+                            schedule=ScheduleConfig(kind="linear",
+                                                    anneal_rounds=10))
+    mixer = make_dense_mixer(w, compression=cfg)
+    st = mixer.init_state(theta)
+    step = jax.jit(mixer)
+    t = theta
+    for _ in range(12):
+        t, st = step(t, st)
+    # post-anneal: int4-rate bits with per-block (128/64=2) scales
+    assert float(st.wire_bits) == pytest.approx(8 * (4 * 128 + 2 * 32))
+    assert float(tree_node_disagreement(t)) < 1e-2
+
+
+def test_repeat_mixer_accumulates_wire_bits():
+    w = metropolis_weights(ring_graph(8))
+    theta = _ring8_theta()
+    base = make_dense_mixer(w, compression=CompressionConfig(kind="int8"))
+    rep = repeat_mixer(make_dense_mixer(
+        w, compression=CompressionConfig(kind="int8")), 3)
+    t1, s1 = base(theta, base.init_state(theta))
+    t3, s3 = rep(theta, rep.init_state(theta))
+    assert float(s3.wire_bits) == pytest.approx(3 * float(s1.wire_bits))
+    assert int(s3.rounds) == 3
+    assert rep.bytes_per_round(theta) == 3 * base.bytes_per_round(theta)
+
+
+def test_payload_accounting_audit():
+    """ISSUE satellite: int4 nibble packing, per-node f32 scale bytes, and
+    K-divided (not leading-dim-divided) per-node leaf sizes."""
+    c4 = make_compressor(CompressionConfig(kind="int4"))
+    # odd d: 501 packed bytes (one padded nibble) + 4 scale bytes
+    assert c4.payload_bytes(1001) == 501 + 4
+    q, s = c4.compress(jnp.ones((2, 1001), jnp.float32), _keys(0, 2))
+    assert q.shape == (2, 501) and q.dtype == jnp.int8
+    assert s.shape == (2, 1) and s.dtype == jnp.float32
+    c8 = make_compressor(CompressionConfig(kind="int8"))
+    assert c8.payload_bytes(1001) == 1001 + 4
+    # per-node size is size // K even for rank>2 (e.g. TP-sharded) leaves
+    w = metropolis_weights(ring_graph(8))
+    m = make_dense_mixer(w, compression=CompressionConfig(kind="int8"))
+    params = {"w": jnp.zeros((8, 16, 32), jnp.float32)}  # per-node d = 512
+    assert m.bytes_per_round(params) == 8 * (512 + 4)
+
+
+# -- (d) dense vs gossip lowerings agree at a fixed seed (PRNG satellite) ------
+
+def test_dense_gossip_prng_equivalence():
+    """The dense path folds (node, leaf) into the round key exactly like the
+    gossip path, so the two lowerings of the same compressed round agree
+    numerically at a fixed seed (subprocess: 8 devices)."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import CompressionConfig, make_dense_mixer, make_gossip_mixer
+from repro.comm import ScheduleConfig
+from repro.graphs import ring_graph, metropolis_weights, permutation_decomposition
+k = 8
+w = metropolis_weights(ring_graph(k))
+d = permutation_decomposition(w)
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+theta = {"a": jnp.asarray(rng.normal(size=(k, 64)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(k, 3, 5)), jnp.float32)}
+specs = {"a": P("data", None), "b": P("data", None, None)}
+for cfg in (CompressionConfig(kind="int8", seed=7),
+            CompressionConfig(kind="randk", ratio=0.25, seed=7),
+            CompressionConfig(kind="int8", seed=7, schedule=ScheduleConfig(
+                kind="adaptive", warmup_rounds=2, threshold=1.0))):
+    dm = make_dense_mixer(w, compression=cfg)
+    gm = make_gossip_mixer(d, mesh, "data", specs, compression=cfg)
+    td, sd = theta, dm.init_state(theta)
+    tg, sg = theta, gm.init_state(theta)
+    dstep, gstep = jax.jit(dm), jax.jit(gm)
+    for _ in range(6):
+        td, sd = dstep(td, sd)
+        tg, sg = gstep(tg, sg)
+    for name in theta:
+        np.testing.assert_allclose(np.asarray(td[name]), np.asarray(tg[name]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sd.hat[name]),
+                                   np.asarray(sg.hat[name]),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(sd.res_norm), float(sg.res_norm),
+                               rtol=1e-4)
+    assert float(sd.wire_bits) > 0 and float(sg.wire_bits) > 0
+print("OK")
+"""
+    _run_subprocess(script)
+
+
+def _run_subprocess(script, devices=8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
+# -- (e) static comm_bytes vs compiled-HLO collective-permute bytes ------------
+
+def test_comm_bytes_matches_hlo_collective_permute():
+    """ROADMAP satellite: the static per-round estimate must equal the byte
+    count of the collective-permute ops in the compiled gossip program (and
+    the int8 path must put s8 tensors on the wire)."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import CompressionConfig, make_gossip_mixer
+from repro.graphs import ring_graph, metropolis_weights, permutation_decomposition
+from repro.utils.hlo import parse_collectives
+k = 8
+w = metropolis_weights(ring_graph(k))
+d = permutation_decomposition(w)
+mesh = jax.make_mesh((8,), ("data",))
+theta = {"a": jnp.zeros((k, 256), jnp.float32),
+         "b": jnp.zeros((k, 30), jnp.float32)}
+specs = {"a": P("data", None), "b": P("data", None)}
+gm = make_gossip_mixer(d, mesh, "data", specs,
+                       compression=CompressionConfig(kind="int8"))
+st = gm.init_state(theta)
+compiled = jax.jit(gm).lower(theta, st).compile()
+ops = [o for o in parse_collectives(compiled.as_text(), world_size=k)
+       if o.kind == "collective-permute"]
+assert ops, "no collective-permute in compiled gossip program"
+assert any("s8[" in o.line for o in ops), "int8 payload not on the wire"
+# per-device cp bytes x K devices == the static all-senders estimate
+hlo_bytes = sum(o.wire_bytes for o in ops) * k
+est = gm.bytes_per_round(theta)
+assert hlo_bytes == est, (hlo_bytes, est)
+print("OK")
+"""
+    _run_subprocess(script)
+
+
+# -- (f) mix_every > 1 with a stateful compressed mixer ------------------------
+
+def test_mix_every_off_steps_leave_comm_state_consistent():
+    """ISSUE satellite: the lax.cond off-step path must pass CommState
+    through untouched (key, rounds, hat) and report comm_bytes == 0."""
+    w = metropolis_weights(ring_graph(4))
+    mixer = make_dense_mixer(w, compression=CompressionConfig(kind="int8"))
+    cfg = TrainStepConfig(robust=RobustConfig(mu=6.0), mix_every=3,
+                          metrics_disagreement=False,
+                          compression=CompressionConfig(kind="int8"))
+    loss_fn = lambda p, b: jnp.sum(p["w"] ** 2) + 0.0 * jnp.sum(b)
+    step = jax.jit(build_train_step(loss_fn, sgd(0.1), mixer, cfg))
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 16))}
+    state = init_state(params, sgd(0.1), mixer=mixer)
+    batch = jnp.zeros((4, 1))
+    seen = []
+    for i in range(6):
+        prev = state.ef_state
+        state, metrics = step(state, batch)
+        on = (i % 3) == 2
+        seen.append((on, float(metrics["comm_bytes"]),
+                     float(metrics["wire_bits"])))
+        if not on:
+            # off-step: state passes through bit-identically
+            np.testing.assert_array_equal(np.asarray(prev.key),
+                                          np.asarray(state.ef_state.key))
+            assert int(prev.rounds) == int(state.ef_state.rounds)
+            np.testing.assert_array_equal(
+                np.asarray(prev.hat["w"]), np.asarray(state.ef_state.hat["w"]))
+            assert metrics["comm_bytes"] == 0 and metrics["wire_bits"] == 0
+        else:
+            assert float(metrics["comm_bytes"]) > 0
+            assert float(metrics["wire_bits"]) == \
+                8 * float(metrics["comm_bytes"])
+            assert int(state.ef_state.rounds) == int(prev.rounds) + 1
+            assert not np.array_equal(np.asarray(prev.key),
+                                      np.asarray(state.ef_state.key))
+    assert [s[0] for s in seen] == [False, False, True] * 2
+    assert isinstance(state.ef_state, CommState)
+
+
+def test_mix_every_scheduled_comm_bytes_traced():
+    """Scheduled codec + mix_every: comm_bytes is the traced wire_bits/8 on
+    mix steps and exactly 0 on off-steps."""
+    w = metropolis_weights(ring_graph(4))
+    comp = CompressionConfig(kind="int8", schedule=ScheduleConfig(
+        kind="linear", anneal_rounds=1))
+    mixer = make_dense_mixer(w, compression=comp)
+    cfg = TrainStepConfig(robust=RobustConfig(mu=6.0), mix_every=2,
+                          metrics_disagreement=False, compression=comp)
+    loss_fn = lambda p, b: jnp.sum(p["w"] ** 2) + 0.0 * jnp.sum(b)
+    step = jax.jit(build_train_step(loss_fn, sgd(0.1), mixer, cfg))
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 16))}
+    state = init_state(params, sgd(0.1), mixer=mixer)
+    batch = jnp.zeros((4, 1))
+    by_step = []
+    for _ in range(6):
+        state, metrics = step(state, batch)
+        by_step.append(float(metrics["comm_bytes"]))
+    assert by_step[0] == 0 and by_step[2] == 0 and by_step[4] == 0
+    # rounds 0/1/2 of a 1-round linear anneal: int8 wire, then int4 wire
+    assert by_step[1] > by_step[3] > 0
+    assert by_step[3] == by_step[5]
