@@ -6,14 +6,19 @@ B≈sqrt(KT)) and prints the paper's three headline metrics — average accuracy
 worst-distribution accuracy, and the per-device accuracy STDEV — plus the
 communication-efficiency ratio (rounds to a worst-accuracy target).
 
+Both runs drive the scan-compiled `trainer.run` driver via
+`repro.core.run_segments`: batches are sampled/stacked host-side one
+50-step epoch at a time (memory stays bounded) and evaluation runs between
+the compiled programs; see examples/quickstart.py for the single-call
+`on_epoch` hook form over a fully pre-stacked batch tensor.
+
 Run:  PYTHONPATH=src python examples/decentralized_fmnist.py
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DecentralizedTrainer, RobustConfig
+from repro.core import TrainerSpec, run_segments
 from repro.data import make_fmnist_like, pathological_noniid_partition
 from repro.models import mlp_apply, mlp_init
 from repro.models.paper_nets import make_classifier_loss
@@ -21,26 +26,29 @@ from repro.models.paper_nets import make_classifier_loss
 K, T = 10, 600
 LR = (K / T) ** 0.5 * 2.3          # eta = sqrt(K/T), scaled for synthetic data
 BATCH = int((K * T) ** 0.5)        # B = sqrt(KT)
+EVAL_EVERY = 50
 
 
 def train(robust: bool, mu: float = 3.0, seed: int = 0):
     data = make_fmnist_like(n_train=4000, n_test=600, seed=0)
     fed = pathological_noniid_partition(data, K, shards_per_node=2, seed=seed)
-    trainer = DecentralizedTrainer(
-        make_classifier_loss(mlp_apply), predict_fn=mlp_apply, num_nodes=K,
-        graph="erdos_renyi", graph_kwargs={"p": 0.3, "seed": seed},
-        robust=RobustConfig(mu=mu, enabled=robust), lr=LR, grad_clip=2.0)
+    trainer = TrainerSpec(
+        num_nodes=K, graph="erdos_renyi",
+        graph_kwargs={"p": 0.3, "seed": seed},
+        mu=mu, robust=robust, lr=LR, grad_clip=2.0, seed=seed,
+    ).build(make_classifier_loss(mlp_apply), mlp_apply)
     state = trainer.init(mlp_init(jax.random.PRNGKey(seed)))
     rng = np.random.default_rng(seed)
     x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200, seed=seed)
     history = []
-    for step in range(T):
-        xb, yb = fed.sample_batch(rng, BATCH)
-        state, _ = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
-        if step % 50 == 0 or step == T - 1:
-            s = trainer.eval_local_distributions(state, x_nodes, y_nodes)
-            s["step"] = step
-            history.append(s)
+
+    def on_segment(last_step, seg_state, _metrics):
+        s = trainer.eval_local_distributions(seg_state, x_nodes, y_nodes)
+        s["step"] = last_step
+        history.append(s)
+
+    run_segments(trainer, state, lambda step: fed.sample_batch(rng, BATCH),
+                 T, EVAL_EVERY, on_segment)
     return history
 
 

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import DecentralizedTrainer, RobustConfig
+from repro.core import TrainerSpec
 from repro.data import make_node_token_streams
 from repro.models import TransformerLM
 
@@ -42,14 +42,13 @@ def main():
                                   n_kv_heads=2, d_ff=1024, vocab=2048)
     model = TransformerLM(cfg)
 
-    trainer = DecentralizedTrainer(
-        model.loss,
+    trainer = TrainerSpec(
         num_nodes=args.nodes,
         graph="ring",
-        robust=RobustConfig(mu=args.mu),
+        mu=args.mu,
         lr=0.02,
         grad_clip=1.0,
-    )
+    ).build(model.loss)
     print(f"model={cfg.name} params={model.num_params():,} "
           f"nodes={args.nodes} ring rho={trainer.rho:.3f} mu={args.mu}")
 
@@ -57,17 +56,21 @@ def main():
     streams = make_node_token_streams(args.nodes, cfg.vocab, hetero=True)
 
     t0 = time.time()
-    for step in range(args.steps):
-        toks = np.stack(
-            [s.next_batch(args.batch_per_node, args.seq_len) for s in streams])
-        state, m = trainer.step(state, {"tokens": jnp.asarray(toks)})
-        if step % 5 == 0 or step == args.steps - 1:
-            lam = float(m["lambda_max"])
-            print(f"step {step:4d}  loss_mean={float(m['loss_mean']):.4f}  "
-                  f"loss_worst={float(m['loss_worst']):.4f}  "
-                  f"robust_obj={float(m['robust_objective']):.4f}  "
-                  f"lambda_max={lam:.3f}  "
-                  f"disagree={float(m['disagreement']):.2e}")
+    # scan-compiled driver: stack 5 steps of token batches per segment and
+    # run them as one program, logging between compiled segments
+    for start in range(0, args.steps, 5):
+        n = min(5, args.steps - start)
+        toks = np.stack([
+            np.stack([s.next_batch(args.batch_per_node, args.seq_len)
+                      for s in streams])
+            for _ in range(n)])
+        state, ms = trainer.run(state, {"tokens": jnp.asarray(toks)})
+        step = start + n - 1
+        print(f"step {step:4d}  loss_mean={float(ms['loss_mean'][-1]):.4f}  "
+              f"loss_worst={float(ms['loss_worst'][-1]):.4f}  "
+              f"robust_obj={float(ms['robust_objective'][-1]):.4f}  "
+              f"lambda_max={float(ms['lambda_max'][-1]):.3f}  "
+              f"disagree={float(ms['disagreement'][-1]):.2e}")
     dt = time.time() - t0
     tokens = args.steps * args.nodes * args.batch_per_node * args.seq_len
     print(f"\n{tokens:,} tokens in {dt:.1f}s ({tokens / dt:,.0f} tok/s)")

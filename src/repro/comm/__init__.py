@@ -1,5 +1,8 @@
 """Compressed-gossip communication subsystem.
 
+protocol.py    — the uniform :class:`Mixer` protocol every consensus
+                 operator implements (``mix(theta, CommState, *, round)``),
+                 :class:`CommState` and its :class:`CommMetrics` view.
 compressors.py — wire codecs (bf16 / int8 / int4 stochastic rounding /
                  topk / randk) behind the :class:`Compressor` protocol,
                  with traced dynamic-rate support.
@@ -30,10 +33,16 @@ from repro.comm.compressors import (
     quant_bits,
 )
 from repro.comm.mixers import (
-    CommState,
     CompressedDenseMixer,
     CompressedGossipMixer,
     ef_residual,
+)
+from repro.comm.protocol import (
+    CommMetrics,
+    CommState,
+    Mixer,
+    trivial_comm_state,
+    trivial_state_specs,
 )
 from repro.comm.schedule import CompressionSchedule, ScheduleConfig
 
@@ -41,7 +50,9 @@ __all__ = [
     "CompressionConfig", "Compressor", "make_compressor",
     "NoCompressor", "BF16Compressor", "IntQuantizer", "KernelInt8Quantizer",
     "TopKCompressor", "RandKCompressor",
-    "CommState", "CompressedDenseMixer", "CompressedGossipMixer",
+    "Mixer", "CommMetrics", "CommState",
+    "trivial_comm_state", "trivial_state_specs",
+    "CompressedDenseMixer", "CompressedGossipMixer",
     "ef_residual", "per_node_keys", "fold_leaf", "quant_bits",
     "ScheduleConfig", "CompressionSchedule",
 ]

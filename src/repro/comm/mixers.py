@@ -49,14 +49,13 @@ Two lowerings, mirroring ``repro.core.consensus``:
   and the receiver dequantize-accumulates into its running mix buffer
   s_i = Σ_j W_ij θ̂_j.  A full-precision wire buffer is never materialized.
 
-Both are *stateful* mixers: ``mix(theta, CommState) -> (theta, CommState)``
-with ``stateful = True`` so ``build_train_step`` threads the state through
-``DecentralizedState.ef_state``.
+Both follow the uniform :class:`repro.comm.protocol.Mixer` protocol —
+``mix(theta, CommState, *, round) -> (theta, CommState)`` — so
+``build_train_step`` threads the state through ``DecentralizedState.comm``
+exactly as it does for uncompressed mixers.
 """
 
 from __future__ import annotations
-
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -68,37 +67,9 @@ from repro.comm.compressors import (
     make_compressor,
     per_node_keys,
 )
+from repro.comm.protocol import CommState, Mixer
 from repro.comm.schedule import CompressionSchedule
 from repro.utils.compat import shard_map_unchecked
-
-
-class CommState(NamedTuple):
-    """Per-node compression state threaded through the train loop.
-
-    hat:      public copies θ̂ (float32, same structure/shape as params); the
-              error-feedback residual is θ − θ̂.  () when error_feedback=False
-              (memoryless scheme).
-    hat_mix:  running s_i = Σ_j W_ij θ̂_j (gossip lowering only, EF mode; ()
-              otherwise) so each round only adds the received innovations.
-    key:      PRNG key for stochastic rounding / random sparsification.
-    res_norm: f32 — innovation norm ‖θ − θ̂‖_F (over all nodes and leaves)
-              offered to the codec on the last round; 0 before the first
-              round and in memoryless mode.  Drives adaptive schedules and
-              the ``ef_residual_norm`` metric.
-    res_ref:  f32 — post-warmup reference norm latched by an adaptive
-              schedule (0 until latched / for other schedule kinds).
-    rounds:   int32 — compressed gossip rounds completed.
-    wire_bits: f32 — wire bits injected by the last round (all senders,
-              rate-aware under a schedule).
-    """
-
-    hat: Any
-    hat_mix: Any
-    key: jax.Array
-    res_norm: jax.Array
-    res_ref: jax.Array
-    rounds: jax.Array
-    wire_bits: jax.Array
 
 
 def ef_residual(theta, state: CommState):
@@ -130,9 +101,7 @@ def _leaf_payload_bytes(compressor, params, k: int) -> int:
     return total
 
 
-class _CompressedMixerBase:
-    stateful = True
-
+class _CompressedMixerBase(Mixer):
     def __init__(self, compression: CompressionConfig):
         self.compression = compression
         self.compressor = make_compressor(compression)
@@ -142,6 +111,10 @@ class _CompressedMixerBase:
             CompressionSchedule(compression.schedule, compression.kind,
                                 compression.ratio)
             if compression.schedule is not None else None)
+
+    @property
+    def traced_wire(self) -> bool:
+        return self.schedule is not None
 
     # -- state ----------------------------------------------------------------
 
@@ -222,7 +195,7 @@ class CompressedDenseMixer(_CompressedMixerBase):
         self.w = jnp.asarray(np.asarray(w), jnp.float32)
         self.k = int(np.asarray(w).shape[0])
 
-    def __call__(self, theta, state: CommState):
+    def __call__(self, theta, state: CommState, *, round=None):
         key, sub = jax.random.split(state.key)
         rate = self._rate(state)
         node_ks = per_node_keys(sub, jnp.arange(self.k))
@@ -290,6 +263,9 @@ class CompressedGossipMixer(_CompressedMixerBase):
                          for w in decomp.matching_weights]
         self.perms = decomp.ppermute_pairs()
 
+    def __call__(self, theta, state: CommState, *, round=None):
+        return self._gossip_round(theta, state)
+
     def _init_hat_mix(self, params):
         return _f32_zeros_like(params) if self.ef else ()
 
@@ -304,7 +280,7 @@ class CompressedGossipMixer(_CompressedMixerBase):
             idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
         return idx
 
-    def __call__(self, theta, state: CommState):
+    def _gossip_round(self, theta, state: CommState):
         key, sub = jax.random.split(state.key)
         rate = self._rate(state)
         p_node = jax.sharding.PartitionSpec(self.axis)

@@ -2,11 +2,19 @@
 
 robust.py     — the KL-regularized DRO objective and the exp(l/mu)/mu scale
 consensus.py  — mixing operators (dense einsum / ppermute gossip / hierarchical)
+                behind the uniform stateful Mixer protocol (repro.comm.protocol)
 drdsgd.py     — DR-DSGD & DSGD train-step builders over node-stacked pytrees
-api.py        — DecentralizedTrainer high-level API
+api.py        — DecentralizedTrainer high-level API (step + scan-based run)
+spec.py       — TrainerSpec: declarative construction shared by CLI/benchmarks
 """
 
-from repro.comm import CommState, CompressionConfig, ScheduleConfig
+from repro.comm import (
+    CommMetrics,
+    CommState,
+    CompressionConfig,
+    Mixer,
+    ScheduleConfig,
+)
 from repro.core.robust import (
     RobustConfig,
     robust_scale,
@@ -14,7 +22,11 @@ from repro.core.robust import (
     mixture_weights,
 )
 from repro.core.consensus import (
-    Mixer,
+    DenseMixer,
+    GossipMixer,
+    HierarchicalMixer,
+    IdentityMixer,
+    RepeatMixer,
     make_dense_mixer,
     make_gossip_mixer,
     make_hierarchical_mixer,
@@ -29,14 +41,22 @@ from repro.core.drdsgd import (
     init_state,
     replicate_params,
 )
-from repro.core.api import DecentralizedTrainer
+from repro.core.api import DecentralizedTrainer, run_segments
+from repro.core.spec import (
+    TrainerSpec,
+    add_compression_cli_args,
+    compression_from_args,
+)
 
 __all__ = [
-    "CommState", "CompressionConfig", "ScheduleConfig",
+    "CommMetrics", "CommState", "CompressionConfig", "ScheduleConfig",
     "RobustConfig", "robust_scale", "robust_objective", "mixture_weights",
-    "Mixer", "make_dense_mixer", "make_gossip_mixer",
+    "Mixer", "DenseMixer", "GossipMixer", "HierarchicalMixer",
+    "IdentityMixer", "RepeatMixer",
+    "make_dense_mixer", "make_gossip_mixer",
     "make_hierarchical_mixer", "make_identity_mixer", "repeat_mixer",
     "DecentralizedState", "TrainStepConfig", "build_train_step",
     "build_eval_step", "init_state", "replicate_params",
-    "DecentralizedTrainer",
+    "DecentralizedTrainer", "run_segments",
+    "TrainerSpec", "add_compression_cli_args", "compression_from_args",
 ]

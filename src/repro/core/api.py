@@ -7,8 +7,17 @@ This is the public API used by the examples and benchmarks:
         graph="erdos_renyi", graph_kwargs={"p": 0.3},
         robust=RobustConfig(mu=6.0), lr=0.05)
     state = trainer.init(params_single)
-    state, metrics = trainer.step(state, batch)      # jitted
+    state, metrics = trainer.step(state, batch)      # one jitted step
+    state, ms = trainer.run(state, batches)          # scan-compiled multi-step
     accs = trainer.eval_per_node(state, x_test, y_test)
+
+``run`` is the hot-loop driver: it folds N train steps into ONE compiled
+``jax.lax.scan`` program with the carried state donated, so the per-step
+Python dispatch overhead of the ``step`` loop disappears (see EXPERIMENTS.md
+§Run-driver for measured steps/s).  ``batches`` is the step-loop batch pytree
+stacked along a leading time axis; metrics come back stacked the same way.
+Declarative construction (CLI flags, benchmarks, examples) goes through
+:class:`repro.core.spec.TrainerSpec` → ``spec.build(loss_fn, ...)``.
 """
 
 from __future__ import annotations
@@ -21,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import CompressionConfig
-from repro.core.consensus import Mixer, make_dense_mixer, make_identity_mixer
+from repro.comm.protocol import Mixer
+from repro.core.consensus import make_dense_mixer, make_identity_mixer
 from repro.core.drdsgd import (
     DecentralizedState,
     TrainStepConfig,
@@ -33,6 +43,31 @@ from repro.core.drdsgd import (
 from repro.core.robust import RobustConfig
 from repro.graphs import build_graph, metropolis_weights, spectral_norm
 from repro.optim import Optimizer, sgd
+
+
+def run_segments(trainer: "DecentralizedTrainer", state, sample_batch,
+                 steps: int, seg: int, on_segment=None):
+    """Drive ``trainer.run`` in host-sampled logging segments.
+
+    For data pipelines that sample batches host-side per step
+    (``sample_batch(step) -> batch pytree`` of numpy/array leaves): batches
+    are stacked ``seg`` at a time, so device memory holds at most one
+    segment while the scan driver amortizes dispatch across it.
+    ``on_segment(last_step, state, seg_metrics)`` runs between compiled
+    segments (the epoch-level host hook; same retention caveat as
+    ``run`` — eval the state inside the hook, don't keep it).
+    """
+    done = 0
+    while done < steps:
+        n = min(seg, steps - done)
+        stacked = jax.tree.map(
+            lambda *xs: jnp.asarray(np.stack(xs)),
+            *[sample_batch(done + i) for i in range(n)])
+        state, ms = trainer.run(state, stacked)
+        done += n
+        if on_segment is not None:
+            on_segment(done - 1, state, ms)
+    return state
 
 
 @dataclasses.dataclass
@@ -54,6 +89,8 @@ class DecentralizedTrainer:
                                           # wire codec for the consensus step
                                           # (repro.comm); None = full precision
     mix_every: int = 1                    # consensus period (local SGD when >1)
+    metrics_disagreement: bool = True     # Lemma-3 discrepancy metric; costs an
+                                          # extra cross-node reduction per step
     loss_has_aux: bool = False
     jit: bool = True
 
@@ -79,21 +116,42 @@ class DecentralizedTrainer:
                 else make_dense_mixer(self.w, compression=self.compression)
             )
         elif self.compression is not None and self.compression.enabled \
-                and not getattr(self.mixer, "stateful", False):
+                and self.mixer.compression is None:
             raise ValueError(
                 "compression is set but the provided mixer is uncompressed; "
                 "build the mixer with the same CompressionConfig")
         if self.optimizer is None:
             self.optimizer = sgd(self.lr)
-        step_cfg = TrainStepConfig(robust=self.robust, grad_clip=self.grad_clip,
-                                   compression=self.compression,
-                                   mix_every=self.mix_every)
-        self._train_step = build_train_step(
+        step_cfg = TrainStepConfig(
+            robust=self.robust, grad_clip=self.grad_clip,
+            metrics_disagreement=self.metrics_disagreement,
+            compression=self.compression, mix_every=self.mix_every)
+        self._train_step_fn = build_train_step(
             self.loss_fn, self.optimizer, self.mixer, step_cfg,
             loss_has_aux=self.loss_has_aux,
         )
-        if self.jit:
-            self._train_step = jax.jit(self._train_step)
+        self._train_step = (jax.jit(self._train_step_fn) if self.jit
+                            else self._train_step_fn)
+
+        def scan_run(state, batches):
+            return jax.lax.scan(self._train_step_fn, state, batches)
+
+        def eager_run(state, batches):
+            # jit=False debugging path: plain Python loop so prints and
+            # breakpoints inside loss_fn still fire (scan would trace them)
+            t = jax.tree.leaves(batches)[0].shape[0]
+            out = []
+            for i in range(t):
+                state, m = self._train_step_fn(
+                    state, jax.tree.map(lambda x: x[i], batches))
+                out.append(m)
+            return state, jax.tree.map(lambda *xs: jnp.stack(xs), *out)
+
+        # the multi-step driver: one compiled program for N steps, with the
+        # carried DecentralizedState donated (params/opt/comm buffers are
+        # reused in place on backends that support donation)
+        self._run = (jax.jit(scan_run, donate_argnums=(0,)) if self.jit
+                     else eager_run)
         if self.predict_fn is not None:
             self._eval_step = build_eval_step(self.predict_fn)
             if self.jit:
@@ -111,6 +169,60 @@ class DecentralizedTrainer:
 
     def step(self, state: DecentralizedState, batch):
         return self._train_step(state, batch)
+
+    def run(self, state: DecentralizedState, batches, *, steps: int | None = None,
+            epoch_steps: int | None = None, on_epoch=None):
+        """Run many train steps as one ``lax.scan`` program.
+
+        Args:
+          state: carried :class:`DecentralizedState` — DONATED to the
+            compiled program; do not reuse the passed-in buffers afterwards
+            (on CPU donation is a no-op, but portable callers should treat
+            the argument as consumed).
+          batches: the per-step batch pytree stacked along a new leading time
+            axis, i.e. every leaf is (T, K, ...) where ``step`` takes
+            (K, ...).  Build it host-side with ``np.stack``.
+          steps: optional step count; defaults to the leading dim T of the
+            stacked batches, and slices the batches when smaller.
+          epoch_steps / on_epoch: host-callback hook for eval/logging —
+            the scan is chopped into epochs of ``epoch_steps`` steps and
+            ``on_epoch(epoch_index, state, epoch_metrics)`` runs as plain
+            Python between the compiled segments (``epoch_metrics`` is the
+            metrics dict of that segment, each leaf (epoch_steps,)).  Equal
+            epochs reuse one compiled program; a ragged final epoch costs
+            one extra compile.  The per-epoch ``state`` handed to the hook
+            is donated into the NEXT segment: read/eval it inside the hook,
+            but do not retain it (on donation backends its buffers are
+            invalidated as soon as the next segment launches; copy leaves
+            you need to keep).
+
+        Returns:
+          (final_state, metrics) with every metric stacked to (steps,).
+        """
+        leaves = jax.tree.leaves(batches)
+        if not leaves:
+            raise ValueError("run() needs a non-empty batches pytree")
+        total = leaves[0].shape[0]
+        if steps is None:
+            steps = total
+        elif steps > total:
+            raise ValueError(f"steps={steps} > stacked batches T={total}")
+        elif steps < total:
+            batches = jax.tree.map(lambda x: x[:steps], batches)
+        if on_epoch is None or epoch_steps is None or epoch_steps >= steps:
+            state, metrics = self._run(state, batches)
+            if on_epoch is not None:
+                on_epoch(0, state, metrics)
+            return state, metrics
+        chunks = []
+        for e, start in enumerate(range(0, steps, epoch_steps)):
+            seg = jax.tree.map(
+                lambda x: x[start:start + epoch_steps], batches)
+            state, ms = self._run(state, seg)
+            on_epoch(e, state, ms)
+            chunks.append(ms)
+        metrics = jax.tree.map(lambda *xs: jnp.concatenate(xs), *chunks)
+        return state, metrics
 
     def eval_per_node(self, state: DecentralizedState, x, y) -> jax.Array:
         if self.predict_fn is None:
@@ -149,13 +261,15 @@ class DecentralizedTrainer:
         subsets of the consensus-model accuracy; per-node stats use each
         node's own model on the full test set (paper Figs. 2-4).
         """
-        accs = []
-        for x, y in per_class_sets:
-            if len(y) == 0:
-                continue
-            accs.append(float(jnp.mean(self.eval_per_node(state, x, y))))
-        x_all = np.concatenate([x for x, y in per_class_sets if len(y)])
-        y_all = np.concatenate([y for x, y in per_class_sets if len(y)])
+        kept = [(x, y) for x, y in per_class_sets if len(y)]
+        if not kept:
+            raise ValueError(
+                "eval_worst_distribution needs at least one non-empty test "
+                "subset; all per_class_sets entries are empty")
+        accs = [float(jnp.mean(self.eval_per_node(state, x, y)))
+                for x, y in kept]
+        x_all = np.concatenate([x for x, _ in kept])
+        y_all = np.concatenate([y for _, y in kept])
         node_accs = np.asarray(self.eval_per_node(state, x_all, y_all))
         return {
             "acc_avg": float(node_accs.mean()),

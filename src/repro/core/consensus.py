@@ -17,29 +17,35 @@ doubly-stochastic mixing; they differ in the collectives XLA emits:
   with gossip over the outer node axis. Lets K ≪ data-parallel world size so
   that per-chip parameter memory stays bounded for multi-100B models.
 
-Every factory accepts a ``compression: CompressionConfig`` (``repro.comm``):
-when enabled it returns the corresponding *stateful* compressed mixer
-(``mix(theta, CommState) -> (theta, CommState)``, ``stateful = True``) that
-gossips error-feedback-corrected compressed innovations instead of raw
-parameters.  Plain mixers stay simple ``theta -> theta`` callables and carry
-a ``bytes_per_round`` estimator for the per-step ``comm_bytes`` metric.
+Protocol v2: every factory returns a :class:`repro.comm.protocol.Mixer`
+with ONE calling convention, compressed or not::
+
+    comm  = mixer.init_state(params)               # CommState
+    theta, comm = mixer(theta, comm, round=step)   # one consensus round
+
+Uncompressed mixers carry the *trivial* ``CommState`` (no public copies, a
+never-consumed PRNG key) and stamp their static full-precision ``wire_bits``
+into it each round; ``mixer.state_specs(param_specs)`` gives matching
+PartitionSpecs for pjit.  Every factory accepts a ``compression:
+CompressionConfig`` (``repro.comm``): when enabled it returns the
+corresponding compressed mixer that gossips error-feedback-corrected
+compressed innovations instead of raw parameters — same protocol, richer
+state.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import CompressedDenseMixer, CompressedGossipMixer, CompressionConfig
+from repro.comm.protocol import Mixer
 from repro.graphs.mixing import MixingDecomposition
 from repro.utils.compat import shard_map
 from repro.utils.tree import tree_bytes
-
-Mixer = Callable[[Any], Any]  # node-stacked pytree -> node-stacked pytree
 
 AxisName = str | tuple[str, ...]
 
@@ -48,26 +54,34 @@ def _compression_enabled(compression: CompressionConfig | None) -> bool:
     return compression is not None and compression.enabled
 
 
-def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32,
-                     compression: CompressionConfig | None = None) -> Mixer:
+class DenseMixer(Mixer):
     """θ_i ← Σ_j W_ij θ_j via einsum along the leading node axis."""
-    if _compression_enabled(compression):
-        return CompressedDenseMixer(w, compression)
-    w = jnp.asarray(np.asarray(w), dtype=compute_dtype)
 
-    def mix(theta):
+    def __init__(self, w: np.ndarray, compute_dtype=jnp.float32):
+        self.w = jnp.asarray(np.asarray(w), dtype=compute_dtype)
+        self.compute_dtype = compute_dtype
+
+    def _mix(self, theta):
         def leaf(x):
             out = jnp.einsum(
-                "kl,l...->k...", w, x.astype(compute_dtype),
+                "kl,l...->k...", self.w, x.astype(self.compute_dtype),
                 precision=jax.lax.Precision.HIGHEST,
             )
             return out.astype(x.dtype)
 
         return jax.tree.map(leaf, theta)
 
-    # uncompressed round: every node injects its full param block once
-    mix.bytes_per_round = tree_bytes
-    return mix
+    def bytes_per_round(self, params) -> int:
+        # uncompressed round: every node injects its full param block once
+        return tree_bytes(params)
+
+
+def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32,
+                     compression: CompressionConfig | None = None) -> Mixer:
+    """Dense einsum mixing (or its compressed counterpart)."""
+    if _compression_enabled(compression):
+        return CompressedDenseMixer(w, compression)
+    return DenseMixer(w, compute_dtype)
 
 
 def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
@@ -100,13 +114,47 @@ def gossip_mix_local(theta_local, self_w, match_ws, perms, axis: AxisName):
     return jax.tree.map(leaf, theta_local)
 
 
-def _gossip_bytes_per_round(decomp: MixingDecomposition, k: int):
-    sends = sum(len(pairs) for pairs in decomp.ppermute_pairs())
+class GossipMixer(Mixer):
+    """Sparse gossip mixing: one collective-permute per graph matching.
 
-    def estimate(params):
-        return sends * tree_bytes(params) // k
+    ``param_specs`` is a pytree of PartitionSpecs matching the *node-stacked*
+    params (leading dim partitioned over ``node_axis``); it is used for
+    shard_map in/out specs so tensor-parallel dims stay sharded.
+    """
 
-    return estimate
+    def __init__(self, decomp: MixingDecomposition, mesh: jax.sharding.Mesh,
+                 node_axis: AxisName, param_specs):
+        axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+        k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
+        k = decomp.self_weights.shape[0]
+        if k != k_mesh:
+            raise ValueError(
+                f"gossip mixer needs K == mesh node size: K={k}, "
+                f"mesh {axes}={k_mesh}")
+        self.k = k
+        self.mesh = mesh
+        self.axis: AxisName = (node_axis if isinstance(node_axis, str)
+                               else tuple(node_axis))
+        self.param_specs = param_specs
+        self.self_w = jnp.asarray(decomp.self_weights, jnp.float32)
+        self.match_ws = [jnp.asarray(w, jnp.float32)
+                         for w in decomp.matching_weights]
+        self.perms = decomp.ppermute_pairs()
+        self._p_node = jax.sharding.PartitionSpec(self.axis)
+
+    def _mix(self, theta):
+        body = partial(gossip_mix_local, axis=self.axis, perms=self.perms)
+        return shard_map(
+            lambda t, sw, mws: body(t, sw, mws),
+            mesh=self.mesh,
+            in_specs=(self.param_specs, self._p_node,
+                      [self._p_node] * len(self.match_ws)),
+            out_specs=self.param_specs,
+        )(theta, self.self_w, list(self.match_ws))
+
+    def bytes_per_round(self, params) -> int:
+        sends = sum(len(pairs) for pairs in self.perms)
+        return sends * tree_bytes(params) // self.k
 
 
 def make_gossip_mixer(
@@ -116,39 +164,42 @@ def make_gossip_mixer(
     param_specs,
     compression: CompressionConfig | None = None,
 ) -> Mixer:
-    """Sparse gossip mixing: one collective-permute per graph matching.
-
-    ``param_specs`` is a pytree of PartitionSpecs matching the *node-stacked*
-    params (leading dim partitioned over ``node_axis``); it is used for
-    shard_map in/out specs so tensor-parallel dims stay sharded.
-    """
+    """Gossip mixing over the mesh node axis (or its compressed counterpart)."""
     if _compression_enabled(compression):
         return CompressedGossipMixer(decomp, mesh, node_axis, param_specs,
                                      compression)
-    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
-    k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
-    k = decomp.self_weights.shape[0]
-    if k != k_mesh:
-        raise ValueError(
-            f"gossip mixer needs K == mesh node size: K={k}, mesh {axes}={k_mesh}"
-        )
-    axis: AxisName = node_axis if isinstance(node_axis, str) else tuple(node_axis)
-    self_w = jnp.asarray(decomp.self_weights, jnp.float32)
-    match_ws = [jnp.asarray(w, jnp.float32) for w in decomp.matching_weights]
-    perms = decomp.ppermute_pairs()
-    p_node = jax.sharding.PartitionSpec(axis)
+    return GossipMixer(decomp, mesh, node_axis, param_specs)
 
-    def mix(theta):
-        body = partial(gossip_mix_local, axis=axis, perms=perms)
+
+class HierarchicalMixer(GossipMixer):
+    """FSDP-inside / gossip-across: psum-mean over ``replica_axis`` then gossip.
+
+    Node-stacked leaves are *replicated* across ``replica_axis`` (each node's
+    replicas hold divergent gradient contributions that are averaged here),
+    then the per-node consensus step runs over ``node_axis``.
+    """
+
+    def __init__(self, decomp, mesh, node_axis, replica_axis: str,
+                 param_specs):
+        super().__init__(decomp, mesh, node_axis, param_specs)
+        self.replica_axis = replica_axis
+        self._r_size = mesh.shape[replica_axis]
+
+    def _mix(self, theta):
+        def body(t, sw, mws):
+            # average the within-node replicas (plain DP all-reduce over ICI)
+            t = jax.tree.map(
+                lambda x: jax.lax.psum(x, self.replica_axis) / self._r_size, t
+            )
+            return gossip_mix_local(t, sw, mws, self.perms, self.axis)
+
         return shard_map(
-            lambda t, sw, mws: body(t, sw, mws),
-            mesh=mesh,
-            in_specs=(param_specs, p_node, [p_node] * len(match_ws)),
-            out_specs=param_specs,
-        )(theta, self_w, list(match_ws))
-
-    mix.bytes_per_round = _gossip_bytes_per_round(decomp, k)
-    return mix
+            body,
+            mesh=self.mesh,
+            in_specs=(self.param_specs, self._p_node,
+                      [self._p_node] * len(self.match_ws)),
+            out_specs=self.param_specs,
+        )(theta, self.self_w, list(self.match_ws))
 
 
 def make_hierarchical_mixer(
@@ -159,57 +210,28 @@ def make_hierarchical_mixer(
     param_specs,
     compression: CompressionConfig | None = None,
 ) -> Mixer:
-    """FSDP-inside / gossip-across: psum-mean over ``replica_axis`` then gossip.
-
-    Node-stacked leaves are *replicated* across ``replica_axis`` (each node's
-    replicas hold divergent gradient contributions that are averaged here),
-    then the per-node consensus step runs over ``node_axis``.
-    """
+    """Hierarchical replica-average + gossip (or its compressed counterpart)."""
     if _compression_enabled(compression):
         return CompressedGossipMixer(decomp, mesh, node_axis, param_specs,
                                      compression, replica_axis=replica_axis)
-    axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
-    k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
-    k = decomp.self_weights.shape[0]
-    if k != k_mesh:
-        raise ValueError(f"K={k} != mesh node size {k_mesh}")
-    axis: AxisName = node_axis if isinstance(node_axis, str) else tuple(node_axis)
-    self_w = jnp.asarray(decomp.self_weights, jnp.float32)
-    match_ws = [jnp.asarray(w, jnp.float32) for w in decomp.matching_weights]
-    perms = decomp.ppermute_pairs()
-    p_node = jax.sharding.PartitionSpec(axis)
-    r_size = mesh.shape[replica_axis]
+    return HierarchicalMixer(decomp, mesh, node_axis, replica_axis, param_specs)
 
-    def mix(theta):
-        def body(t, sw, mws):
-            # average the within-node replicas (plain DP all-reduce over ICI)
-            t = jax.tree.map(
-                lambda x: jax.lax.psum(x, replica_axis) / r_size, t
-            )
-            return gossip_mix_local(t, sw, mws, perms, axis)
 
-        return shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(param_specs, p_node, [p_node] * len(match_ws)),
-            out_specs=param_specs,
-        )(theta, self_w, list(match_ws))
+class IdentityMixer(Mixer):
+    """No communication — for ablations (pure local SGD)."""
 
-    mix.bytes_per_round = _gossip_bytes_per_round(decomp, k)
-    return mix
+    def _mix(self, theta):
+        return theta
+
+    def bytes_per_round(self, params) -> int:
+        return 0
 
 
 def make_identity_mixer() -> Mixer:
-    """No communication — for ablations (pure local SGD)."""
-
-    def mix(theta):
-        return theta
-
-    mix.bytes_per_round = lambda params: 0
-    return mix
+    return IdentityMixer()
 
 
-def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
+class RepeatMixer(Mixer):
     """θ ← θ·W^rounds: multiple gossip rounds per optimizer step.
 
     Theorem 1's consensus term contracts like ρ^rounds, so m rounds on a
@@ -217,29 +239,38 @@ def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
     a knob for trading interconnect bytes against the convergence constant
     (see EXPERIMENTS.md §Perf A4 for the measured trade).
     """
-    if rounds < 1:
-        raise ValueError("rounds must be >= 1")
-    if getattr(mixer, "stateful", False):
-        def mix_stateful(theta, comm_state):
-            total_bits = jnp.float32(0.0)
-            for _ in range(rounds):
-                theta, comm_state = mixer(theta, comm_state)
-                total_bits = total_bits + comm_state.wire_bits
-            # wire_bits is per-*step* accounting: sum the inner rounds
-            return theta, comm_state._replace(wire_bits=total_bits)
 
-        mix_stateful.stateful = True
-        mix_stateful.init_state = mixer.init_state
-        mix_stateful.state_specs = getattr(mixer, "state_specs", None)
-        mix_stateful.bytes_per_round = (
-            lambda params: rounds * mixer.bytes_per_round(params))
-        return mix_stateful
+    def __init__(self, mixer: Mixer, rounds: int):
+        if rounds < 1:
+            raise ValueError("rounds must be >= 1")
+        self.inner = mixer
+        self.rounds = rounds
 
-    def mix(theta):
-        for _ in range(rounds):
-            theta = mixer(theta)
-        return theta
+    @property
+    def compression(self):
+        return self.inner.compression
 
-    inner_bytes = getattr(mixer, "bytes_per_round", tree_bytes)
-    mix.bytes_per_round = lambda params: rounds * inner_bytes(params)
-    return mix
+    @property
+    def traced_wire(self) -> bool:
+        return self.inner.traced_wire
+
+    def init_state(self, params):
+        return self.inner.init_state(params)
+
+    def state_specs(self, param_specs):
+        return self.inner.state_specs(param_specs)
+
+    def __call__(self, theta, state, *, round=None):
+        total_bits = jnp.float32(0.0)
+        for _ in range(self.rounds):
+            theta, state = self.inner(theta, state, round=round)
+            total_bits = total_bits + state.wire_bits
+        # wire_bits is per-*step* accounting: sum the inner rounds
+        return theta, state._replace(wire_bits=total_bits)
+
+    def bytes_per_round(self, params) -> int:
+        return self.rounds * self.inner.bytes_per_round(params)
+
+
+def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:
+    return RepeatMixer(mixer, rounds)

@@ -6,7 +6,12 @@ The train step operates on a :class:`DecentralizedState` whose params pytree is
   1. per-node minibatch gradient  g_i  and minibatch loss  ℓ̄_i   (vmap over K)
   2. robust scale   s_i = exp(ℓ̄_i/μ)/μ     (DR-DSGD; s_i = 1 for DSGD)
   3. local update   θ_i⁺ = opt(θ_i, s_i·g_i)
-  4. consensus      θ ← mix(θ⁺)            (dense einsum or ppermute gossip)
+  4. consensus      θ, comm ← mix(θ⁺, comm, round=step)
+
+Step 4 is the uniform Mixer protocol (``repro.comm.protocol``): every mixer
+— identity, dense, gossip, hierarchical, compressed, repeated — threads one
+``CommState`` through ``DecentralizedState.comm``, so there is exactly one
+consensus code path regardless of the wire codec.
 
 Distribution: under pjit the node axis is sharded over the mesh's data axes,
 so step 1-3 are embarrassingly parallel and step 4 is the only communication
@@ -22,10 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import CompressionConfig
-from repro.core.consensus import Mixer
+from repro.comm.protocol import CommState, Mixer, trivial_comm_state
 from repro.core.robust import RobustConfig, mixture_weights, robust_objective, robust_scale
 from repro.optim.optimizers import Optimizer
-from repro.utils.tree import tree_bytes, tree_node_disagreement
+from repro.utils.tree import tree_node_disagreement
 
 LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar loss
 
@@ -34,7 +39,12 @@ class DecentralizedState(NamedTuple):
     params: Any          # node-stacked pytree, leading axis K
     opt_state: Any
     step: jax.Array      # scalar int32
-    ef_state: Any = ()   # comm.CommState for compressed mixers, else ()
+    comm: Any = ()       # the mixer's CommState (trivial for uncompressed)
+
+    @property
+    def ef_state(self):
+        """Pre-v2 alias for :attr:`comm` (the CommState of the mixer)."""
+        return self.comm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,22 +59,23 @@ class TrainStepConfig:
                                           # wire codec the mixer was built
                                           # with (repro.comm); recorded here
                                           # so the step can sanity-check the
-                                          # mixer and report comm_bytes
+                                          # mixer
 
 
 def init_state(node_params, optimizer: Optimizer,
                mixer: Mixer | None = None) -> DecentralizedState:
     """Build state from node-stacked params (see utils.tree.tree_stack_nodes).
 
-    Pass the mixer when it is a stateful compressed mixer so its per-node
-    error-feedback / public-copy state is allocated into ``ef_state``.
+    Pass the mixer so its ``CommState`` is allocated into ``comm``; without
+    one the trivial state is used (correct for any uncompressed mixer).
     """
-    stateful = mixer is not None and getattr(mixer, "stateful", False)
+    comm = mixer.init_state(node_params) if mixer is not None \
+        else trivial_comm_state()
     return DecentralizedState(
         params=node_params,
         opt_state=optimizer.init(node_params),
         step=jnp.zeros((), jnp.int32),
-        ef_state=mixer.init_state(node_params) if stateful else (),
+        comm=comm,
     )
 
 
@@ -93,18 +104,16 @@ def build_train_step(
     """
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=loss_has_aux)
-    stateful_mixer = bool(getattr(mixer, "stateful", False))
     if cfg.compression is not None and cfg.compression.enabled \
-            and not stateful_mixer:
+            and mixer.compression is None:
         raise ValueError(
-            "TrainStepConfig.compression is set but the mixer is not a "
-            "compressed (stateful) mixer — build it with the same "
-            "CompressionConfig (see repro.core.consensus factories)")
-    bytes_per_round = getattr(mixer, "bytes_per_round", tree_bytes)
+            "TrainStepConfig.compression is set but the mixer is "
+            "uncompressed — build it with the same CompressionConfig "
+            "(see repro.core.consensus factories)")
     # scheduled codecs move the rate every round, so the static estimate is
     # wrong for them: report the mixer's traced per-round wire_bits instead
-    scheduled = (cfg.compression is not None and cfg.compression.enabled
-                 and cfg.compression.schedule is not None)
+    # (and skip computing the dead static estimate entirely)
+    traced_wire = mixer.traced_wire
 
     def per_node(params_i, batch_i):
         if loss_has_aux:
@@ -119,6 +128,12 @@ def build_train_step(
         return loss, grads, aux
 
     def train_step(state: DecentralizedState, batch):
+        if not isinstance(state.comm, CommState):
+            raise ValueError(
+                "DecentralizedState.comm must be the mixer's CommState — "
+                "build the state with init_state(params, optimizer, "
+                "mixer=mixer) (protocol v2: every mixer, compressed or "
+                "not, carries one)")
         losses, grads, aux = jax.vmap(per_node)(state.params, batch)
         # --- the paper's technique: exponential per-node gradient reweighting
         scale = robust_scale(losses, cfg.robust)  # (K,)
@@ -131,33 +146,29 @@ def build_train_step(
             scaled_grads, state.opt_state, state.params, state.step
         )
         # --- consensus: the only cross-node communication of the algorithm.
-        # mix_every > 1 skips communication on off-steps (local SGD /
-        # periodic averaging, the FedAvg-style PS baseline of paper §1-2).
+        # One protocol for every mixer; mix_every > 1 skips communication on
+        # off-steps (local SGD / periodic averaging, the FedAvg-style PS
+        # baseline of paper §1-2) and passes CommState through untouched.
         is_mix_step = state.step % cfg.mix_every == cfg.mix_every - 1
-        if stateful_mixer:
-            if cfg.mix_every == 1:
-                mixed, ef_state = mixer(updated, state.ef_state)
-            else:
-                mixed, ef_state = jax.lax.cond(
-                    is_mix_step,
-                    lambda args: mixer(*args), lambda args: args,
-                    (updated, state.ef_state))
+        if cfg.mix_every == 1:
+            mixed, comm = mixer(updated, state.comm, round=state.step)
         else:
-            ef_state = state.ef_state
-            if cfg.mix_every == 1:
-                mixed = mixer(updated)
-            else:
-                mixed = jax.lax.cond(is_mix_step, mixer, lambda t: t, updated)
+            mixed, comm = jax.lax.cond(
+                is_mix_step,
+                lambda theta, cs: mixer(theta, cs, round=state.step),
+                lambda theta, cs: (theta, cs),
+                updated, state.comm)
         # estimated wire bytes this step (static estimate, gated on mixing;
         # traced wire_bits/8 when a schedule makes the rate dynamic)
-        round_bytes = float(bytes_per_round(state.params))
-        if scheduled:
-            comm_bytes = jnp.where(
-                is_mix_step, ef_state.wire_bits / 8.0, 0.0)
-        elif cfg.mix_every == 1:
-            comm_bytes = jnp.float32(round_bytes)
+        if traced_wire:
+            comm_bytes = jnp.where(is_mix_step, comm.wire_bits / 8.0, 0.0)
         else:
-            comm_bytes = jnp.where(is_mix_step, round_bytes, 0.0)
+            round_bytes = float(mixer.bytes_per_round(state.params))
+            if cfg.mix_every == 1:
+                comm_bytes = jnp.float32(round_bytes)
+            else:
+                comm_bytes = jnp.where(is_mix_step, round_bytes, 0.0)
+        cm = comm.metrics
         metrics = {
             "comm_bytes": comm_bytes,
             "loss_mean": jnp.mean(losses),
@@ -167,20 +178,18 @@ def build_train_step(
             "scale_mean": jnp.mean(scale),
             "scale_max": jnp.max(scale),
             "lambda_max": jnp.max(mixture_weights(losses, cfg.robust)),
-        }
-        if stateful_mixer:
             # wire_bits is "bits injected by the last round" — gate on the
             # mix predicate so off-steps (mix_every > 1) report 0, not the
             # stale value the lax.cond pass-through branch carries
-            metrics["wire_bits"] = jnp.where(
-                is_mix_step, ef_state.wire_bits, 0.0)
-            metrics["ef_residual_norm"] = ef_state.res_norm
+            "wire_bits": jnp.where(is_mix_step, cm.wire_bits, 0.0),
+            "ef_residual_norm": cm.res_norm,
+        }
         if cfg.metrics_disagreement:
             metrics["disagreement"] = tree_node_disagreement(mixed)
         for k, v in aux.items():
             metrics[f"aux_{k}"] = jnp.mean(v)
         return (
-            DecentralizedState(mixed, opt_state, state.step + 1, ef_state),
+            DecentralizedState(mixed, opt_state, state.step + 1, comm),
             metrics,
         )
 

@@ -1,0 +1,228 @@
+"""Declarative trainer construction: one spec shared by CLI, benchmarks, examples.
+
+Before v2 every entry point hand-rolled its own argparse → constructor
+translation (``launch/train.py``, ``launch/dryrun.py``, ``benchmarks/common``,
+the examples).  :class:`TrainerSpec` is the single declarative description of
+a decentralized training setup — graph, robustness, optimizer, consensus
+wire codec and schedule — with three ways in:
+
+    spec = TrainerSpec(num_nodes=8, graph="ring", mu=3.0, compress="int8")
+    trainer = spec.build(loss_fn, predict_fn)
+
+    ap = argparse.ArgumentParser()
+    TrainerSpec.add_cli_args(ap)                      # the standard flags
+    spec = TrainerSpec.from_args(ap.parse_args(), lr=0.1)
+
+The compression-only helpers (:func:`add_compression_cli_args`,
+:func:`compression_from_args`) are shared with entry points that build raw
+mixers instead of a trainer (``launch/dryrun.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.comm import CompressionConfig, ScheduleConfig
+from repro.comm.protocol import Mixer
+from repro.core.api import DecentralizedTrainer
+from repro.core.robust import RobustConfig
+
+_GRAPH_CHOICES = ("ring", "grid", "torus", "erdos_renyi", "geometric",
+                  "complete", "star", "hypercube")
+_COMPRESS_CHOICES = ("none", "bf16", "int8", "int4", "topk", "randk")
+_SCHEDULE_CHOICES = ("none", "constant", "linear", "adaptive")
+
+
+def add_compression_cli_args(ap) -> None:
+    """Install the standard consensus wire-codec flags on an argparse parser."""
+    ap.add_argument("--compress", default="none", choices=_COMPRESS_CHOICES,
+                    help="consensus wire codec (repro.comm)")
+    ap.add_argument("--compress-ratio", type=float, default=0.01,
+                    help="kept fraction for topk/randk")
+    ap.add_argument("--compress-schedule", default="none",
+                    choices=_SCHEDULE_CHOICES,
+                    help="adapt the codec rate during training "
+                         "(repro.comm.schedule): int8->int4 / annealed "
+                         "topk ratio, driven by rounds (linear) or the "
+                         "error-feedback innovation norm (adaptive)")
+    ap.add_argument("--schedule-threshold", type=float, default=0.5,
+                    help="adaptive: innovation-norm fraction below which "
+                         "the rate anneals")
+    ap.add_argument("--schedule-warmup", type=int, default=10,
+                    help="adaptive: full-rate rounds before the reference "
+                         "norm is latched")
+    ap.add_argument("--schedule-rounds", type=int, default=300,
+                    help="linear: rounds to anneal full -> aggressive rate")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="ablation: memoryless compression (stalls at the "
+                         "quantization noise floor)")
+
+
+def compression_from_args(args, seed: int = 0) -> CompressionConfig | None:
+    """Build the CompressionConfig described by :func:`add_compression_cli_args`.
+
+    Thin CLI wrapper over :meth:`TrainerSpec.compression_config` (SystemExit
+    instead of ValueError for flag misuse).
+    """
+    spec = TrainerSpec(
+        compress=args.compress,
+        compress_ratio=args.compress_ratio,
+        error_feedback=not args.no_error_feedback,
+        compress_schedule=args.compress_schedule,
+        schedule_threshold=args.schedule_threshold,
+        schedule_warmup=args.schedule_warmup,
+        schedule_rounds=args.schedule_rounds,
+        seed=getattr(args, "seed", seed),
+    )
+    try:
+        return spec.compression_config()
+    except ValueError as e:
+        raise SystemExit(
+            "--compress-schedule needs a codec: pass --compress "
+            "int8|int4|topk|randk") from e
+
+
+@dataclasses.dataclass
+class TrainerSpec:
+    """Everything needed to build a :class:`DecentralizedTrainer`, declaratively.
+
+    ``build(loss_fn, predict_fn)`` supplies the only non-declarative pieces
+    (the task's loss/predict functions, or a pre-built mixer override).
+    """
+
+    num_nodes: int = 10
+    graph: str = "erdos_renyi"
+    graph_kwargs: dict = dataclasses.field(default_factory=dict)
+    mixing: str = "metropolis"
+    mu: float = 6.0
+    robust: bool = True
+    lr: float = 0.05
+    grad_clip: float | None = None
+    mix_every: int = 1
+    metrics_disagreement: bool = True
+    compress: str | CompressionConfig | None = "none"  # codec kind, or a
+                                                       # pre-built config
+    compress_ratio: float = 0.01
+    error_feedback: bool = True
+    compress_schedule: str = "none"
+    schedule_threshold: float = 0.5
+    schedule_warmup: int = 10
+    schedule_rounds: int = 300
+    seed: int = 0
+    jit: bool = True
+
+    # -- derived configs ----------------------------------------------------
+
+    def robust_config(self) -> RobustConfig:
+        return RobustConfig(mu=self.mu, enabled=self.robust)
+
+    def compression_config(self) -> CompressionConfig | None:
+        if isinstance(self.compress, CompressionConfig):
+            # a pre-built config passes through (benchmarks hand these in)
+            return self.compress if self.compress.enabled else None
+        if self.compress is None or self.compress == "none":
+            if self.compress_schedule != "none":
+                raise ValueError("compress_schedule needs a codec "
+                                 "(compress='int8'|'int4'|'topk'|'randk')")
+            return None
+        schedule = None
+        if self.compress_schedule != "none":
+            schedule = ScheduleConfig(
+                kind=self.compress_schedule,
+                threshold=self.schedule_threshold,
+                warmup_rounds=self.schedule_warmup,
+                anneal_rounds=self.schedule_rounds,
+            )
+        return CompressionConfig(
+            kind=self.compress, ratio=self.compress_ratio,
+            error_feedback=self.error_feedback, seed=self.seed,
+            schedule=schedule,
+        )
+
+    # -- the builder ---------------------------------------------------------
+
+    def build(self, loss_fn, predict_fn=None, *, mixer: Mixer | None = None,
+              optimizer=None, loss_has_aux: bool = False
+              ) -> DecentralizedTrainer:
+        return DecentralizedTrainer(
+            loss_fn,
+            predict_fn=predict_fn,
+            num_nodes=self.num_nodes,
+            graph=self.graph,
+            graph_kwargs=dict(self.graph_kwargs),
+            robust=self.robust_config(),
+            optimizer=optimizer,
+            lr=self.lr,
+            grad_clip=self.grad_clip,
+            mixer=mixer,
+            mixing=self.mixing,
+            compression=self.compression_config(),
+            mix_every=self.mix_every,
+            metrics_disagreement=self.metrics_disagreement,
+            loss_has_aux=loss_has_aux,
+            jit=self.jit,
+        )
+
+    # -- CLI integration ------------------------------------------------------
+
+    @staticmethod
+    def add_cli_args(ap) -> None:
+        """Install the standard trainer flags (superset: includes compression).
+
+        ``--nodes``/``--graph``/``--lr`` default to None so entry points can
+        supply task-specific fallbacks via ``from_args(..., overrides)``.
+        """
+        ap.add_argument("--nodes", type=int, default=None)
+        ap.add_argument("--graph", default=None, choices=_GRAPH_CHOICES)
+        ap.add_argument("--p", type=float, default=0.3,
+                        help="edge probability for erdos_renyi graphs")
+        ap.add_argument("--mu", type=float, default=6.0)
+        ap.add_argument("--dsgd", action="store_true",
+                        help="disable DR (baseline)")
+        ap.add_argument("--mix-every", type=int, default=1,
+                        help="consensus period (local SGD when > 1)")
+        ap.add_argument("--lr", type=float, default=None)
+        ap.add_argument("--seed", type=int, default=0)
+        add_compression_cli_args(ap)
+
+    @classmethod
+    def from_args(cls, args, **overrides: Any) -> "TrainerSpec":
+        """Build a spec from an argparse namespace made by :meth:`add_cli_args`.
+
+        Precedence: for ``--nodes``/``--lr``/``--graph`` (argparse default
+        None) the CLI value wins when passed, otherwise the ``overrides``
+        fallback applies.  Every other flag has a concrete argparse default
+        and is copied from ``args`` unconditionally — ``overrides`` for
+        those keys (``mu``, ``compress``, ...) have no effect; use them for
+        fields without a flag (``grad_clip``, ``graph_kwargs``,
+        ``metrics_disagreement``, ...).
+        """
+        spec = dict(overrides)
+        spec.update(
+            mu=args.mu,
+            robust=not args.dsgd,
+            mix_every=getattr(args, "mix_every", 1),
+            compress=args.compress,
+            compress_ratio=args.compress_ratio,
+            error_feedback=not args.no_error_feedback,
+            compress_schedule=args.compress_schedule,
+            schedule_threshold=args.schedule_threshold,
+            schedule_warmup=args.schedule_warmup,
+            schedule_rounds=args.schedule_rounds,
+            seed=args.seed,
+        )
+        if args.nodes is not None:
+            spec["num_nodes"] = args.nodes
+        if args.lr is not None:
+            spec["lr"] = args.lr
+        if args.graph is not None:
+            # only rebuild graph_kwargs when the CLI actually changes the
+            # graph — re-naming the task's own graph must not clobber its
+            # parameters (e.g. the paper's erdos_renyi p) with CLI defaults
+            if args.graph != spec.get("graph") or "graph_kwargs" not in spec:
+                spec["graph_kwargs"] = (
+                    {"p": args.p, "seed": args.seed}
+                    if args.graph == "erdos_renyi" else {})
+            spec["graph"] = args.graph
+        return cls(**spec)

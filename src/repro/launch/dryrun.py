@@ -34,8 +34,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.core import (
-    CompressionConfig, RobustConfig, ScheduleConfig, TrainStepConfig,
-    build_train_step, make_dense_mixer, make_gossip_mixer,
+    CompressionConfig, RobustConfig, TrainStepConfig,
+    add_compression_cli_args, build_train_step, compression_from_args,
+    make_dense_mixer, make_gossip_mixer,
 )
 from repro.core.drdsgd import DecentralizedState
 from repro.graphs import (
@@ -96,21 +97,21 @@ def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
     train_step = build_train_step(model.loss, sgd(1e-2), mixer, step_cfg)
 
     params = _node_stack_shapes(model.param_shapes(), k)
-    stateful = getattr(mixer, "stateful", False)
-    ef_state = jax.eval_shape(mixer.init_state, params) if stateful else ()
+    # uniform Mixer protocol: every mixer allocates (and shards) a CommState
+    comm = jax.eval_shape(mixer.init_state, params)
     state = DecentralizedState(
         params=params, opt_state=(), step=jax.ShapeDtypeStruct((), jnp.int32),
-        ef_state=ef_state)
+        comm=comm)
     batch = input_shapes(cfg, shape, num_nodes=k)
 
-    ef_sh = (jax.tree.map(
+    comm_sh = jax.tree.map(
         lambda s: NamedSharding(mesh, s), mixer.state_specs(pspecs),
-        is_leaf=lambda x: isinstance(x, P)) if stateful else ())
+        is_leaf=lambda x: isinstance(x, P))
     state_sh = DecentralizedState(
         params=_shardings(mesh, pspecs),
         opt_state=(),
         step=NamedSharding(mesh, P()),
-        ef_state=ef_sh,
+        comm=comm_sh,
     )
     # hierarchical mode: the per-node batch dim is FSDP data-parallel
     inner = "fsdp" if hier else None
@@ -353,16 +354,7 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--mixer", default="dense", choices=["dense", "gossip"])
     ap.add_argument("--graph", default="ring")
-    ap.add_argument("--compress", default="none",
-                    choices=["none", "bf16", "int8", "int4", "topk", "randk"],
-                    help="consensus wire codec (repro.comm)")
-    ap.add_argument("--compress-ratio", type=float, default=0.01,
-                    help="kept fraction for topk/randk")
-    ap.add_argument("--compress-schedule", default="none",
-                    choices=["none", "constant", "linear", "adaptive"],
-                    help="traced-rate codec schedule (repro.comm.schedule); "
-                         "proves the dynamic-rate train step lowers and "
-                         "compiles on the production meshes")
+    add_compression_cli_args(ap)
     ap.add_argument("--compute-dtype", default=None, choices=[None, "bf16"])
     ap.add_argument("--moe-constraints", default=None,
                     choices=[None, "expert", "capacity"])
@@ -377,15 +369,7 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    schedule = (ScheduleConfig(kind=args.compress_schedule)
-                if args.compress_schedule != "none" else None)
-    if schedule is not None and args.compress == "none":
-        raise SystemExit("--compress-schedule needs a codec: pass "
-                         "--compress int8|int4|topk|randk")
-    compression = (CompressionConfig(kind=args.compress,
-                                     ratio=args.compress_ratio,
-                                     schedule=schedule)
-                   if args.compress != "none" else None)
+    compression = compression_from_args(args)
     comp = jnp.bfloat16 if args.compute_dtype == "bf16" else None
 
     archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]

@@ -6,6 +6,12 @@ MLP/CNN image models.  On this CPU container use the smoke configs; on a real
 TPU slice the same entry point takes ``--mesh single|multi`` and shards the
 node axis across the pod(s).
 
+Trainer construction is declarative (``repro.core.TrainerSpec``: the same
+flags drive the benchmarks and examples) and the hot loop runs through
+``DecentralizedTrainer.run`` — one compiled ``lax.scan`` program per logging
+segment with the carried state donated, instead of a per-step Python
+dispatch loop.
+
 Consensus wire compression (``repro.comm``): ``--compress`` selects the
 codec (bf16 cast, int8/int4 stochastic-rounding quantization, topk/randk
 sparsification with ``--compress-ratio``), all with error-feedback
@@ -25,19 +31,14 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_arch, fmnist_default, cifar_default
-from repro.core import (
-    CompressionConfig, DecentralizedTrainer, RobustConfig, ScheduleConfig,
-)
+from repro.core import TrainerSpec, run_segments
 from repro.data import (
     make_cifar_like,
     make_fmnist_like,
@@ -46,87 +47,56 @@ from repro.data import (
 )
 from repro.models import TransformerLM, mlp_init, mlp_apply, cnn_init, cnn_apply
 from repro.models.paper_nets import make_classifier_loss
-from repro.optim import sgd
-
-
-def _compression_from_args(args) -> CompressionConfig | None:
-    if args.compress == "none":
-        if args.compress_schedule != "none":
-            raise SystemExit(
-                "--compress-schedule needs a codec: pass --compress "
-                "int8|int4|topk|randk")
-        return None
-    schedule = None
-    if args.compress_schedule != "none":
-        schedule = ScheduleConfig(
-            kind=args.compress_schedule,
-            threshold=args.schedule_threshold,
-            warmup_rounds=args.schedule_warmup,
-            anneal_rounds=args.schedule_rounds,
-        )
-    return CompressionConfig(
-        kind=args.compress,
-        ratio=args.compress_ratio,
-        error_feedback=not args.no_error_feedback,
-        seed=args.seed,
-        schedule=schedule,
-    )
 
 
 def train_lm(args):
-    args.nodes = args.nodes or 8
     args.steps = args.steps or 50
     args.batch_per_node = args.batch_per_node or 2
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = TransformerLM(cfg)
-    k = args.nodes
+    spec = TrainerSpec.from_args(args, num_nodes=8, lr=0.01, grad_clip=1.0,
+                                 graph="ring")
+    k = spec.num_nodes
     seq = args.seq_len
 
-    def loss_fn(params, batch):
-        return model.loss(params, batch)
-
-    trainer = DecentralizedTrainer(
-        loss_fn,
-        num_nodes=k,
-        graph=args.graph,
-        graph_kwargs={"p": args.p} if args.graph == "erdos_renyi" else {},
-        robust=RobustConfig(mu=args.mu, enabled=not args.dsgd),
-        lr=args.lr,
-        grad_clip=1.0,
-        compression=_compression_from_args(args),
-    )
+    trainer = spec.build(model.loss)
     print(f"arch={cfg.name} params={model.num_params():,} nodes={k} "
-          f"rho={trainer.rho:.3f} mu={args.mu} robust={not args.dsgd} "
+          f"rho={trainer.rho:.3f} mu={args.mu} robust={spec.robust} "
           f"compress={args.compress}")
     state = trainer.init(model.init(jax.random.PRNGKey(args.seed)))
     streams = make_node_token_streams(k, cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     prefix = cfg.frontend_len if cfg.frontend != "token" else 0
 
-    history = []
-    t0 = time.time()
-    for step in range(args.steps):
+    def sample_batch(step):
         toks = np.stack([
             s.next_batch(args.batch_per_node, seq) for s in streams])
-        batch = {"tokens": jnp.asarray(toks)}
+        batch = {"tokens": toks}
         if prefix:
-            batch["embeddings"] = jnp.asarray(
-                rng.standard_normal((k, args.batch_per_node, prefix,
-                                     cfg.d_model)).astype(np.float32) * 0.02)
-        state, metrics = trainer.step(state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            m = {kk: float(v) for kk, v in metrics.items()}
-            m["step"] = step
-            m["wall_s"] = time.time() - t0
-            history.append(m)
-            extra = ""
-            if "ef_residual_norm" in m:
-                extra = (f" ef_res={m['ef_residual_norm']:.2e}"
-                         f" wire_bits={m['wire_bits']:.3e}")
-            print(f"step {step:5d} loss_mean={m['loss_mean']:.4f} "
-                  f"loss_worst={m['loss_worst']:.4f} "
-                  f"disagree={m.get('disagreement', 0):.2e} "
-                  f"comm_bytes={m.get('comm_bytes', 0):.3e}" + extra)
+            batch["embeddings"] = rng.standard_normal(
+                (k, args.batch_per_node, prefix, cfg.d_model)
+            ).astype(np.float32) * 0.02
+        return batch
+
+    history = []
+    t0 = time.time()
+
+    def on_segment(step, seg_state, ms):
+        m = {kk: float(v[-1]) for kk, v in ms.items()}
+        m["step"] = step
+        m["wall_s"] = time.time() - t0
+        history.append(m)
+        extra = ""
+        if trainer.compression is not None:
+            extra = (f" ef_res={m['ef_residual_norm']:.2e}"
+                     f" wire_bits={m['wire_bits']:.3e}")
+        print(f"step {step:5d} loss_mean={m['loss_mean']:.4f} "
+              f"loss_worst={m['loss_worst']:.4f} "
+              f"disagree={m.get('disagreement', 0):.2e} "
+              f"comm_bytes={m.get('comm_bytes', 0):.3e}" + extra)
+
+    state = run_segments(trainer, state, sample_batch, args.steps,
+                         args.log_every, on_segment)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
         print(f"checkpoint saved to {args.ckpt_dir}")
@@ -135,7 +105,6 @@ def train_lm(args):
 
 def train_paper(args):
     exp = fmnist_default() if args.paper == "fmnist" else cifar_default()
-    k = args.nodes or exp.num_nodes
     steps = args.steps or exp.steps
     if args.paper == "fmnist":
         ds = make_fmnist_like()
@@ -145,34 +114,34 @@ def train_paper(args):
         ds = make_cifar_like()
         params = cnn_init(jax.random.PRNGKey(args.seed))
         apply_fn = cnn_apply
+    spec = TrainerSpec.from_args(
+        args, num_nodes=exp.num_nodes, lr=exp.lr,
+        graph="erdos_renyi", graph_kwargs={"p": exp.p, "seed": args.seed})
+    k = spec.num_nodes
     fed = pathological_noniid_partition(ds, k, seed=args.seed)
     x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200, seed=args.seed)
-    trainer = DecentralizedTrainer(
-        make_classifier_loss(apply_fn),
-        predict_fn=apply_fn,
-        num_nodes=k,
-        graph="erdos_renyi",
-        graph_kwargs={"p": exp.p, "seed": args.seed},
-        robust=RobustConfig(mu=args.mu, enabled=not args.dsgd),
-        lr=args.lr or exp.lr,
-        compression=_compression_from_args(args),
-    )
+    trainer = spec.build(make_classifier_loss(apply_fn), apply_fn)
     state = trainer.init(params)
     rng = np.random.default_rng(args.seed)
     bsz = args.batch_per_node or exp.batch_size
     print(f"paper={args.paper} nodes={k} steps={steps} B={bsz} "
-          f"lr={trainer.lr} mu={args.mu} rho={trainer.rho:.3f} "
+          f"lr={spec.lr} mu={args.mu} rho={trainer.rho:.3f} "
           f"compress={args.compress}")
-    for step in range(steps):
+
+    def sample_batch(step):
         xb, yb = fed.sample_batch(rng, bsz)
-        state, metrics = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
-        if step % args.log_every == 0 or step == steps - 1:
-            stats = trainer.eval_local_distributions(state, x_nodes, y_nodes)
-            print(f"step {step:5d} loss={float(metrics['loss_mean']):.4f} "
-                  f"acc_avg={stats['acc_avg']:.3f} "
-                  f"acc_worst={stats['acc_worst_dist']:.3f} "
-                  f"std={stats['acc_node_std']:.3f} "
-                  f"comm_bytes={float(metrics['comm_bytes']):.3e}")
+        return (xb, yb)
+
+    def on_segment(step, seg_state, ms):
+        stats = trainer.eval_local_distributions(seg_state, x_nodes, y_nodes)
+        print(f"step {step:5d} loss={float(ms['loss_mean'][-1]):.4f} "
+              f"acc_avg={stats['acc_avg']:.3f} "
+              f"acc_worst={stats['acc_worst_dist']:.3f} "
+              f"std={stats['acc_node_std']:.3f} "
+              f"comm_bytes={float(ms['comm_bytes'][-1]):.3e}")
+
+    state = run_segments(trainer, state, sample_batch, steps,
+                         args.log_every, on_segment)
     return state
 
 
@@ -183,42 +152,12 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-friendly)")
     ap.add_argument("--steps", type=int, default=None)
-    ap.add_argument("--nodes", type=int, default=None)
     ap.add_argument("--batch-per-node", type=int, default=None)
     ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--graph", default="ring")
-    ap.add_argument("--p", type=float, default=0.3)
-    ap.add_argument("--mu", type=float, default=6.0)
-    ap.add_argument("--dsgd", action="store_true", help="disable DR (baseline)")
-    ap.add_argument("--compress", default="none",
-                    choices=["none", "bf16", "int8", "int4", "topk", "randk"],
-                    help="consensus wire codec (repro.comm)")
-    ap.add_argument("--compress-ratio", type=float, default=0.01,
-                    help="kept fraction for topk/randk")
-    ap.add_argument("--compress-schedule", default="none",
-                    choices=["none", "constant", "linear", "adaptive"],
-                    help="adapt the codec rate during training "
-                         "(repro.comm.schedule): int8->int4 / annealed "
-                         "topk ratio, driven by rounds (linear) or the "
-                         "error-feedback innovation norm (adaptive)")
-    ap.add_argument("--schedule-threshold", type=float, default=0.5,
-                    help="adaptive: innovation-norm fraction below which "
-                         "the rate anneals")
-    ap.add_argument("--schedule-warmup", type=int, default=10,
-                    help="adaptive: full-rate rounds before the reference "
-                         "norm is latched")
-    ap.add_argument("--schedule-rounds", type=int, default=300,
-                    help="linear: rounds to anneal full -> aggressive rate")
-    ap.add_argument("--no-error-feedback", action="store_true",
-                    help="ablation: memoryless compression (stalls at the "
-                         "quantization noise floor)")
-    ap.add_argument("--lr", type=float, default=None)
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    TrainerSpec.add_cli_args(ap)
     args = ap.parse_args()
-    if args.lr is None and args.arch:
-        args.lr = 0.01
     if args.paper:
         train_paper(args)
     elif args.arch:

@@ -1,0 +1,250 @@
+"""Consensus API v2: uniform Mixer protocol, the scan-based ``run()`` driver
+(bit-equivalence vs per-step ``step()``), TrainerSpec construction, the
+metrics_disagreement toggle, and the eval_worst_distribution crash fix."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommMetrics, CommState, trivial_comm_state
+from repro.core import (
+    CompressionConfig,
+    DecentralizedTrainer,
+    RobustConfig,
+    ScheduleConfig,
+    TrainerSpec,
+    make_dense_mixer,
+    make_identity_mixer,
+    repeat_mixer,
+)
+from repro.graphs import metropolis_weights, ring_graph
+
+
+def _quad_loss(params, batch):
+    (target,) = batch
+    return jnp.mean((params["w"] - target) ** 2)
+
+
+def _targets(k=8, d=3):
+    return jnp.linspace(-1.5, 1.5, k).reshape(k, 1) * jnp.ones((k, d))
+
+
+# -- (a) uniform protocol surface ---------------------------------------------
+
+def test_every_mixer_shares_the_protocol():
+    """identity / dense / repeated / compressed: same init_state/state_specs/
+    call signature, no `stateful` attribute anywhere."""
+    w = metropolis_weights(ring_graph(4))
+    theta = {"w": jnp.ones((4, 6))}
+    mixers = [
+        make_identity_mixer(),
+        make_dense_mixer(w),
+        repeat_mixer(make_dense_mixer(w), 2),
+        make_dense_mixer(w, compression=CompressionConfig(kind="int8")),
+    ]
+    for m in mixers:
+        assert not hasattr(m, "stateful")
+        st = m.init_state(theta)
+        assert isinstance(st, CommState)
+        out, st2 = m(theta, st, round=jnp.int32(0))
+        assert isinstance(st2, CommState)
+        assert isinstance(st2.metrics, CommMetrics)
+        assert int(st2.rounds) >= 1
+        specs = m.state_specs({"w": jax.sharding.PartitionSpec()})
+        assert isinstance(specs, CommState)
+        # state_specs mirrors init_state's structure exactly
+        assert jax.tree.structure(specs) == jax.tree.structure(st)
+
+
+def test_uncompressed_mixers_report_static_wire_bits():
+    w = metropolis_weights(ring_graph(4))
+    theta = {"w": jnp.ones((4, 6), jnp.float32)}
+    dense = make_dense_mixer(w)
+    _, st = dense(theta, dense.init_state(theta))
+    assert float(st.wire_bits) == 8 * dense.bytes_per_round(theta)
+    ident = make_identity_mixer()
+    _, st = ident(theta, ident.init_state(theta))
+    assert float(st.wire_bits) == 0.0
+    assert trivial_comm_state().hat == ()
+
+
+# -- (b) run() vs step() bit-equivalence --------------------------------------
+
+def _stack_time(batch, t):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (t,) + x.shape),
+                        batch)
+
+
+@pytest.mark.parametrize("compression", [
+    None,
+    CompressionConfig(kind="int8", schedule=ScheduleConfig(
+        kind="adaptive", warmup_rounds=2, threshold=1.0)),
+], ids=["dense_uncompressed", "int8_ef_adaptive"])
+def test_run_matches_manual_steps_bitwise(compression):
+    """ISSUE satellite: trainer.run(state, batches, steps=N) is bit-identical
+    to N manual trainer.step() calls at a fixed seed — including the
+    CommState (EF public copies, schedule counters) carried through scan."""
+    k, n = 8, 6
+    trainer = DecentralizedTrainer(
+        _quad_loss, num_nodes=k, graph="ring",
+        robust=RobustConfig(mu=2.0), lr=0.05, compression=compression)
+    batch = (_targets(k),)
+
+    s_loop = trainer.init({"w": jnp.zeros((3,))})
+    loop_metrics = []
+    for _ in range(n):
+        s_loop, m = trainer.step(s_loop, batch)
+        loop_metrics.append(m)
+
+    s_scan = trainer.init({"w": jnp.zeros((3,))})
+    s_scan, ms = trainer.run(s_scan, _stack_time(batch, n), steps=n)
+
+    np.testing.assert_array_equal(np.asarray(s_loop.params["w"]),
+                                  np.asarray(s_scan.params["w"]))
+    assert int(s_scan.step) == n
+    # CommState carried identically (schedule counters, EF public copies)
+    assert int(s_loop.comm.rounds) == int(s_scan.comm.rounds) == n
+    np.testing.assert_array_equal(np.asarray(s_loop.comm.key),
+                                  np.asarray(s_scan.comm.key))
+    if compression is not None:
+        np.testing.assert_array_equal(np.asarray(s_loop.comm.hat["w"]),
+                                      np.asarray(s_scan.comm.hat["w"]))
+        np.testing.assert_array_equal(np.asarray(s_loop.comm.res_ref),
+                                      np.asarray(s_scan.comm.res_ref))
+    # stacked metrics == the per-step metrics, step by step
+    for key in loop_metrics[0]:
+        stacked = np.asarray(ms[key])
+        assert stacked.shape[0] == n, key
+        for i, m in enumerate(loop_metrics):
+            np.testing.assert_array_equal(stacked[i], np.asarray(m[key]),
+                                          err_msg=f"{key}[{i}]")
+
+
+def test_run_steps_validation_and_slicing():
+    trainer = DecentralizedTrainer(
+        _quad_loss, num_nodes=4, graph="ring",
+        robust=RobustConfig(enabled=False), lr=0.1)
+    batch = (jnp.ones((4, 2)),)
+    state = trainer.init({"w": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        trainer.run(state, _stack_time(batch, 3), steps=5)
+    state, ms = trainer.run(state, _stack_time(batch, 5), steps=3)
+    assert ms["loss_mean"].shape == (3,)
+    assert int(state.step) == 3
+
+
+def test_run_epoch_hook():
+    """The host-callback hook fires between compiled segments with the
+    segment's stacked metrics, and the final state matches a plain run."""
+    trainer = DecentralizedTrainer(
+        _quad_loss, num_nodes=4, graph="ring",
+        robust=RobustConfig(mu=2.0), lr=0.05)
+    batch = (jnp.ones((4, 2)),)
+    seen = []
+    s0 = trainer.init({"w": jnp.zeros((2,))})
+    s_hook, ms = trainer.run(
+        s0, _stack_time(batch, 7), epoch_steps=3,
+        on_epoch=lambda e, st, m: seen.append((e, m["loss_mean"].shape[0])))
+    assert seen == [(0, 3), (1, 3), (2, 1)]
+    assert ms["loss_mean"].shape == (7,)
+    s_plain = trainer.init({"w": jnp.zeros((2,))})
+    s_plain, _ = trainer.run(s_plain, _stack_time(batch, 7))
+    np.testing.assert_array_equal(np.asarray(s_hook.params["w"]),
+                                  np.asarray(s_plain.params["w"]))
+
+
+# -- (c) satellite: metrics_disagreement toggle -------------------------------
+
+def test_trainer_metrics_disagreement_toggle():
+    kwargs = dict(num_nodes=4, graph="ring", robust=RobustConfig(mu=2.0),
+                  lr=0.05)
+    batch = (jnp.ones((4, 2)),)
+    on = DecentralizedTrainer(_quad_loss, **kwargs)
+    _, m = on.step(on.init({"w": jnp.zeros((2,))}), batch)
+    assert "disagreement" in m
+    off = DecentralizedTrainer(_quad_loss, metrics_disagreement=False,
+                               **kwargs)
+    _, m = off.step(off.init({"w": jnp.zeros((2,))}), batch)
+    assert "disagreement" not in m
+
+
+# -- (d) satellite: eval_worst_distribution crash path ------------------------
+
+def _linear_predict(params, x):
+    return x @ params["w"]
+
+
+def test_eval_worst_distribution_all_empty_raises():
+    trainer = DecentralizedTrainer(
+        lambda p, b: jnp.mean((b[0] @ p["w"] - 1.0) ** 2),
+        predict_fn=_linear_predict, num_nodes=4, graph="ring",
+        robust=RobustConfig(enabled=False), lr=0.1)
+    state = trainer.init({"w": jnp.zeros((3, 2))})
+    empty = [(np.zeros((0, 3), np.float32), np.zeros((0,), np.int64))] * 3
+    with pytest.raises(ValueError, match="non-empty"):
+        trainer.eval_worst_distribution(state, empty)
+    # non-empty subsets still work (empty ones are skipped)
+    x = np.ones((4, 3), np.float32)
+    y = np.zeros((4,), np.int64)
+    stats = trainer.eval_worst_distribution(
+        state, [(x, y), (np.zeros((0, 3), np.float32),
+                         np.zeros((0,), np.int64))])
+    assert set(stats) == {"acc_avg", "acc_worst_dist", "acc_node_std",
+                          "acc_node_min"}
+
+
+# -- (e) TrainerSpec builder ---------------------------------------------------
+
+def test_trainer_spec_builds_equivalent_trainer():
+    spec = TrainerSpec(num_nodes=6, graph="ring", mu=2.0, lr=0.07,
+                       grad_clip=1.0, compress="int8", compress_ratio=0.05,
+                       seed=3)
+    trainer = spec.build(_quad_loss)
+    assert trainer.num_nodes == 6
+    assert trainer.compression.kind == "int8"
+    assert trainer.compression.seed == 3
+    assert trainer.mixer.compression is trainer.compression
+    state = trainer.init({"w": jnp.zeros((3,))})
+    state, m = trainer.step(state, (_targets(6),))
+    assert np.isfinite(float(m["loss_mean"]))
+    # a pre-built CompressionConfig passes through unchanged
+    cc = CompressionConfig(kind="topk", ratio=0.25)
+    assert TrainerSpec(compress=cc).compression_config() is cc
+    with pytest.raises(ValueError):
+        TrainerSpec(compress="none",
+                    compress_schedule="adaptive").compression_config()
+
+
+def test_trainer_spec_from_args():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    TrainerSpec.add_cli_args(ap)
+    args = ap.parse_args([
+        "--nodes", "5", "--graph", "erdos_renyi", "--p", "0.4", "--mu", "4.0",
+        "--compress", "int8", "--compress-schedule", "linear",
+        "--schedule-rounds", "77", "--seed", "9"])
+    spec = TrainerSpec.from_args(args, lr=0.2, grad_clip=2.0)
+    assert spec.num_nodes == 5
+    assert spec.graph == "erdos_renyi"
+    assert spec.graph_kwargs == {"p": 0.4, "seed": 9}
+    assert spec.lr == 0.2 and spec.grad_clip == 2.0     # override fallbacks
+    cc = spec.compression_config()
+    assert cc.kind == "int8" and cc.schedule.kind == "linear"
+    assert cc.schedule.anneal_rounds == 77
+    # CLI wins over an override fallback when explicitly passed
+    args = ap.parse_args(["--nodes", "5", "--lr", "0.5"])
+    assert TrainerSpec.from_args(args, lr=0.2).lr == 0.5
+    # task fallback graph survives when --graph is not passed
+    assert TrainerSpec.from_args(args, graph="ring").graph == "ring"
+    # re-naming the task's own graph on the CLI must not clobber its
+    # parameters with the CLI defaults (p=0.3)
+    args = ap.parse_args(["--graph", "erdos_renyi"])
+    spec = TrainerSpec.from_args(args, graph="erdos_renyi",
+                                 graph_kwargs={"p": 0.5, "seed": 0})
+    assert spec.graph_kwargs == {"p": 0.5, "seed": 0}
+    # ...but actually changing the graph rebuilds kwargs for the new graph
+    spec = TrainerSpec.from_args(args, graph="ring", graph_kwargs={})
+    assert spec.graph == "erdos_renyi"
+    assert spec.graph_kwargs == {"p": 0.3, "seed": 0}

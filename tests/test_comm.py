@@ -99,11 +99,8 @@ def test_int4_packing_halves_wire():
 # -- (b) EF-compressed mixers track the uncompressed consensus rate -----------
 
 def _run_dense_mix(theta, w, compression, steps=50):
+    # uniform protocol: same loop whether or not the wire is compressed
     mixer = make_dense_mixer(w, compression=compression)
-    if compression is None:
-        for _ in range(steps):
-            theta = mixer(theta)
-        return theta, None
     st = mixer.init_state(theta)
     step = jax.jit(mixer)
     for _ in range(steps):
@@ -183,8 +180,9 @@ theta = {"a": jnp.asarray(rng.normal(size=(k, 64)), jnp.float32),
 specs = {"a": P("data", None), "b": P("data", None, None)}
 t = theta
 mix = make_dense_mixer(w)
+mst = mix.init_state(t)
 for _ in range(50):
-    t = mix(t)
+    t, mst = mix(t, mst)
 d_unc = float(tree_node_disagreement(t))
 for kind in ("int8", "int4"):
     gm = make_gossip_mixer(d, mesh, "data", specs,

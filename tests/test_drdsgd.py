@@ -20,6 +20,14 @@ def _quad_loss(params, batch):
     return jnp.mean((params["w"] - target) ** 2)
 
 
+def _mix(mixer, theta, rounds: int = 1):
+    """Apply the uniform stateful mixer protocol, discarding the CommState."""
+    st = mixer.init_state(theta)
+    for _ in range(rounds):
+        theta, st = mixer(theta, st)
+    return theta
+
+
 def test_replicate_params():
     p = {"w": jnp.arange(3.0)}
     rp = replicate_params(p, 5)
@@ -36,12 +44,15 @@ def test_consensus_rate_matches_rho():
     mixer = make_dense_mixer(w)
     theta = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(k, 16)),
                               jnp.float32)}
+    st = mixer.init_state(theta)
     d_prev = float(tree_node_disagreement(theta))
     for _ in range(5):
-        theta = mixer(theta)
+        theta, st = mixer(theta, st)
         d = float(tree_node_disagreement(theta))
         assert d <= rho * d_prev + 1e-8
         d_prev = d
+    assert int(st.rounds) == 5
+    assert float(st.wire_bits) == 8 * mixer.bytes_per_round(theta)
 
 
 def test_mixing_preserves_consensus_mean():
@@ -52,7 +63,7 @@ def test_mixing_preserves_consensus_mean():
     theta = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(k, 7)),
                               jnp.float32)}
     before = jnp.mean(theta["w"], axis=0)
-    after = jnp.mean(mixer(theta)["w"], axis=0)
+    after = jnp.mean(_mix(mixer, theta)["w"], axis=0)
     np.testing.assert_allclose(after, before, rtol=1e-5, atol=1e-6)
 
 
@@ -124,7 +135,7 @@ def test_repeat_mixer_contracts_like_rho_pow_m():
                               jnp.float32)}
     d0 = float(tree_node_disagreement(theta))
     for m in (1, 2, 4):
-        mixed = repeat_mixer(make_dense_mixer(w), m)(theta)
+        mixed = _mix(repeat_mixer(make_dense_mixer(w), m), theta)
         d = float(tree_node_disagreement(mixed))
         assert d <= (rho ** m) * d0 + 1e-7, (m, d, d0)
     import pytest
@@ -142,8 +153,8 @@ def test_repeat_mixer_equals_dense_power():
     theta = {"w": jnp.asarray(np.random.default_rng(5).normal(size=(k, 17)),
                               jnp.float32)}
     for m in (1, 2, 3, 5):
-        repeated = repeat_mixer(make_dense_mixer(w), m)(theta)
-        powered = make_dense_mixer(np.linalg.matrix_power(w, m))(theta)
+        repeated = _mix(repeat_mixer(make_dense_mixer(w), m), theta)
+        powered = _mix(make_dense_mixer(np.linalg.matrix_power(w, m)), theta)
         np.testing.assert_allclose(np.asarray(repeated["w"]),
                                    np.asarray(powered["w"]),
                                    rtol=1e-5, atol=1e-6)

@@ -205,8 +205,9 @@ def test_scheduled_dense_mixer_anneals_and_contracts():
     # and consensus still contracts like the uncompressed mixer
     t_unc = theta
     unc = make_dense_mixer(w)
+    ust = unc.init_state(t_unc)
     for _ in range(40):
-        t_unc = unc(t_unc)
+        t_unc, ust = unc(t_unc, ust)
     assert float(tree_node_disagreement(t)) <= \
         10 * float(tree_node_disagreement(t_unc)) + 1e-10
 

@@ -35,8 +35,11 @@ for g in [ring_graph(8), erdos_renyi_graph(8, 0.5, seed=3)]:
     theta = {"a": jnp.arange(8*4, dtype=jnp.float32).reshape(8,4),
              "b": jnp.ones((8,2,3)) * jnp.arange(8).reshape(8,1,1)}
     specs = {"a": P("data", None), "b": P("data", None, None)}
-    dense = make_dense_mixer(w)(theta)
-    gossip = jax.jit(make_gossip_mixer(d, mesh, "data", specs))(theta)
+    dm = make_dense_mixer(w)
+    gm = make_gossip_mixer(d, mesh, "data", specs)
+    dense, _ = dm(theta, dm.init_state(theta))
+    gossip, gst = jax.jit(gm)(theta, gm.init_state(theta))
+    assert int(gst.rounds) == 1 and float(gst.wire_bits) > 0
     for k in theta:
         np.testing.assert_allclose(np.asarray(dense[k]), np.asarray(gossip[k]),
                                    rtol=1e-5, atol=1e-6)
@@ -58,8 +61,10 @@ w = metropolis_weights(g)
 d = permutation_decomposition(w)
 theta = {"a": jnp.arange(8*6, dtype=jnp.float32).reshape(8, 6)}
 specs = {"a": P(("pod", "data"), None)}
-dense = make_dense_mixer(w)(theta)
-gossip = jax.jit(make_gossip_mixer(d, mesh, ("pod", "data"), specs))(theta)
+dm = make_dense_mixer(w)
+gm = make_gossip_mixer(d, mesh, ("pod", "data"), specs)
+dense, _ = dm(theta, dm.init_state(theta))
+gossip, _ = jax.jit(gm)(theta, gm.init_state(theta))
 np.testing.assert_allclose(np.asarray(dense["a"]), np.asarray(gossip["a"]),
                            rtol=1e-5, atol=1e-6)
 print("OK")
@@ -84,10 +89,11 @@ def loss_fn(params, batch):
     x, y = batch
     pred = x @ params["w"] + params["b"]
     return jnp.mean((pred - y) ** 2)
-step = build_train_step(loss_fn, sgd(0.05), make_dense_mixer(w),
+mixer = make_dense_mixer(w)
+step = build_train_step(loss_fn, sgd(0.05), mixer,
                         TrainStepConfig(robust=RobustConfig(mu=2.0)))
 params = {"w": jnp.ones((5, 3)) * 0.1, "b": jnp.zeros((3,))}
-state = init_state(replicate_params(params, k), sgd(0.05))
+state = init_state(replicate_params(params, k), sgd(0.05), mixer=mixer)
 rng = np.random.default_rng(0)
 batch = (jnp.asarray(rng.normal(size=(k, 4, 5)), jnp.float32),
          jnp.asarray(rng.normal(size=(k, 4, 3)), jnp.float32))
@@ -95,9 +101,13 @@ ref_state, ref_metrics = jax.jit(step)(state, batch)
 
 mesh = make_auto_mesh((8,), ("data",))
 sh = lambda *spec: NamedSharding(mesh, P(*spec))
+pspecs = {"w": P("data", None, None), "b": P("data", None)}
+comm_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       mixer.state_specs(pspecs),
+                       is_leaf=lambda x: isinstance(x, P))
 state_sh = type(state)(
     params={"w": sh("data", None, None), "b": sh("data", None)},
-    opt_state=(), step=sh())
+    opt_state=(), step=sh(), comm=comm_sh)
 batch_sh = (sh("data", None, None), sh("data", None, None))
 jstep = jax.jit(step, in_shardings=(state_sh, batch_sh),
                 out_shardings=(state_sh, None))
@@ -128,8 +138,9 @@ d = permutation_decomposition(w)
 theta = {"a": jnp.arange(4*6, dtype=jnp.float32).reshape(4, 6)}
 specs = {"a": P("node", None)}   # replicated over "replica"
 mixer = make_hierarchical_mixer(d, mesh, "node", "replica", specs)
-dense = make_dense_mixer(w)(theta)
-out = jax.jit(mixer)(theta)
+dm = make_dense_mixer(w)
+dense, _ = dm(theta, dm.init_state(theta))
+out, _ = jax.jit(mixer)(theta, mixer.init_state(theta))
 np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(dense["a"]),
                            rtol=1e-5, atol=1e-6)
 print("OK")
@@ -155,15 +166,19 @@ model = TransformerLM(cfg)
 mesh = make_auto_mesh((4, 2), ("data", "model"))
 k = 4
 w = metropolis_weights(ring_graph(k))
-step = build_train_step(model.loss, sgd(1e-2), make_dense_mixer(w),
+mixer = make_dense_mixer(w)
+step = build_train_step(model.loss, sgd(1e-2), mixer,
                         TrainStepConfig(robust=RobustConfig(mu=6.0)))
 params = model.init(jax.random.PRNGKey(0))
-state = init_state(replicate_params(params, k), sgd(1e-2))
+state = init_state(replicate_params(params, k), sgd(1e-2), mixer=mixer)
 pspecs = model.param_specs(mesh, mode="train", node_axis="data")
 state_sh = type(state)(
     params=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                         is_leaf=lambda x: isinstance(x, P)),
-    opt_state=(), step=NamedSharding(mesh, P()))
+    opt_state=(), step=NamedSharding(mesh, P()),
+    comm=jax.tree.map(lambda s: NamedSharding(mesh, s),
+                      mixer.state_specs(pspecs),
+                      is_leaf=lambda x: isinstance(x, P)))
 toks = jax.random.randint(jax.random.PRNGKey(1), (k, 2, 33), 0, cfg.vocab)
 batch = {"tokens": toks}
 batch_sh = {"tokens": NamedSharding(mesh, P("data", None, None))}
