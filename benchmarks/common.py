@@ -51,7 +51,12 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       eval_every: int = 25,
                       grad_clip: float | None = 2.0,
                       lr_compensate: bool = True,
-                      compression=None) -> dict:
+                      compression=None,
+                      topology: str = "static", drop_p: float = 0.0,
+                      local_updates: int = 1,
+                      gradient_tracking: bool = False,
+                      straggler_p: float = 0.0,
+                      outage_p: float = 0.0) -> dict:
     """One (DR-)DSGD training run; returns metrics + eval history + timing.
 
     ``lr_compensate`` equalizes the *initial* effective step size across
@@ -78,6 +83,12 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         lr=base_lr,
         grad_clip=grad_clip,
         compress=compression if compression is not None else "none",
+        topology=topology,
+        drop_p=drop_p,
+        local_updates=local_updates,
+        gradient_tracking=gradient_tracking,
+        straggler_p=straggler_p,
+        outage_p=outage_p,
         seed=seed,
     )
     trainer = spec.build(make_classifier_loss(apply_fn), apply_fn)
@@ -109,7 +120,11 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     state, ms = trainer.run(state, stacked)
     jax.block_until_ready(state.params)
     warm_wall = time.perf_counter() - t_warm
-    comm_bytes_round = float(ms["comm_bytes"][0])
+    # peak per-round wire of the first segment: step 0 alone would read 0
+    # under local_updates > 1 (a local round) and a random draw under
+    # dropout; the max is the full-topology consensus-round figure and
+    # matches the old step-0 read exactly for static synchronous runs
+    comm_bytes_round = float(jnp.max(ms["comm_bytes"]))
     cum_bytes_dev = cum_bytes_dev + jnp.sum(ms["comm_bytes"])
     eval_segment(seg - 1, state, ms)
     done = seg
@@ -149,6 +164,12 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         "rho": trainer.rho,
         "steps": steps,
         "compress": compression.kind if compression is not None else "none",
+        "topology": topology,
+        "drop_p": drop_p,
+        "local_updates": local_updates,
+        # compiled scan programs the run used (1 = zero recompiles across
+        # rounds; +1 tolerated for a ragged final segment)
+        "run_programs": getattr(trainer._run, "_cache_size", lambda: -1)(),
         "comm_bytes_per_round": comm_bytes_round,
         "comm_bytes_total": cum_bytes,
         "us_per_step": wall / timed_steps * 1e6,

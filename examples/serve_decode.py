@@ -40,13 +40,25 @@ def main():
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
     cache_len = args.prompt_len + args.gen_len
 
-    # prefill builds the cache in one pass...
+    # prefill builds the cache in ONE compiled pass (full-sequence chunked
+    # attention); its per-layer caches are scattered into the decode cache.
+    # Prefix-frontend archs (pixtral/musicgen) need their embeddings fed to
+    # prefill, so they keep the teacher-forced decode loop.
+    from repro.launch.serve import merge_prefill_cache
+
     decode = jax.jit(model.decode_step, donate_argnums=(3,))
-    cache = model.init_cache(args.batch, cache_len)
-    logits = None
     t0 = time.time()
-    for t in range(args.prompt_len):  # teacher-forced warm pass
-        logits, cache = decode(params, prompt[:, t:t + 1], jnp.int32(t), cache)
+    if cfg.frontend == "token":
+        logits, pf_caches = jax.jit(model.prefill)(params, {"tokens": prompt})
+        cache = merge_prefill_cache(model, pf_caches, args.batch, cache_len,
+                                    args.prompt_len)
+        jax.block_until_ready(logits)
+    else:
+        cache = model.init_cache(args.batch, cache_len)
+        logits = None
+        for t in range(args.prompt_len):
+            logits, cache = decode(params, prompt[:, t:t + 1], jnp.int32(t),
+                                   cache)
     t_prefill = time.time() - t0
 
     # ...then decode streams one token at a time against it

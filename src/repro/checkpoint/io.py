@@ -119,3 +119,53 @@ def restore_checkpoint(ckpt_dir: str, step: int | None = None, shardings=None):
             is_leaf=lambda x: x is None or hasattr(x, "__array__"),
         )
     return state, step
+
+
+# -- typed train-state checkpoints --------------------------------------------
+#
+# The generic pytree round-trip above flattens NamedTuples to plain tuples:
+# a restored DecentralizedState came back as a dict of tuples that cannot be
+# fed to trainer.step, and the CommState inside (error-feedback public
+# copies, PRNG key, schedule norms, the dynamics tracking variable) was easy
+# to silently drop by checkpointing ``state.params`` only.  These wrappers
+# persist the FULL DecentralizedState and rebuild the typed NamedTuples on
+# restore, so a resumed run continues bit-exactly (topology/fault coins are
+# pure functions of the restored round counter).
+
+
+def save_train_state(ckpt_dir: str, step: int, state) -> str:
+    """Persist a full :class:`repro.core.DecentralizedState` (incl. comm)."""
+    return save_checkpoint(ckpt_dir, step, dict(state._asdict()))
+
+
+def restore_train_state(ckpt_dir: str, step: int | None = None,
+                        shardings=None):
+    """Load a :func:`save_train_state` checkpoint as a typed
+    ``(DecentralizedState, step)``.
+
+    The CommState is reconstructed field-by-field; checkpoints written
+    before a CommState field was added (e.g. pre-``track``) are padded with
+    empty slots.  ``shardings`` may be a DecentralizedState of sharding
+    trees or the equivalent dict.
+    """
+    from repro.comm.protocol import CommState
+    from repro.core.drdsgd import DecentralizedState
+
+    if shardings is not None and hasattr(shardings, "_asdict"):
+        shardings = dict(shardings._asdict())
+    raw, step = restore_checkpoint(ckpt_dir, step=step, shardings=shardings)
+    if not isinstance(raw, dict) or "params" not in raw:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir} step {step} is not a train state "
+            f"(keys: {sorted(raw) if isinstance(raw, dict) else type(raw)})")
+    comm = raw.get("comm", ())
+    if isinstance(comm, (list, tuple)) and len(comm) > 0:
+        fields = tuple(comm) + ((),) * (len(CommState._fields) - len(comm))
+        comm = CommState(*fields)
+    state = DecentralizedState(
+        params=raw["params"],
+        opt_state=raw.get("opt_state", ()),
+        step=jnp.asarray(raw["step"], jnp.int32),
+        comm=comm,
+    )
+    return state, step

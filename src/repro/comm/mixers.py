@@ -195,7 +195,24 @@ class CompressedDenseMixer(_CompressedMixerBase):
         self.w = jnp.asarray(np.asarray(w), jnp.float32)
         self.k = int(np.asarray(w).shape[0])
 
+    def _round_w(self, state: CommState):
+        """The mixing matrix of the round about to run.
+
+        Static here; ``repro.dynamics`` subclasses return a traced per-round
+        W (time-varying topology / fault-masked), which composes with error
+        feedback exactly because this lowering re-mixes the full public-copy
+        matrix every round (no incremental Σ W θ̂ cache to invalidate).
+        """
+        return self.w
+
+    def _senders(self, w):
+        """Accounting count multiplied by the per-node payload: every node
+        sends once (static dense broadcast model); dynamics subclasses count
+        active directed links instead (traced)."""
+        return self.k
+
     def __call__(self, theta, state: CommState, *, round=None):
+        w = self._round_w(state)
         key, sub = jax.random.split(state.key)
         rate = self._rate(state)
         node_ks = per_node_keys(sub, jnp.arange(self.k))
@@ -213,7 +230,7 @@ class CompressedDenseMixer(_CompressedMixerBase):
             _, public, new_hat = self._encode_leaf(
                 xf, hf, fold_leaf(node_ks, i), rate)
             mixed = jnp.einsum(
-                "kl,ld->kd", self.w, public,
+                "kl,ld->kd", w, public,
                 precision=jax.lax.Precision.HIGHEST)
             out = xf + self.gamma * (mixed - public)
             out_theta.append(out.reshape(x.shape).astype(x.dtype))
@@ -225,7 +242,9 @@ class CompressedDenseMixer(_CompressedMixerBase):
         return unflat(out_theta), CommState(
             hat=unflat(out_hat) if self.ef else (), hat_mix=(), key=key,
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=self._round_wire_bits(theta, rate, senders=self.k))
+            wire_bits=self._round_wire_bits(theta, rate,
+                                            senders=self._senders(w)),
+            track=state.track)
 
     def bytes_per_round(self, params) -> int:
         """Total payload bytes injected per round (every node sends once),
@@ -354,7 +373,8 @@ class CompressedGossipMixer(_CompressedMixerBase):
         return t2, CommState(
             hat=h2, hat_mix=s2, key=key,
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=self._round_wire_bits(theta, rate, senders=sends))
+            wire_bits=self._round_wire_bits(theta, rate, senders=sends),
+            track=state.track)
 
     def _accumulate(self, acc, payload, weight, d):
         fused = getattr(self.compressor, "accumulate", None)

@@ -64,6 +64,11 @@ class CommState(NamedTuple):
     wire_bits: f32 — wire bits injected by the last round (all senders,
               rate-aware under a schedule; static bits for uncompressed
               mixers).
+    track:    dynamics state carried across rounds by wrapper mixers
+              (``repro.dynamics``): the gradient-tracking correction and
+              window anchor of ``LocalUpdateMixer`` live here.  () for every
+              plain mixer.  Inner mixers must treat it as opaque — wrappers
+              re-attach it after delegating (see LocalUpdateMixer).
     """
 
     hat: Any
@@ -73,6 +78,7 @@ class CommState(NamedTuple):
     res_ref: jax.Array
     rounds: jax.Array
     wire_bits: jax.Array
+    track: Any = ()
 
     @property
     def metrics(self) -> CommMetrics:
@@ -140,6 +146,14 @@ class Mixer:
 
     def _mix(self, theta):
         raise NotImplementedError
+
+    def mix_tree(self, tree, state: CommState):
+        """Pure consensus application to an arbitrary pytree (no state
+        advance, no codec) — used by wrappers that gossip auxiliary
+        variables, e.g. the gradient-tracking tracker exchange of
+        ``repro.dynamics.LocalUpdateMixer``.  Stateful/compressed mixers do
+        not implement this (their wire is entangled with their state)."""
+        return self._mix(tree)
 
     def __call__(self, theta, state: CommState, *, round=None):
         """One consensus round: ``theta', comm' = mixer(theta, comm, round=i)``.

@@ -45,6 +45,7 @@ from repro.core.api import DecentralizedTrainer, run_segments
 from repro.core.spec import (
     TrainerSpec,
     add_compression_cli_args,
+    add_dynamics_cli_args,
     compression_from_args,
 )
 
@@ -58,5 +59,6 @@ __all__ = [
     "DecentralizedState", "TrainStepConfig", "build_train_step",
     "build_eval_step", "init_state", "replicate_params",
     "DecentralizedTrainer", "run_segments",
-    "TrainerSpec", "add_compression_cli_args", "compression_from_args",
+    "TrainerSpec", "add_compression_cli_args", "add_dynamics_cli_args",
+    "compression_from_args",
 ]

@@ -88,6 +88,10 @@ class DecentralizedTrainer:
     compression: CompressionConfig | None = None
                                           # wire codec for the consensus step
                                           # (repro.comm); None = full precision
+    dynamics: Any = None                  # repro.dynamics.DynamicsConfig:
+                                          # time-varying topology / faults /
+                                          # local updates; None = static
+                                          # synchronous consensus
     mix_every: int = 1                    # consensus period (local SGD when >1)
     metrics_disagreement: bool = True     # Lemma-3 discrepancy metric; costs an
                                           # extra cross-node reduction per step
@@ -110,16 +114,34 @@ class DecentralizedTrainer:
         else:
             raise ValueError(f"unknown mixing {self.mixing!r}")
         self.rho = spectral_norm(self.w)
+        dyn = self.dynamics if (self.dynamics is not None
+                                and self.dynamics.enabled) else None
         if self.mixer is None:
-            self.mixer = (
-                make_identity_mixer() if self.mixing == "none"
-                else make_dense_mixer(self.w, compression=self.compression)
-            )
-        elif self.compression is not None and self.compression.enabled \
-                and self.mixer.compression is None:
-            raise ValueError(
-                "compression is set but the provided mixer is uncompressed; "
-                "build the mixer with the same CompressionConfig")
+            if dyn is not None and self.mixing != "none":
+                # dynamic topology / faults / local updates: dense-lowering
+                # stack from repro.dynamics (lazy import: dynamics builds on
+                # repro.core.consensus)
+                from repro.dynamics import build_dynamic_mixer
+
+                self.mixer = build_dynamic_mixer(
+                    dyn, self.w, compression=self.compression)
+            else:
+                self.mixer = (
+                    make_identity_mixer() if self.mixing == "none"
+                    else make_dense_mixer(self.w, compression=self.compression)
+                )
+        else:
+            if dyn is not None:
+                raise ValueError(
+                    "both a pre-built mixer and a DynamicsConfig were "
+                    "provided — wrap the mixer yourself (repro.dynamics."
+                    "LocalUpdateMixer / DynamicGossipMixer) or drop one")
+            if self.compression is not None and self.compression.enabled \
+                    and self.mixer.compression is None:
+                raise ValueError(
+                    "compression is set but the provided mixer is "
+                    "uncompressed; build the mixer with the same "
+                    "CompressionConfig")
         if self.optimizer is None:
             self.optimizer = sgd(self.lr)
         step_cfg = TrainStepConfig(

@@ -110,6 +110,12 @@ def build_train_step(
             "TrainStepConfig.compression is set but the mixer is "
             "uncompressed — build it with the same CompressionConfig "
             "(see repro.core.consensus factories)")
+    if cfg.mix_every > 1 and getattr(mixer, "period", 1) > 1:
+        raise ValueError(
+            "mix_every > 1 with a LocalUpdateMixer (period > 1) runs two "
+            "consensus clocks against each other — express the local-update "
+            "period in ONE place (the mixer's period is the dynamics-aware "
+            "spelling: it keeps CommState.rounds ticking every step)")
     # scheduled codecs move the rate every round, so the static estimate is
     # wrong for them: report the mixer's traced per-round wire_bits instead
     # (and skip computing the dead static estimate entirely)

@@ -28,10 +28,39 @@ from repro.comm.protocol import Mixer
 from repro.core.api import DecentralizedTrainer
 from repro.core.robust import RobustConfig
 
+from repro.dynamics.config import TOPOLOGY_KINDS as _TOPOLOGY_CHOICES
+
 _GRAPH_CHOICES = ("ring", "grid", "torus", "erdos_renyi", "geometric",
                   "complete", "star", "hypercube")
 _COMPRESS_CHOICES = ("none", "bf16", "int8", "int4", "topk", "randk")
 _SCHEDULE_CHOICES = ("none", "constant", "linear", "adaptive")
+
+
+def add_dynamics_cli_args(ap) -> None:
+    """Install the dynamic-graph / fault / local-update flags
+    (``repro.dynamics``) on an argparse parser."""
+    ap.add_argument("--topology", default="static", choices=_TOPOLOGY_CHOICES,
+                    help="per-round topology process: static graph, "
+                         "round-robin matchings, Bernoulli link dropout, or "
+                         "per-round geometric re-draws (repro.dynamics)")
+    ap.add_argument("--drop-p", type=float, default=0.0,
+                    help="link dropout probability for --topology dropout")
+    ap.add_argument("--radius", type=float, default=0.5,
+                    help="connection radius for --topology geometric")
+    ap.add_argument("--local-updates", type=int, default=1,
+                    help="H: optimizer steps per consensus round "
+                         "(local SGD between mixes when > 1)")
+    ap.add_argument("--gradient-tracking", action="store_true",
+                    help="carry the local-update drift correction "
+                         "(2x consensus wire; uncompressed mixers only)")
+    ap.add_argument("--straggler-p", type=float, default=0.0,
+                    help="per-node per-round probability of skipping "
+                         "communication")
+    ap.add_argument("--outage-p", type=float, default=0.0,
+                    help="per-window probability a node is down for a whole "
+                         "outage window (correlated faults)")
+    ap.add_argument("--outage-len", type=int, default=10,
+                    help="rounds per outage window")
 
 
 def add_compression_cli_args(ap) -> None:
@@ -109,6 +138,14 @@ class TrainerSpec:
     schedule_threshold: float = 0.5
     schedule_warmup: int = 10
     schedule_rounds: int = 300
+    topology: str = "static"              # per-round topology process
+    drop_p: float = 0.0                   # link dropout for topology=dropout
+    radius: float = 0.5                   # radius for topology=geometric
+    local_updates: int = 1                # H: steps per consensus round
+    gradient_tracking: bool = False       # local-update drift correction
+    straggler_p: float = 0.0              # per-round node comm skips
+    outage_p: float = 0.0                 # correlated node outages
+    outage_len: int = 10
     seed: int = 0
     jit: bool = True
 
@@ -116,6 +153,23 @@ class TrainerSpec:
 
     def robust_config(self) -> RobustConfig:
         return RobustConfig(mu=self.mu, enabled=self.robust)
+
+    def dynamics_config(self):
+        """The :class:`repro.dynamics.DynamicsConfig` this spec describes,
+        or None for today's static synchronous setup."""
+        from repro.dynamics import DynamicsConfig, FaultConfig
+
+        faults = None
+        if self.straggler_p > 0 or self.outage_p > 0:
+            faults = FaultConfig(
+                straggler_p=self.straggler_p, outage_p=self.outage_p,
+                outage_len=self.outage_len, seed=self.seed)
+        cfg = DynamicsConfig(
+            topology=self.topology, drop_p=self.drop_p, radius=self.radius,
+            local_updates=self.local_updates,
+            gradient_tracking=self.gradient_tracking,
+            faults=faults, seed=self.seed)
+        return cfg if cfg.enabled else None
 
     def compression_config(self) -> CompressionConfig | None:
         if isinstance(self.compress, CompressionConfig):
@@ -158,6 +212,7 @@ class TrainerSpec:
             mixer=mixer,
             mixing=self.mixing,
             compression=self.compression_config(),
+            dynamics=self.dynamics_config(),
             mix_every=self.mix_every,
             metrics_disagreement=self.metrics_disagreement,
             loss_has_aux=loss_has_aux,
@@ -185,6 +240,7 @@ class TrainerSpec:
         ap.add_argument("--lr", type=float, default=None)
         ap.add_argument("--seed", type=int, default=0)
         add_compression_cli_args(ap)
+        add_dynamics_cli_args(ap)
 
     @classmethod
     def from_args(cls, args, **overrides: Any) -> "TrainerSpec":
@@ -210,6 +266,14 @@ class TrainerSpec:
             schedule_threshold=args.schedule_threshold,
             schedule_warmup=args.schedule_warmup,
             schedule_rounds=args.schedule_rounds,
+            topology=getattr(args, "topology", "static"),
+            drop_p=getattr(args, "drop_p", 0.0),
+            radius=getattr(args, "radius", 0.5),
+            local_updates=getattr(args, "local_updates", 1),
+            gradient_tracking=getattr(args, "gradient_tracking", False),
+            straggler_p=getattr(args, "straggler_p", 0.0),
+            outage_p=getattr(args, "outage_p", 0.0),
+            outage_len=getattr(args, "outage_len", 10),
             seed=args.seed,
         )
         if args.nodes is not None:

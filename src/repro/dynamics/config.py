@@ -1,0 +1,105 @@
+"""Declarative dynamics setup: one config object from CLI to mixer.
+
+:class:`DynamicsConfig` is the dynamics twin of ``CompressionConfig`` —
+everything the trainer needs to build a time-varying consensus operator:
+which :class:`~repro.dynamics.schedule.TopologySchedule`, which faults,
+the local-update period H and whether gradient tracking is on.
+:func:`build_dynamic_mixer` assembles the mixer stack
+(schedule → faults → [compression] → [local updates]) for the dense
+simulation lowering; the gossip lowering is built explicitly via
+:class:`~repro.dynamics.mixers.DynamicGossipMixer` (it needs a mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.comm.compressors import CompressionConfig
+from repro.comm.protocol import Mixer
+from repro.dynamics.faults import FaultConfig
+from repro.dynamics.local import LocalUpdateMixer
+from repro.dynamics.mixers import DynamicCompressedDenseMixer, DynamicDenseMixer
+from repro.dynamics.schedule import make_schedule
+
+TOPOLOGY_KINDS = ("static", "round_robin", "dropout", "geometric")
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicsConfig:
+    """Dynamic-graph training knobs, threaded from CLI to the mixer stack.
+
+    Attributes:
+      topology: "static" | "round_robin" | "dropout" | "geometric" —
+        the per-round topology process (``repro.dynamics.schedule``).
+      drop_p: link dropout probability for topology="dropout".
+      radius: connection radius for topology="geometric" re-draws.
+      local_updates: H — optimizer steps per consensus round (H > 1 = local
+        SGD between mixes).
+      gradient_tracking: carry the drift correction of
+        :class:`~repro.dynamics.local.LocalUpdateMixer` (needs an
+        uncompressed wire; 2× consensus bytes).
+      faults: optional :class:`~repro.dynamics.faults.FaultConfig`
+        (stragglers / correlated outages / extra link dropout) composed on
+        top of the schedule.
+      seed: schedule PRNG seed (fault noise has its own seed in
+        ``FaultConfig``).
+    """
+
+    topology: str = "static"
+    drop_p: float = 0.0
+    radius: float = 0.5
+    local_updates: int = 1
+    gradient_tracking: bool = False
+    faults: FaultConfig | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.topology not in TOPOLOGY_KINDS:
+            raise ValueError(
+                f"unknown topology {self.topology!r}; options: "
+                f"{TOPOLOGY_KINDS}")
+        if self.local_updates < 1:
+            raise ValueError("local_updates (H) must be >= 1")
+        if self.topology == "dropout" and not 0.0 <= self.drop_p < 1.0:
+            raise ValueError("drop_p must be in [0, 1)")
+        if self.drop_p > 0 and self.topology != "dropout":
+            # a sweep over --drop-p without --topology dropout must fail
+            # loudly, not silently train p identical static baselines
+            raise ValueError(
+                f"drop_p={self.drop_p} has no effect with topology="
+                f"{self.topology!r}; pass topology='dropout' (or use "
+                "FaultConfig.link_drop_p to compose dropout with another "
+                "schedule)")
+
+    @property
+    def enabled(self) -> bool:
+        """False when the config describes today's static synchronous run."""
+        return (self.topology != "static"
+                or self.local_updates > 1
+                or self.gradient_tracking
+                or (self.faults is not None and self.faults.enabled))
+
+
+def build_dynamic_mixer(cfg: DynamicsConfig, w: np.ndarray,
+                        compression: CompressionConfig | None = None
+                        ) -> Mixer:
+    """Assemble the dense-lowering mixer stack for a dynamics config.
+
+    ``w`` is the base doubly-stochastic matrix (e.g. Metropolis weights of
+    the configured graph); topology="geometric" ignores its weights and
+    keeps only K.
+    """
+    schedule = make_schedule(
+        cfg.topology, w=w, k=int(np.asarray(w).shape[0]),
+        drop_p=cfg.drop_p, radius=cfg.radius, seed=cfg.seed)
+    if compression is not None and compression.enabled:
+        mixer: Mixer = DynamicCompressedDenseMixer(
+            schedule, compression, faults=cfg.faults)
+    else:
+        mixer = DynamicDenseMixer(schedule, faults=cfg.faults)
+    if cfg.local_updates > 1 or cfg.gradient_tracking:
+        mixer = LocalUpdateMixer(mixer, cfg.local_updates,
+                                 gradient_tracking=cfg.gradient_tracking)
+    return mixer

@@ -1,0 +1,98 @@
+"""Fault injection for dynamic-graph consensus: link drops, stragglers, outages.
+
+Every fault is expressed as a per-round symmetric link *keep* matrix applied
+to the round's mixing matrix via
+:func:`repro.graphs.mixing.renormalize_masked_weights`, so the faulted W
+stays doubly stochastic (dropped mass returns to the incident diagonals) and
+the node average is preserved no matter which links fail.
+
+Semantics:
+
+* link dropout  — every link fails independently with ``link_drop_p`` each
+  round (iid wireless-style fading).
+* stragglers    — a node fails to *communicate* for one round with
+  ``straggler_p``: all its incident links are down, its row of W degenerates
+  to e_i, so θ_i keeps its local update but neither sends nor receives.
+  (The local gradient step still happens — the mixer cannot reach into the
+  optimizer; this models slow links, not dead compute.)
+* correlated outages — a node goes down for ``outage_len`` *consecutive*
+  rounds with probability ``outage_p`` per window (the coin is drawn per
+  ``rounds // outage_len`` window, so the failure is temporally correlated,
+  unlike the per-round straggler coin).
+
+All randomness derives from ``fold_in(PRNGKey(seed), round)`` — a counter,
+not a carried key — so the fault trace is a pure function of the round
+index: dense and gossip lowerings agree bit-for-bit, and a restored
+checkpoint replays the identical fault sequence.  Everything is traced;
+changing fault rates mid-run never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.mixing import symmetric_uniform
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-round fault process for the dynamics subsystem.
+
+    Attributes:
+      link_drop_p: iid per-link per-round drop probability.
+      straggler_p: iid per-node per-round probability of skipping the round
+        (no send, no receive; local update kept).
+      outage_p: per-window probability a node is down for a whole window of
+        ``outage_len`` rounds (correlated failures).
+      outage_len: rounds per outage window.
+      seed: PRNG seed of the fault process (independent of codec noise).
+    """
+
+    link_drop_p: float = 0.0
+    straggler_p: float = 0.0
+    outage_p: float = 0.0
+    outage_len: int = 10
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("link_drop_p", "straggler_p", "outage_p"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+        if self.outage_len < 1:
+            raise ValueError("outage_len must be >= 1")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.link_drop_p > 0 or self.straggler_p > 0
+                or self.outage_p > 0)
+
+
+def fault_keep_matrix(cfg: FaultConfig, rounds, k: int):
+    """The round's symmetric (K, K) link keep mask and (K,) node-up vector.
+
+    ``rounds`` is the (traced) round counter.  Returns float32 ``keep`` in
+    {0, 1} (diagonal meaningless) and float32 ``up`` in {0, 1}; a link is
+    kept iff its own coin passes AND both endpoints are up.
+    """
+    base = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), rounds)
+    k_link, k_strag = jax.random.split(base)
+    keep = jnp.ones((k, k), jnp.float32)
+    if cfg.link_drop_p > 0:
+        u = symmetric_uniform(k_link, k)
+        keep = keep * (u >= cfg.link_drop_p).astype(jnp.float32)
+    up = jnp.ones((k,), jnp.float32)
+    if cfg.straggler_p > 0:
+        us = jax.random.uniform(k_strag, (k,), jnp.float32)
+        up = up * (us >= cfg.straggler_p).astype(jnp.float32)
+    if cfg.outage_p > 0:
+        window = rounds // cfg.outage_len
+        k_out = jax.random.fold_in(
+            jax.random.PRNGKey(cfg.seed ^ 0x5DEECE66), window)
+        uo = jax.random.uniform(k_out, (k,), jnp.float32)
+        up = up * (uo >= cfg.outage_p).astype(jnp.float32)
+    keep = keep * up[:, None] * up[None, :]
+    return keep, up

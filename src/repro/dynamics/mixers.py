@@ -1,0 +1,341 @@
+"""Consensus mixers over time-varying graphs, faults, and local-update rounds.
+
+Every mixer here follows the uniform v2 protocol
+(``mix(theta, CommState, *, round)``) and keeps the round's topology a
+*traced operand*: the schedule's (K, K) matrix — fault-masked by
+:func:`repro.dynamics.faults.fault_keep_matrix` — rides into the compiled
+step as data, so a whole dropout/straggler/local-update sweep compiles ONE
+program per configuration (asserted by ``benchmarks/fig9_dynamics.py``).
+
+* :class:`DynamicDenseMixer`   — einsum with the traced per-round W; runs
+  any schedule including moving-support ones (geometric re-draws).
+* :class:`DynamicGossipMixer`  — shard_map gossip over the *static* edge
+  coloring of the union support with traced per-matching weights/masks;
+  optionally int8-quantized on the wire via the masked Pallas
+  ``quant_gossip`` kernels (memoryless — see note below).
+* :class:`DynamicCompressedDenseMixer` — error-feedback compressed
+  consensus (any ``repro.comm`` codec) under a dynamic topology.  EF
+  composes with faults *exactly* on this lowering because the dense mixer
+  re-mixes the full public-copy matrix every round; the gossip EF lowering's
+  incremental ``hat_mix`` cache (s_i = Σ_j W_ij θ̂_j) is only valid for a
+  static W, which is why the dynamic gossip wire is memoryless.
+* :class:`LocalUpdateMixer`    — wraps ANY v2 mixer: H−1 local rounds
+  between consensus rounds, with an optional gradient-tracking correction
+  (carried in ``CommState.track``) that steers each local step by the gap
+  between globally-mixed and local window progress.
+
+Wire accounting: the dynamic mixers count *active directed links* × the
+per-node payload each round (traced ``wire_bits``), so a straggler/outage
+round whose links are all masked reports exactly 0 bytes — what a
+link-state-aware transport would move.  This is a per-link model; the static
+``DenseMixer`` keeps its historical every-node-injects-once estimate.
+
+Conventions (H / dropout / γ — see also the package docstring):
+  * ``rounds`` in ``CommState`` counts *optimizer steps* under
+    ``LocalUpdateMixer`` (the wrapper owns the clock); the topology sequence
+    and any compression schedule anneal on that clock.
+  * faults and topology coins are pure functions of the round index
+    (``fold_in(PRNGKey(seed), round)``) — checkpoint-restore replays the
+    identical sequence, and dense/gossip lowerings agree bit-for-bit.
+  * γ (``CompressionConfig.resolved_gamma``) damps the EF correction
+    exactly as in the static mixers; dropout makes each round's effective
+    spectral gap smaller, so under heavy dropout prefer γ at or below the
+    static recommendation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.compressors import CompressionConfig, make_compressor
+from repro.comm.mixers import CompressedDenseMixer
+from repro.comm.protocol import CommState, Mixer
+from repro.dynamics.faults import FaultConfig, fault_keep_matrix
+from repro.dynamics.schedule import TopologySchedule
+from repro.graphs.mixing import renormalize_masked_weights
+from repro.utils.compat import shard_map, shard_map_unchecked
+from repro.utils.tree import tree_bytes
+
+AxisName = str | tuple[str, ...]
+
+
+def _active_links(w) -> jax.Array:
+    """Traced count of directed links with nonzero weight this round."""
+    k = w.shape[0]
+    off = 1.0 - jnp.eye(k, dtype=jnp.float32)
+    return jnp.sum((w > 0).astype(jnp.float32) * off)
+
+
+class _DynamicTopology:
+    """Shared per-round weight derivation: schedule ∘ faults."""
+
+    def _init_topology(self, schedule: TopologySchedule,
+                       faults: FaultConfig | None):
+        # "topology", not "schedule": the compressed base class already owns
+        # a .schedule (the codec-rate schedule) and both compose here
+        self.topology = schedule
+        self.faults = (faults if faults is not None and faults.enabled
+                       else None)
+        self.k = schedule.k
+
+    def _round_topology_w(self, rounds) -> jax.Array:
+        w = self.topology.round_weights(rounds)
+        if self.faults is not None:
+            keep, _ = fault_keep_matrix(self.faults, rounds, self.k)
+            w = renormalize_masked_weights(w, keep)
+        return w
+
+
+class DynamicDenseMixer(Mixer, _DynamicTopology):
+    """θ ← W_r·θ with a traced per-round W_r (einsum lowering).
+
+    Bit-identical to :class:`repro.core.consensus.DenseMixer` under a
+    :class:`~repro.dynamics.schedule.StaticSchedule` with no faults.
+    """
+
+    traced_wire = True
+
+    def __init__(self, schedule: TopologySchedule,
+                 faults: FaultConfig | None = None,
+                 compute_dtype=jnp.float32):
+        self._init_topology(schedule, faults)
+        self.compute_dtype = compute_dtype
+
+    def _apply(self, w, theta):
+        def leaf(x):
+            out = jnp.einsum(
+                "kl,l...->k...", w, x.astype(self.compute_dtype),
+                precision=jax.lax.Precision.HIGHEST,
+            )
+            return out.astype(x.dtype)
+
+        return jax.tree.map(leaf, theta)
+
+    def mix_tree(self, tree, state: CommState):
+        """Pure consensus application with this round's topology (no state
+        advance) — the tracker exchange of gradient tracking."""
+        return self._apply(self._round_topology_w(state.rounds), tree)
+
+    def __call__(self, theta, state: CommState, *, round=None):
+        w = self._round_topology_w(state.rounds)
+        mixed = self._apply(w, theta)
+        per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
+        return mixed, state._replace(
+            rounds=state.rounds + 1,
+            wire_bits=_active_links(w) * per_node_bits,
+        )
+
+    def bytes_per_round(self, params) -> int:
+        """Fault-free static estimate over the base support (per-link)."""
+        try:
+            base = np.asarray(self.topology.base_weights())
+            sends = int(np.count_nonzero(base) - self.k)
+        except ValueError:  # moving support: assume complete
+            sends = self.k * (self.k - 1)
+        return sends * tree_bytes(params) // self.k
+
+
+class DynamicGossipMixer(Mixer, _DynamicTopology):
+    """Gossip over the static union-support matchings with traced weights.
+
+    The edge coloring (and thus the ppermute structure) is frozen at build
+    time from the schedule's base support; each round the (K,) self-weights
+    and per-matching edge weights/masks are *gathered out of the traced
+    W_r*, so dropped links carry weight 0 and the program never recompiles.
+    Requires K == prod(mesh node axes), like the static gossip mixer.
+
+    With ``quantized`` (an int8 ``CompressionConfig``), each matching runs
+    the fused masked Pallas kernels: quantize(mask) → ppermute(int8 payload
+    + scales) → masked dequantize-accumulate.  This wire is *memoryless*
+    (fresh C(θ) every round, no error feedback): the EF lowering's
+    incremental Σ W θ̂ cache needs a static W.  Pair dynamic EF compression
+    with :class:`DynamicCompressedDenseMixer` instead.
+    """
+
+    traced_wire = True
+
+    def __init__(self, schedule: TopologySchedule, mesh, node_axis: AxisName,
+                 param_specs, faults: FaultConfig | None = None,
+                 quantized: CompressionConfig | None = None):
+        self._init_topology(schedule, faults)
+        decomp = schedule.decomposition()
+        axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
+        k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
+        if self.k != k_mesh:
+            raise ValueError(
+                f"gossip mixer needs K == mesh node size: K={self.k}, "
+                f"mesh {axes}={k_mesh}")
+        self.mesh = mesh
+        self.axis: AxisName = (node_axis if isinstance(node_axis, str)
+                               else tuple(node_axis))
+        self.param_specs = param_specs
+        self.perms = decomp.ppermute_pairs()
+        self._perm_idx = [np.asarray(p, np.int64) for p in decomp.matchings]
+        self._arange = np.arange(self.k)
+        self._p_node = jax.sharding.PartitionSpec(self.axis)
+        self.quantized = None
+        if quantized is not None and quantized.enabled:
+            if quantized.kind != "int8":
+                raise ValueError(
+                    "the masked quant_gossip wire serves kind='int8'")
+            if quantized.schedule is not None:
+                raise ValueError(
+                    "rate schedules are not supported on the masked wire")
+            self.quantized = quantized
+            self._compressor = make_compressor(
+                dataclasses.replace(quantized, use_kernel=True))
+
+    @property
+    def compression(self):
+        return self.quantized
+
+    def init_state(self, params) -> CommState:
+        state = super().init_state(params)
+        if self.quantized is not None:
+            state = state._replace(
+                key=jax.random.PRNGKey(self.quantized.seed))
+        return state
+
+    def _round_vectors(self, w):
+        """(self_w, [match_w], [mask]) gathered from the traced W_r."""
+        self_w = jnp.diagonal(w)
+        match_ws, masks = [], []
+        for pidx in self._perm_idx:
+            active = pidx != self._arange
+            pw = jnp.where(active, w[self._arange, pidx], 0.0)
+            match_ws.append(pw)
+            masks.append((pw > 0).astype(jnp.float32))
+        return self_w, match_ws, masks
+
+    def _node_index(self):
+        if isinstance(self.axis, str):
+            return jax.lax.axis_index(self.axis)
+        idx = jax.lax.axis_index(self.axis[0])
+        for a in self.axis[1:]:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def mix_tree(self, tree, state: CommState):
+        """Full-precision gossip of an arbitrary pytree with this round's
+        weights (gradient-tracking tracker exchange)."""
+        w = self._round_topology_w(state.rounds)
+        self_w, match_ws, _ = self._round_vectors(w)
+        return self._plain_gossip(tree, self_w, match_ws)
+
+    def _plain_gossip(self, theta, self_w, match_ws):
+        from repro.core.consensus import gossip_mix_local
+
+        body = partial(gossip_mix_local, axis=self.axis, perms=self.perms)
+        return shard_map(
+            lambda t, sw, mws: body(t, sw, mws),
+            mesh=self.mesh,
+            in_specs=(self.param_specs, self._p_node,
+                      [self._p_node] * len(self.perms)),
+            out_specs=self.param_specs,
+        )(theta, self_w, list(match_ws))
+
+    def _quantized_gossip(self, theta, self_w, match_ws, masks, key):
+        from repro.kernels.quant_gossip.ops import masked_quant_gossip_round
+
+        cfg = self.quantized
+        interpret = cfg.interpret or jax.default_backend() != "tpu"
+
+        def body(t, sw, mws, mks, k0):
+            leaves, treedef = jax.tree.flatten(t)
+            out = []
+            for i, x in enumerate(leaves):
+                k_local = x.shape[0]
+                d = x.size // k_local
+                xf = x.reshape(k_local, d).astype(jnp.float32)
+                acc = xf * sw[:, None]
+                lk = jax.random.fold_in(
+                    jax.random.fold_in(k0, i), self._node_index())
+                for m, (pw, mk, perm) in enumerate(
+                        zip(mws, mks, self.perms)):
+                    acc = masked_quant_gossip_round(
+                        xf, acc, pw, mk, self.axis, perm,
+                        jax.random.fold_in(lk, m),
+                        block_d=cfg.block_d, interpret=interpret,
+                        use_kernel=cfg.use_kernel)
+                out.append(acc.reshape(x.shape).astype(x.dtype))
+            return treedef.unflatten(out)
+
+        p_rep = jax.sharding.PartitionSpec()
+        n = len(self.perms)
+        return shard_map_unchecked(
+            body,
+            mesh=self.mesh,
+            in_specs=(self.param_specs, self._p_node,
+                      [self._p_node] * n, [self._p_node] * n, p_rep),
+            out_specs=self.param_specs,
+        )(theta, self_w, list(match_ws), list(masks), key)
+
+    def __call__(self, theta, state: CommState, *, round=None):
+        w = self._round_topology_w(state.rounds)
+        self_w, match_ws, masks = self._round_vectors(w)
+        key = state.key
+        if self.quantized is None:
+            mixed = self._plain_gossip(theta, self_w, match_ws)
+            per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
+        else:
+            key, sub = jax.random.split(state.key)
+            mixed = self._quantized_gossip(theta, self_w, match_ws, masks,
+                                           sub)
+            per_node_bits = 8.0 * sum(
+                self._compressor.payload_bytes(x.size // self.k)
+                for x in jax.tree.leaves(theta))
+        sends = sum(jnp.sum(m) for m in masks)
+        return mixed, state._replace(
+            key=key,
+            rounds=state.rounds + 1,
+            wire_bits=jnp.asarray(sends * per_node_bits, jnp.float32),
+        )
+
+    def bytes_per_round(self, params) -> int:
+        """Fault-free static estimate: every matching edge active."""
+        sends = sum(len(pairs) for pairs in self.perms)
+        if self.quantized is None:
+            return sends * tree_bytes(params) // self.k
+        per_node = sum(self._compressor.payload_bytes(x.size // self.k)
+                       for x in jax.tree.leaves(params))
+        return sends * per_node
+
+
+class DynamicCompressedDenseMixer(CompressedDenseMixer, _DynamicTopology):
+    """Error-feedback compressed consensus over a dynamic topology.
+
+    Inherits the whole EF machinery (public copies, innovation codec,
+    schedules) from :class:`~repro.comm.mixers.CompressedDenseMixer` and
+    swaps the static W for the schedule's traced per-round matrix — exact,
+    because this lowering re-mixes the full public-copy matrix every round.
+    A node with no live links this round mixes with W row e_i: its θ (and
+    accounting) are untouched; its accumulated innovation ships on its next
+    live round.
+    """
+
+    def __init__(self, schedule: TopologySchedule,
+                 compression: CompressionConfig,
+                 faults: FaultConfig | None = None):
+        try:
+            base = np.asarray(schedule.base_weights())
+        except ValueError:  # moving support (geometric): only k is needed
+            base = np.eye(schedule.k)
+        super().__init__(base, compression)
+        self._init_topology(schedule, faults)
+
+    @property
+    def traced_wire(self) -> bool:
+        return True  # active-link accounting varies per round
+
+    def _round_w(self, state: CommState):
+        return self._round_topology_w(state.rounds)
+
+    def _senders(self, w):
+        # per-link accounting (matches the other dynamic mixers): each
+        # active directed link moves one node payload
+        return _active_links(w)

@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.topology import Graph
@@ -55,6 +57,56 @@ def lazy_metropolis_weights(graph: Graph, laziness: float = 0.5) -> np.ndarray:
         raise ValueError("laziness must be in (0, 1]")
     w = metropolis_weights(graph)
     return (1.0 - laziness) * np.eye(graph.num_nodes) + laziness * w
+
+
+def metropolis_weights_traced(adj):
+    """Traced (jnp) twin of :func:`metropolis_weights` for dynamic graphs.
+
+    ``adj`` is a (K, K) symmetric 0/1 adjacency that may be a *traced* jax
+    array (per-round re-draws, link dropout), so a time-varying topology can
+    re-derive its Metropolis weights on device every round without
+    recompiling.  Zero-degree (isolated) nodes degenerate to W_ii = 1.
+    """
+    k = adj.shape[0]
+    eye = jnp.eye(k, dtype=jnp.float32)
+    a = adj.astype(jnp.float32) * (1.0 - eye)
+    deg = a.sum(axis=1)
+    w = a / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
+    return w + jnp.diag(1.0 - w.sum(axis=1))
+
+
+def renormalize_masked_weights(w, keep):
+    """Mask links out of a doubly-stochastic W, returning mass to the diagonal.
+
+    ``w`` is a (K, K) doubly-stochastic matrix and ``keep`` a symmetric
+    (K, K) 0/1 link mask (diagonal ignored); both may be traced.  Every
+    dropped link's weight moves to the *two* incident diagonals:
+
+        W'_ij = W_ij · keep_ij                     (i ≠ j)
+        W'_ii = W_ii + Σ_j W_ij · (1 − keep_ij)
+
+    which preserves symmetry and (exact) row sums, so W' stays doubly
+    stochastic — the on-device Metropolis renormalization of the dynamics
+    subsystem.  With ``keep ≡ 1`` the result is bit-identical to ``w``.
+    """
+    k = w.shape[0]
+    eye = jnp.eye(k, dtype=jnp.float32)
+    off = w * (1.0 - eye)
+    kept = off * keep.astype(jnp.float32)
+    returned = (off - kept).sum(axis=1)
+    return kept + jnp.diag(jnp.diagonal(w) + returned)
+
+
+def symmetric_uniform(key, k: int):
+    """Symmetric (K, K) U[0,1) matrix: one shared draw per unordered pair.
+
+    Both consensus lowerings (dense einsum and gossip matchings) read link
+    coins from this one matrix, so dropout decisions agree bit-for-bit
+    across lowerings at a fixed seed.
+    """
+    u = jax.random.uniform(key, (k, k), jnp.float32)
+    upper = jnp.triu(u, 1)
+    return upper + upper.T
 
 
 def is_doubly_stochastic(w: np.ndarray, atol: float = 1e-9) -> bool:

@@ -46,6 +46,31 @@ def _dequant_acc_kernel(w_ref, q_ref, scale_ref, acc_ref, o_ref):
                   + w_ref[0] * scale_ref[0, 0] * q).astype(o_ref.dtype)
 
 
+def _masked_quantize_kernel(qmax_ref, x_ref, u_ref, m_ref, q_ref, scale_ref):
+    # per-round send mask rides in as a (1, 1) traced per-node scalar: a
+    # masked-out sender (dropped link / straggler round) emits an all-zero
+    # payload and a zero scale, so the wire carries nothing and the receive
+    # side reconstructs exactly 0 — one compiled program for every round of
+    # a dynamic topology (repro.dynamics)
+    qmax = qmax_ref[0, 0]
+    m = m_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    y = jnp.floor(x / scale + u_ref[...].astype(jnp.float32))
+    q_ref[...] = (jnp.clip(y, -qmax, qmax) * m).astype(jnp.int8)
+    scale_ref[0, 0] = scale * m
+
+
+def _masked_dequant_acc_kernel(w_ref, m_ref, q_ref, scale_ref, acc_ref,
+                               o_ref):
+    # a masked link contributes exactly acc (0·w·scale·q adds float zero)
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                  + m_ref[0] * w_ref[0] * scale_ref[0, 0] * q
+                  ).astype(o_ref.dtype)
+
+
 def _pick_block(d: int, block_d: int) -> int:
     block_d = min(block_d, d)
     if d % block_d:
@@ -110,3 +135,66 @@ def dequant_accumulate(acc, q, scales, w, *, block_d: int = 65536,
         out_shape=jax.ShapeDtypeStruct((k, d), acc.dtype),
         interpret=interpret,
     )(w, q, scales, acc)
+
+
+def masked_quantize_blockwise(x, u, mask, *, qmax=127, block_d: int = 65536,
+                              interpret: bool = False):
+    """Masked-sender variant: x, u (K, D); mask (K,) in {0, 1} traced.
+
+    Masked rows emit an all-zero payload and zero scales (nothing on the
+    wire); the mask is a traced operand so per-round link faults never
+    recompile.
+    """
+    k, d = x.shape
+    block_d = _pick_block(d, block_d)
+    n_blk = d // block_d
+    grid = (k, n_blk)
+    qmax_arr = jnp.reshape(jnp.asarray(qmax, jnp.float32), (1, 1))
+    mask2 = jnp.reshape(mask.astype(jnp.float32), (k, 1))
+    return pl.pallas_call(
+        _masked_quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.int8),
+            jax.ShapeDtypeStruct((k, n_blk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qmax_arr, x, u, mask2)
+
+
+def masked_dequant_accumulate(acc, q, scales, w, mask, *,
+                              block_d: int = 65536, interpret: bool = False):
+    """Masked-receive variant: acc + mask·w·dequant(q, scales), fused.
+
+    ``w`` and ``mask`` are per-node (K,) traced operands — the per-round
+    neighbor weights/mask of a dynamic topology; a masked link contributes
+    exactly ``acc``.
+    """
+    k, d = acc.shape
+    n_blk = scales.shape[1]
+    block_d = d // n_blk
+    grid = (k, n_blk)
+    return pl.pallas_call(
+        _masked_dequant_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, d), acc.dtype),
+        interpret=interpret,
+    )(w, mask.astype(jnp.float32), q, scales, acc)

@@ -57,6 +57,64 @@ def dequant_accumulate(acc, q, scales, w, *, interpret: bool = False,
     return _r.dequant_accumulate_ref(acc, q, scales, w)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "interpret", "use_kernel"))
+def masked_quantize_blockwise(x, u, mask, *, qmax=127, block_d: int = 65536,
+                              interpret: bool = False,
+                              use_kernel: bool = True):
+    """Masked-sender quantize: masked rows put nothing on the wire.
+
+    ``mask`` (K,) in {0, 1} is traced, like ``qmax`` — per-round topology
+    faults reuse one compiled program.
+    """
+    if _use_pallas(interpret, use_kernel):
+        on_tpu = jax.default_backend() == "tpu"
+        return _k.masked_quantize_blockwise(
+            x, u, mask, qmax=qmax, block_d=block_d,
+            interpret=interpret or not on_tpu)
+    return _r.masked_quantize_blockwise_ref(x, u, mask, qmax=qmax,
+                                            block_d=block_d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def masked_dequant_accumulate(acc, q, scales, w, mask, *,
+                              interpret: bool = False,
+                              use_kernel: bool = True):
+    """acc + mask·w·dequant(q, scales): per-round neighbor weights *and*
+    link mask are traced operands (the dynamic-topology receive combine)."""
+    w = jnp.reshape(jnp.asarray(w, jnp.float32), (-1,))
+    mask = jnp.reshape(jnp.asarray(mask, jnp.float32), (-1,))
+    if _use_pallas(interpret, use_kernel):
+        on_tpu = jax.default_backend() == "tpu"
+        return _k.masked_dequant_accumulate(
+            acc, q, scales, w, mask, interpret=interpret or not on_tpu)
+    return _r.masked_dequant_accumulate_ref(acc, q, scales, w, mask)
+
+
+def masked_quant_gossip_round(x, acc, weight, mask, axis, perm, key, *,
+                              qmax: int = 127, block_d: int = 65536,
+                              interpret: bool = False,
+                              use_kernel: bool = True):
+    """One masked compressed matching exchange (must run inside shard_map).
+
+    Like :func:`quant_gossip_round` with the per-round link mask threaded to
+    both ends: masked senders emit a zero payload (their innovation never
+    crosses the wire) and masked receivers combine exactly 0.  ``weight``
+    and ``mask`` are traced (K_local,) operands, so every round of a dynamic
+    topology reuses one compiled program.
+    """
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q, scales = masked_quantize_blockwise(x, u, mask, qmax=qmax,
+                                          block_d=block_d,
+                                          interpret=interpret,
+                                          use_kernel=use_kernel)
+    q = jax.lax.ppermute(q, axis, perm)
+    scales = jax.lax.ppermute(scales, axis, perm)
+    return masked_dequant_accumulate(acc, q, scales, weight, mask,
+                                     interpret=interpret,
+                                     use_kernel=use_kernel)
+
+
 def quant_gossip_round(x, acc, weight, axis, perm, key, *, qmax: int = 127,
                        block_d: int = 65536, interpret: bool = False,
                        use_kernel: bool = True):

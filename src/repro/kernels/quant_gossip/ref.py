@@ -45,3 +45,18 @@ def dequant_accumulate_ref(acc, q, scales, w):
     w = jnp.reshape(w, (-1,))
     return (acc.astype(jnp.float32)
             + w[:, None] * dequantize_blockwise_ref(q, scales)).astype(acc.dtype)
+
+
+def masked_quantize_blockwise_ref(x, u, mask, *, qmax=127,
+                                  block_d: int = 65536):
+    """Masked-sender oracle: masked rows emit zero payload and zero scales."""
+    q, scales = quantize_blockwise_ref(x, u, qmax=qmax, block_d=block_d)
+    m = jnp.reshape(mask.astype(jnp.float32), (-1, 1))
+    q = jnp.where(m > 0, q, jnp.int8(0))
+    return q, scales * m
+
+
+def masked_dequant_accumulate_ref(acc, q, scales, w, mask):
+    """acc + mask·w·dequantize(q, scales); masked links add exactly 0."""
+    m = jnp.reshape(mask.astype(jnp.float32), (-1,))
+    return dequant_accumulate_ref(acc, q, scales, jnp.reshape(w, (-1,)) * m)

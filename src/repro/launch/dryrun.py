@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_arch
+from repro.dynamics import TOPOLOGY_KINDS
 from repro.core import (
     CompressionConfig, RobustConfig, TrainStepConfig,
     add_compression_cli_args, build_train_step, compression_from_args,
@@ -72,7 +73,8 @@ def _shardings(mesh, spec_tree):
 
 def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
                 graph_kind: str = "ring",
-                compression: CompressionConfig | None = None):
+                compression: CompressionConfig | None = None,
+                topology: str = "dropout", drop_p: float = 0.2):
     """Returns (fn, example_args, in_shardings)."""
     model = TransformerLM(cfg)
     hier = "fsdp" in mesh.axis_names
@@ -89,6 +91,20 @@ def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
         mixer = make_gossip_mixer(
             permutation_decomposition(w), mesh, node_axis, pspecs,
             compression=compression)
+    elif mixer_kind == "gossip-dynamic":
+        # time-varying topology lowering (repro.dynamics): static ppermute
+        # structure over the union support, traced per-round weights/masks;
+        # int8 compression runs the masked quant_gossip kernel wire
+        from repro.dynamics import DynamicGossipMixer, make_schedule
+
+        if compression is not None and compression.enabled \
+                and compression.kind != "int8":
+            raise ValueError(
+                "gossip-dynamic serves --compress int8 (masked kernel wire) "
+                "or uncompressed")
+        mixer = DynamicGossipMixer(
+            make_schedule(topology, w=w, k=k, drop_p=drop_p),
+            mesh, node_axis, pspecs, quantized=compression)
     else:
         raise ValueError(mixer_kind)
     step_cfg = TrainStepConfig(
@@ -161,10 +177,10 @@ def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh):
 
 
 def build_fn(cfg, shape, mesh, mixer_kind, graph_kind="ring",
-             compression=None):
+             compression=None, topology="dropout", drop_p=0.2):
     if shape.kind == "train":
         return build_train(cfg, shape, mesh, mixer_kind, graph_kind,
-                           compression)
+                           compression, topology=topology, drop_p=drop_p)
     if shape.kind == "prefill":
         return build_prefill(cfg, shape, mesh)
     return build_decode(cfg, shape, mesh)
@@ -183,8 +199,10 @@ def _cost_entries(compiled) -> dict:
 
 
 def compile_and_measure(cfg, shape, mesh, mixer_kind, want_hlo=True,
-                        graph_kind="ring", compression=None):
-    fn, args = build_fn(cfg, shape, mesh, mixer_kind, graph_kind, compression)
+                        graph_kind="ring", compression=None,
+                        topology="dropout", drop_p=0.2):
+    fn, args = build_fn(cfg, shape, mesh, mixer_kind, graph_kind, compression,
+                        topology=topology, drop_p=drop_p)
     t0 = time.time()
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
@@ -235,13 +253,15 @@ def _with_groups(cfg: ArchConfig, g: int, keep_chunking: bool = False
 
 
 def fit_scan_correction(cfg, shape, mesh, mixer_kind, graph_kind="ring",
-                        compression=None, keep_chunking=False):
+                        compression=None, keep_chunking=False,
+                        topology="dropout", drop_p=0.2):
     """Unrolled G=1 / G=2 probes -> cost(G) = a + b*G, evaluated at n_groups."""
     probes = {}
     for g in (1, 2):
         r = compile_and_measure(
             _with_groups(cfg, g, keep_chunking=keep_chunking), shape, mesh,
-            mixer_kind, graph_kind=graph_kind, compression=compression)
+            mixer_kind, graph_kind=graph_kind, compression=compression,
+            topology=topology, drop_p=drop_p)
         probes[g] = {
             "flops": r["cost"]["flops"],
             "bytes": r["cost"]["bytes"],
@@ -263,7 +283,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
             out_dir: str, skip_existing: bool = True, graph_kind: str = "ring",
             compression=None, compute_dtype=None, moe_constraints: bool = False,
             keep_chunking: bool = False, variant: str = "",
-            hier_nodes: int = 0, remat_policy: str = "") -> dict | None:
+            hier_nodes: int = 0, remat_policy: str = "",
+            topology: str = "dropout", drop_p: float = 0.2) -> dict | None:
     cfg = get_arch(arch)
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -309,11 +330,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
     model = TransformerLM(cfg)
     print(f"[run ] {tag}: {model.num_params()/1e9:.2f}B params ...", flush=True)
     res = compile_and_measure(cfg, shape, mesh, mixer_kind,
-                              graph_kind=graph_kind, compression=compression)
+                              graph_kind=graph_kind, compression=compression,
+                              topology=topology, drop_p=drop_p)
     fitted = fit_scan_correction(cfg, shape, mesh, mixer_kind,
                                  graph_kind=graph_kind,
                                  compression=compression,
-                                 keep_chunking=keep_chunking)
+                                 keep_chunking=keep_chunking,
+                                 topology=topology, drop_p=drop_p)
 
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
     mf = model_flops(model.num_params(), tokens,
@@ -352,7 +375,15 @@ def main():
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
-    ap.add_argument("--mixer", default="dense", choices=["dense", "gossip"])
+    ap.add_argument("--mixer", default="dense",
+                    choices=["dense", "gossip", "gossip-dynamic"])
+    # geometric is excluded: its support moves every round, so only the
+    # dense lowering can run it (TOPOLOGY_KINDS minus "geometric")
+    ap.add_argument("--topology", default="dropout",
+                    choices=[k for k in TOPOLOGY_KINDS if k != "geometric"],
+                    help="gossip-dynamic: per-round topology schedule")
+    ap.add_argument("--drop-p", type=float, default=0.2,
+                    help="gossip-dynamic: link dropout probability")
     ap.add_argument("--graph", default="ring")
     add_compression_cli_args(ap)
     ap.add_argument("--compute-dtype", default=None, choices=[None, "bf16"])
@@ -389,7 +420,8 @@ def main():
                             keep_chunking=args.keep_chunking,
                             variant=args.variant,
                             hier_nodes=args.hier_nodes,
-                            remat_policy=args.remat_policy)
+                            remat_policy=args.remat_policy,
+                            topology=args.topology, drop_p=args.drop_p)
                 except Exception as e:  # a failure here is a sharding bug
                     failures.append((arch, shape, multi, repr(e)))
                     print(f"[FAIL] {arch} {shape} multi={multi}: {e!r}",

@@ -5,6 +5,13 @@ requests with a KV/recurrent cache.  On CPU use a smoke config; on TPU the
 same step functions are what dryrun.py lowers at the decode_32k / long_500k
 shapes.
 
+The prompt runs through ONE jitted ``model.prefill`` call (full-sequence
+chunked attention, O(S0) compute in a single program) and its per-layer
+caches are scattered into the decode cache; the old O(S0)-dispatch
+token-by-token decode loop over the prompt is kept only as the fallback for
+prefix-frontend architectures (``--no-prefill`` forces it for A/B testing —
+the two paths generate identical tokens, see tests/test_serve.py).
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --smoke \
       --batch 4 --prompt-len 32 --gen-len 32
@@ -23,20 +30,77 @@ from repro.configs import get_arch
 from repro.models import TransformerLM
 
 
+def _place_layer(blk: str, dst, src, s0: int, grouped: bool):
+    """Scatter one layer's prefill cache into its allocated decode cache.
+
+    attn/swa KV leaves are (B, T, kvh, hd) (plus a leading group axis when
+    ``grouped``): a prompt shorter than the buffer lands at slots
+    ``0..s0-1``; a full sliding-window ring buffer (prefill keeps the last
+    ``window`` positions) is rolled so position p sits at slot ``p % window``
+    — exactly where ``attention_decode`` will read/write next.  Recurrent
+    states (mamba/rwkv) are already the post-prompt state and pass through.
+    """
+    if blk not in ("attn", "swa"):
+        return src
+
+    ax = 2 if grouped else 1  # the sequence axis of the KV leaves
+
+    def leaf(d, s):
+        s = s.astype(d.dtype)
+        t, sl = d.shape[ax], s.shape[ax]
+        if sl == t:
+            return jnp.roll(s, s0 % t, axis=ax)
+        return jax.lax.dynamic_update_slice(d, s, (0,) * d.ndim)
+
+    return jax.tree.map(leaf, dst, src)
+
+
+def merge_prefill_cache(model: TransformerLM, prefill_caches, batch: int,
+                        cache_len: int, s0: int):
+    """Build the decode cache for ``cache_len`` from ``model.prefill`` output.
+
+    ``prefill_caches`` is the ``(head_caches, group_caches)`` pair returned
+    by ``model.prefill``; the result has the ``model.init_cache`` structure
+    with the prompt's KV/state in place, ready for ``decode_step`` at
+    ``pos = s0``.
+    """
+    cfg = model.cfg
+    head_pf, group_pf = prefill_caches
+    cache = model.init_cache(batch, cache_len)
+    head = [
+        _place_layer(blk, cache["head"][i], head_pf[i], s0, grouped=False)
+        for i, (blk, _) in enumerate(cfg.head_layers())
+    ]
+    groups = {
+        f"l{i}": _place_layer(blk, cache["groups"][f"l{i}"],
+                              group_pf[f"l{i}"], s0, grouped=True)
+        for i, (blk, _) in enumerate(cfg.group_pattern())
+    }
+    return {"head": head, "groups": groups}
+
+
 def greedy_generate(model: TransformerLM, params, prompt, gen_len: int,
-                    temperature: float = 0.0, seed: int = 0):
+                    temperature: float = 0.0, seed: int = 0,
+                    use_prefill: bool = True):
     """prompt: (B, S0) int32. Returns (B, gen_len) generated tokens."""
     cfg = model.cfg
     b, s0 = prompt.shape
     cache_len = s0 + gen_len
-    cache = model.init_cache(b, cache_len)
     decode = jax.jit(model.decode_step, donate_argnums=(3,))
 
-    # teacher-forced prefill via the decode path (exercises the cache code;
-    # a production server would jit model.prefill for the prompt instead)
-    logits = None
-    for t in range(s0):
-        logits, cache = decode(params, prompt[:, t:t + 1], jnp.int32(t), cache)
+    if use_prefill and cfg.frontend == "token":
+        # one compiled program for the whole prompt instead of S0 dispatches
+        logits, pf_caches = jax.jit(model.prefill)(params,
+                                                   {"tokens": prompt})
+        cache = merge_prefill_cache(model, pf_caches, b, cache_len, s0)
+    else:
+        # prefix-frontend archs (or --no-prefill): teacher-forced prefill
+        # via the decode path, one token at a time
+        cache = model.init_cache(b, cache_len)
+        logits = None
+        for t in range(s0):
+            logits, cache = decode(params, prompt[:, t:t + 1], jnp.int32(t),
+                                   cache)
 
     key = jax.random.PRNGKey(seed)
     outs = []
@@ -62,19 +126,22 @@ def main():
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-prefill", action="store_true",
+                    help="force the token-by-token decode-path prompt loop")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = TransformerLM(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     print(f"serving {cfg.name}: {model.num_params():,} params, "
-          f"batch={args.batch}")
+          f"batch={args.batch} prefill={not args.no_prefill}")
     rng = np.random.default_rng(args.seed)
     prompt = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
     t0 = time.time()
     out = greedy_generate(model, params, prompt, args.gen_len,
-                          args.temperature, args.seed)
+                          args.temperature, args.seed,
+                          use_prefill=not args.no_prefill)
     dt = time.time() - t0
     total = args.batch * (args.prompt_len + args.gen_len)
     print(f"generated {out.shape} in {dt:.2f}s "

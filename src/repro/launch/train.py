@@ -12,6 +12,12 @@ flags drive the benchmarks and examples) and the hot loop runs through
 segment with the carried state donated, instead of a per-step Python
 dispatch loop.
 
+Dynamic graphs (``repro.dynamics``): ``--topology dropout --drop-p 0.3``
+trains over per-round Bernoulli link failures (renormalized on device, one
+compiled program for the whole run); ``--local-updates H`` runs H local
+steps per consensus round, ``--gradient-tracking`` adds the drift
+correction, and ``--straggler-p/--outage-p`` inject node faults.
+
 Consensus wire compression (``repro.comm``): ``--compress`` selects the
 codec (bf16 cast, int8/int4 stochastic-rounding quantization, topk/randk
 sparsification with ``--compress-ratio``), all with error-feedback
@@ -36,7 +42,7 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import save_train_state
 from repro.configs import get_arch, fmnist_default, cifar_default
 from repro.core import TrainerSpec, run_segments
 from repro.data import (
@@ -62,7 +68,8 @@ def train_lm(args):
     trainer = spec.build(model.loss)
     print(f"arch={cfg.name} params={model.num_params():,} nodes={k} "
           f"rho={trainer.rho:.3f} mu={args.mu} robust={spec.robust} "
-          f"compress={args.compress}")
+          f"compress={args.compress} topology={spec.topology} "
+          f"H={spec.local_updates}")
     state = trainer.init(model.init(jax.random.PRNGKey(args.seed)))
     streams = make_node_token_streams(k, cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -98,7 +105,9 @@ def train_lm(args):
     state = run_segments(trainer, state, sample_batch, args.steps,
                          args.log_every, on_segment)
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps, state._asdict())
+        # full DecentralizedState incl. CommState (EF residuals, schedule
+        # norms, dynamics tracking) — restore_train_state resumes bit-exactly
+        save_train_state(args.ckpt_dir, args.steps, state)
         print(f"checkpoint saved to {args.ckpt_dir}")
     return history
 
@@ -126,7 +135,8 @@ def train_paper(args):
     bsz = args.batch_per_node or exp.batch_size
     print(f"paper={args.paper} nodes={k} steps={steps} B={bsz} "
           f"lr={spec.lr} mu={args.mu} rho={trainer.rho:.3f} "
-          f"compress={args.compress}")
+          f"compress={args.compress} topology={spec.topology} "
+          f"H={spec.local_updates}")
 
     def sample_batch(step):
         xb, yb = fed.sample_batch(rng, bsz)

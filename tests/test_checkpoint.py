@@ -1,9 +1,16 @@
 """Checkpoint save/restore roundtrips."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    restore_train_state,
+    save_checkpoint,
+    save_train_state,
+)
 
 
 def test_roundtrip(tmp_path):
@@ -42,3 +49,93 @@ def test_restore_specific_step(tmp_path):
     restored, step = restore_checkpoint(str(tmp_path), step=1)
     assert step == 1
     np.testing.assert_array_equal(np.asarray(restored["v"]), 1.0)
+
+
+# -- typed DecentralizedState round-trips (incl. CommState) --------------------
+
+def _toy_trainer(**spec_kwargs):
+    from repro.core import TrainerSpec
+
+    def loss_fn(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    return TrainerSpec(num_nodes=6, graph="ring", lr=0.05,
+                       metrics_disagreement=False, **spec_kwargs
+                       ).build(loss_fn)
+
+
+def _toy_batch(seed):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(6, 8, 4)), jnp.float32),
+            jnp.asarray(rng.normal(size=(6, 8, 2)), jnp.float32))
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_comm_state_roundtrip_ef_residuals(tmp_path):
+    """EF public copies / PRNG / schedule norms survive the checkpoint and a
+    restored run continues bit-exactly (the pre-PR checkpoints dropped the
+    typed CommState: restore gave raw tuples unusable as trainer state)."""
+    tr = _toy_trainer(compress="int8")
+    state = tr.init({"w": jnp.zeros((4, 2))})
+    state, _ = tr.step(state, _toy_batch(0))
+    state, _ = tr.step(state, _toy_batch(1))
+    assert state.comm.hat != ()  # the EF residual state is non-trivial
+
+    save_train_state(str(tmp_path), 2, state)
+    restored, step = restore_train_state(str(tmp_path))
+    assert step == 2
+    assert type(restored).__name__ == "DecentralizedState"
+    assert type(restored.comm).__name__ == "CommState"
+    _assert_trees_equal(state, restored)
+
+    nxt = _toy_batch(2)
+    s1, _ = tr.step(state, nxt)
+    s2, _ = tr.step(restored, nxt)
+    _assert_trees_equal(s1, s2)
+
+
+def test_comm_state_roundtrip_dynamics_tracking(tmp_path):
+    """The gradient-tracking variable (CommState.track) checkpoints too, and
+    the restored run replays the identical topology/fault coin sequence."""
+    tr = _toy_trainer(topology="dropout", drop_p=0.3, local_updates=2,
+                      gradient_tracking=True)
+    state = tr.init({"w": jnp.zeros((4, 2))})
+    for i in range(3):
+        state, _ = tr.step(state, _toy_batch(i))
+    assert state.comm.track != ()
+
+    save_train_state(str(tmp_path), 3, state)
+    restored, _ = restore_train_state(str(tmp_path))
+    _assert_trees_equal(state, restored)
+
+    nxt = _toy_batch(9)
+    s1, _ = tr.step(state, nxt)
+    s2, _ = tr.step(restored, nxt)
+    _assert_trees_equal(s1, s2)
+
+
+def test_pre_track_checkpoint_pads_comm(tmp_path):
+    """Checkpoints written before CommState grew ``track`` restore with an
+    empty tracking slot instead of failing."""
+    from repro.comm.protocol import CommState, trivial_comm_state
+
+    state = {
+        "params": {"w": jnp.ones((2, 3))},
+        "opt_state": (),
+        "step": jnp.int32(5),
+        # simulate the old 7-field CommState (no track)
+        "comm": tuple(trivial_comm_state())[:7],
+    }
+    save_checkpoint(str(tmp_path), 5, state)
+    restored, step = restore_train_state(str(tmp_path))
+    assert step == 5
+    assert isinstance(restored.comm, CommState)
+    assert restored.comm.track == ()
+    assert int(restored.comm.rounds) == 0

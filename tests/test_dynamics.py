@@ -1,0 +1,459 @@
+"""Dynamic-graph subsystem (repro.dynamics): schedules, faults, local updates.
+
+The acceptance anchors:
+  * a static TopologySchedule reproduces the frozen Dense/Gossip mixers
+    bit-exactly, and a dropout schedule at p = 0 matches it;
+  * dropout-renormalized matrices stay doubly stochastic and
+    consensus-contractive for EVERY graphs.topology builder;
+  * straggler/outage rounds report comm_bytes == 0 for masked-out links;
+  * the whole thing runs in ONE compiled program per configuration
+    (topology changes are traced operands — asserted via jit cache stats).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TrainerSpec
+from repro.core.consensus import DenseMixer
+from repro.dynamics import (
+    DropoutSchedule,
+    DynamicCompressedDenseMixer,
+    DynamicDenseMixer,
+    DynamicsConfig,
+    FaultConfig,
+    GeometricRedrawSchedule,
+    LocalUpdateMixer,
+    RoundRobinSchedule,
+    StaticSchedule,
+    fault_keep_matrix,
+)
+from repro.graphs import (
+    build_graph,
+    is_doubly_stochastic,
+    metropolis_weights,
+    metropolis_weights_traced,
+    spectral_norm,
+)
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+ALL_BUILDERS = ["ring", "grid", "torus", "erdos_renyi", "geometric",
+                "complete", "star", "hypercube"]  # K=16 suits hypercube too
+
+
+def _params(k, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(k, 5, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(k, 7)), jnp.float32)}
+
+
+# -- traced weight derivations -------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_BUILDERS)
+def test_metropolis_traced_matches_numpy(kind):
+    g = build_graph(kind, 16)
+    w_np = metropolis_weights(g)
+    w_tr = np.asarray(metropolis_weights_traced(
+        jnp.asarray(g.adjacency, jnp.float32)))
+    np.testing.assert_allclose(w_tr, w_np, atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ALL_BUILDERS)
+def test_dropout_renormalized_stays_doubly_stochastic(kind):
+    """Every builder × dropout: per-round W is DS; E[W] stays contractive."""
+    g = build_graph(kind, 16)
+    w = metropolis_weights(g)
+    sched = DropoutSchedule(w, p=0.4, seed=3)
+    samples = []
+    for r in range(40):
+        wr = np.asarray(sched.round_weights(jnp.int32(r)))
+        assert is_doubly_stochastic(wr, atol=1e-5), (kind, r)
+        samples.append(wr)
+    # consensus-contractive in expectation: the sampled mean keeps the full
+    # support at (1-p)-scaled weights, so its spectral norm stays < 1
+    assert spectral_norm(np.mean(samples, axis=0)) < 1.0, kind
+
+
+def test_fault_masked_weights_doubly_stochastic():
+    w = metropolis_weights(build_graph("erdos_renyi", 12))
+    cfg = FaultConfig(link_drop_p=0.3, straggler_p=0.2, outage_p=0.2,
+                      outage_len=4, seed=1)
+    for r in range(12):
+        keep, up = fault_keep_matrix(cfg, jnp.int32(r), 12)
+        from repro.graphs import renormalize_masked_weights
+
+        wr = np.asarray(renormalize_masked_weights(
+            jnp.asarray(w, jnp.float32), keep))
+        assert is_doubly_stochastic(wr, atol=1e-5), r
+        # a down node's row degenerates to e_i
+        up = np.asarray(up)
+        for i in np.nonzero(up == 0)[0]:
+            assert wr[i, i] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_outage_windows_are_correlated():
+    cfg = FaultConfig(outage_p=0.5, outage_len=5, seed=7)
+    ups = [np.asarray(fault_keep_matrix(cfg, jnp.int32(r), 10)[1])
+           for r in range(10)]
+    # rounds 0-4 share one outage draw, rounds 5-9 the next
+    for r in range(1, 5):
+        np.testing.assert_array_equal(ups[r], ups[0])
+        np.testing.assert_array_equal(ups[5 + r], ups[5])
+
+
+def test_round_robin_cycles_matchings():
+    w = metropolis_weights(build_graph("ring", 8))
+    sched = RoundRobinSchedule(w)
+    m = sched.num_matchings
+    assert m == 2  # even ring is 2-edge-colorable
+    union = np.zeros_like(w)
+    for r in range(m):
+        wr = np.asarray(sched.round_weights(jnp.int32(r)))
+        assert is_doubly_stochastic(wr, atol=1e-5)
+        union += wr - np.diag(np.diag(wr))
+    # the cycle covers exactly the base graph's off-diagonal support
+    np.testing.assert_allclose(union, w - np.diag(np.diag(w)), atol=1e-6)
+    # period m: round r and r+m draw the same matching
+    np.testing.assert_array_equal(
+        np.asarray(sched.round_weights(jnp.int32(1))),
+        np.asarray(sched.round_weights(jnp.int32(1 + m))))
+
+
+def test_geometric_redraw_is_ds_and_varies():
+    sched = GeometricRedrawSchedule(10, radius=0.6, seed=2)
+    w0 = np.asarray(sched.round_weights(jnp.int32(0)))
+    w1 = np.asarray(sched.round_weights(jnp.int32(1)))
+    assert is_doubly_stochastic(w0, atol=1e-5)
+    assert is_doubly_stochastic(w1, atol=1e-5)
+    assert not np.array_equal(w0, w1)  # support actually moves
+    with pytest.raises(ValueError):
+        sched.decomposition()  # dense-only: no static gossip support
+
+
+# -- bit-exact reproduction of the frozen mixers -------------------------------
+
+def test_static_schedule_reproduces_dense_mixer_bitexact():
+    k = 8
+    w = metropolis_weights(build_graph("erdos_renyi", k))
+    params = _params(k)
+    ref, _ = DenseMixer(w)(params, DenseMixer(w).init_state(params))
+    for sched in (StaticSchedule(w), DropoutSchedule(w, 0.0, seed=9)):
+        mixer = DynamicDenseMixer(sched)
+        out, comm = jax.jit(mixer)(params, mixer.init_state(params))
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(comm.rounds) == 1
+
+
+def test_static_schedule_reproduces_gossip_mixer_bitexact():
+    """Subprocess (8 host devices): DynamicGossipMixer(StaticSchedule) and
+    DropoutSchedule(p=0) are bit-identical to today's GossipMixer; a full
+    straggler round reports wire_bits == 0 and leaves θ untouched."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.consensus import GossipMixer
+from repro.dynamics import (DynamicGossipMixer, StaticSchedule,
+                            DropoutSchedule, FaultConfig)
+from repro.graphs import metropolis_weights, ring_graph, permutation_decomposition
+from repro.utils.compat import make_auto_mesh
+
+k = 8
+w = metropolis_weights(ring_graph(k))
+mesh = make_auto_mesh((k,), ("data",))
+specs = {"a": P("data", None)}
+rng = np.random.default_rng(0)
+params = {"a": jnp.asarray(rng.normal(size=(k, 6)), jnp.float32)}
+
+gm = GossipMixer(permutation_decomposition(w), mesh, "data", specs)
+ref, _ = jax.jit(gm)(params, gm.init_state(params))
+for sched in (StaticSchedule(w), DropoutSchedule(w, 0.0, seed=4)):
+    dg = DynamicGossipMixer(sched, mesh, "data", specs)
+    out, comm = jax.jit(dg)(params, dg.init_state(params))
+    np.testing.assert_array_equal(np.asarray(ref["a"]), np.asarray(out["a"]))
+    assert float(comm.wire_bits) == 8.0 * gm.bytes_per_round(params)
+
+dgs = DynamicGossipMixer(StaticSchedule(w), mesh, "data", specs,
+                         faults=FaultConfig(straggler_p=0.999, seed=1))
+out, comm = jax.jit(dgs)(params, dgs.init_state(params))
+assert float(comm.wire_bits) == 0.0, float(comm.wire_bits)
+np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(params["a"]),
+                           atol=1e-6)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
+# -- fault accounting ----------------------------------------------------------
+
+def test_full_straggler_round_reports_zero_comm_bytes():
+    """Masked-out links put nothing on the wire: a round where every node
+    straggles reports comm_bytes == 0 through the train-step metrics."""
+
+    def loss_fn(params, batch):
+        return jnp.sum(params["x"] ** 2)
+
+    k = 6
+    spec = TrainerSpec(num_nodes=k, graph="ring", robust=False, lr=0.01,
+                       straggler_p=0.999, metrics_disagreement=False)
+    tr = spec.build(loss_fn)
+    state = tr.init({"x": jnp.ones(4)})
+    batches = jnp.zeros((5, k, 1))
+    state, ms = tr.run(state, batches)
+    np.testing.assert_array_equal(np.asarray(ms["comm_bytes"]),
+                                  np.zeros(5, np.float32))
+    np.testing.assert_array_equal(np.asarray(ms["wire_bits"]),
+                                  np.zeros(5, np.float32))
+
+
+def test_dropout_comm_bytes_counts_active_links_exactly():
+    k = 8
+    w = metropolis_weights(build_graph("ring", k))
+    sched = DropoutSchedule(w, 0.5, seed=11)
+    mixer = DynamicDenseMixer(sched)
+    params = _params(k)
+    per_node = sum(x.size * 4 for x in jax.tree.leaves(params)) // k
+    state = mixer.init_state(params)
+    for r in range(4):
+        wr = np.asarray(sched.round_weights(jnp.int32(r)))
+        active = int((wr > 0).sum() - k)
+        _, state = mixer(params, state)
+        assert float(state.wire_bits) == 8.0 * per_node * active, r
+
+
+# -- local updates + gradient tracking ----------------------------------------
+
+def test_local_update_period_gates_wire():
+    k = 6
+    w = metropolis_weights(build_graph("ring", k))
+    mixer = LocalUpdateMixer(DynamicDenseMixer(StaticSchedule(w)), 3)
+    params = _params(k)
+    state = mixer.init_state(params)
+    theta = params
+    wires = []
+    for r in range(6):
+        theta, state = mixer(theta, state, round=r)
+        wires.append(float(state.wire_bits))
+    assert wires[0] == wires[1] == 0.0
+    assert wires[2] > 0.0
+    assert wires[3] == wires[4] == 0.0
+    assert wires[5] == wires[2]
+    # local rounds pass θ through untouched
+    t2, s2 = mixer(params, mixer.init_state(params), round=0)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_local_update_period_one_matches_inner_bitexact():
+    k = 6
+    w = metropolis_weights(build_graph("ring", k))
+    params = _params(k)
+    inner = DynamicDenseMixer(StaticSchedule(w))
+    wrapped = LocalUpdateMixer(DynamicDenseMixer(StaticSchedule(w)), 1)
+    a, _ = inner(params, inner.init_state(params))
+    b, _ = wrapped(params, wrapped.init_state(params))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_gradient_tracking_reduces_local_update_drift():
+    """Heterogeneous quadratic: node i pulls toward c_i.  With H=8 local
+    steps, plain local SGD parks O(η·H) from the global optimum mean(c);
+    the tracking correction collapses that drift by a large factor."""
+    k = 8
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.normal(size=(k, 6)), jnp.float32)
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["x"] - batch) ** 2)
+
+    opt = np.asarray(c.mean(0))
+    dists = {}
+    for gt in (False, True):
+        spec = TrainerSpec(num_nodes=k, graph="ring", robust=False, lr=0.05,
+                           local_updates=8, gradient_tracking=gt,
+                           metrics_disagreement=False)
+        tr = spec.build(loss_fn)
+        state = tr.init({"x": jnp.zeros(6)})
+        state, _ = tr.run(state, jnp.broadcast_to(c[None], (400, k, 6)))
+        x = np.asarray(state.params["x"])
+        dists[gt] = float(np.linalg.norm(x - opt[None], axis=1).max())
+    assert dists[True] < 0.5 * dists[False], dists
+
+
+def test_gradient_tracking_doubles_consensus_wire():
+    k = 6
+    w = metropolis_weights(build_graph("ring", k))
+    params = _params(k)
+    plain = LocalUpdateMixer(DynamicDenseMixer(StaticSchedule(w)), 2)
+    gt = LocalUpdateMixer(DynamicDenseMixer(StaticSchedule(w)), 2,
+                          gradient_tracking=True)
+    sp, sg = plain.init_state(params), gt.init_state(params)
+    t = params
+    for r in range(2):
+        t, sp = plain(t, sp, round=r)
+    t = params
+    for r in range(2):
+        t, sg = gt(t, sg, round=r)
+    assert float(sg.wire_bits) == 2.0 * float(sp.wire_bits) > 0
+
+
+def test_gradient_tracking_rejects_compressed_inner():
+    from repro.comm import CompressionConfig
+    from repro.comm.mixers import CompressedDenseMixer
+
+    w = metropolis_weights(build_graph("ring", 6))
+    inner = CompressedDenseMixer(w, CompressionConfig(kind="int8"))
+    with pytest.raises(ValueError, match="uncompressed"):
+        LocalUpdateMixer(inner, 2, gradient_tracking=True)
+
+
+def test_mix_every_conflicts_with_local_update_period():
+    def loss_fn(params, batch):
+        return jnp.sum(params["x"] ** 2)
+
+    with pytest.raises(ValueError, match="clock"):
+        TrainerSpec(num_nodes=4, graph="ring", local_updates=2,
+                    mix_every=2).build(loss_fn)
+
+
+# -- EF compression × dynamics -------------------------------------------------
+
+def test_compressed_dense_dynamic_matches_static_at_p0():
+    """EF int8 over a dropout schedule at p = 0 is bit-identical to the
+    static compressed mixer (same codec PRNG, same W)."""
+    from repro.comm import CompressionConfig
+    from repro.comm.mixers import CompressedDenseMixer
+
+    k = 6
+    w = metropolis_weights(build_graph("ring", k))
+    cc = CompressionConfig(kind="int8", seed=3)
+    params = _params(k)
+    ref = CompressedDenseMixer(w, cc)
+    dyn = DynamicCompressedDenseMixer(DropoutSchedule(w, 0.0, seed=1), cc)
+    sa, sb = ref.init_state(params), dyn.init_state(params)
+    ta, tb = params, params
+    for r in range(3):
+        ta, sa = ref(ta, sa)
+        tb, sb = dyn(tb, sb)
+    for a, b in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(sa.res_norm) == float(sb.res_norm)
+
+
+def test_compressed_dynamic_converges_under_dropout():
+    """EF innovation gossip keeps contracting under 30% link dropout."""
+    from repro.comm import CompressionConfig
+
+    k = 8
+    w = metropolis_weights(build_graph("ring", k))
+    mixer = DynamicCompressedDenseMixer(
+        DropoutSchedule(w, 0.3, seed=5), CompressionConfig(kind="int8"))
+    params = _params(k)
+    state = mixer.init_state(params)
+    theta = params
+
+    def disagreement(t):
+        return max(float(jnp.std(x, axis=0).mean())
+                   for x in jax.tree.leaves(t))
+
+    d0 = disagreement(theta)
+    for r in range(30):
+        theta, state = mixer(theta, state)
+    assert disagreement(theta) < 0.05 * d0
+
+
+# -- one compiled program per configuration ------------------------------------
+
+def test_zero_recompiles_across_dynamic_rounds():
+    def loss_fn(params, batch):
+        return jnp.sum((params["x"] - batch) ** 2)
+
+    k = 6
+    rng = np.random.default_rng(0)
+    for kw in ({"topology": "dropout", "drop_p": 0.4},
+               {"topology": "geometric"},
+               {"topology": "round_robin"},
+               {"topology": "dropout", "drop_p": 0.2, "local_updates": 3,
+                "gradient_tracking": True},
+               {"straggler_p": 0.3, "outage_p": 0.2}):
+        spec = TrainerSpec(num_nodes=k, graph="ring", robust=False, lr=0.05,
+                           metrics_disagreement=False, **kw)
+        tr = spec.build(loss_fn)
+        state = tr.init({"x": jnp.zeros(4)})
+        batch = jnp.asarray(rng.normal(size=(k, 4)), jnp.float32)
+        for _ in range(4):
+            state, _ = tr.step(state, batch)
+        assert tr._train_step._cache_size() == 1, kw
+
+
+# -- masked quant_gossip kernels -----------------------------------------------
+
+@pytest.mark.parametrize("k,d,block_d", [(4, 256, 64), (3, 1000, 1000)])
+def test_masked_quantize_kernel_matches_ref(k, d, block_d):
+    from repro.kernels.quant_gossip.ops import masked_quantize_blockwise
+    from repro.kernels.quant_gossip.ref import masked_quantize_blockwise_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(k * d), (k, d), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(1), (k, d), jnp.float32)
+    mask = jnp.asarray(np.arange(k) % 2, jnp.float32)
+    qk, sk = masked_quantize_blockwise(x, u, mask, block_d=block_d,
+                                       interpret=True, use_kernel=True)
+    qr, sr = masked_quantize_blockwise_ref(x, u, mask, block_d=block_d)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    # masked senders put NOTHING on the wire
+    m = np.asarray(mask)
+    assert np.all(np.asarray(qk)[m == 0] == 0)
+    assert np.all(np.asarray(sk)[m == 0] == 0)
+
+
+@pytest.mark.parametrize("k,d,block_d", [(4, 256, 64), (2, 1000, 1000)])
+def test_masked_dequant_accumulate_matches_ref_and_passthrough(k, d, block_d):
+    from repro.kernels.quant_gossip.ops import (
+        masked_dequant_accumulate, quantize_blockwise)
+    from repro.kernels.quant_gossip.ref import masked_dequant_accumulate_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (k, d), jnp.float32)
+    u = jax.random.uniform(jax.random.PRNGKey(1), (k, d), jnp.float32)
+    acc = jax.random.normal(jax.random.PRNGKey(2), (k, d), jnp.float32)
+    w = jnp.linspace(0.1, 0.5, k)
+    mask = jnp.asarray(np.arange(k) % 2, jnp.float32)
+    q, s = quantize_blockwise(x, u, block_d=block_d, interpret=True,
+                              use_kernel=True)
+    out_k = masked_dequant_accumulate(acc, q, s, w, mask, interpret=True,
+                                      use_kernel=True)
+    out_r = masked_dequant_accumulate_ref(acc, q, s, w, mask)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+    # a masked link contributes EXACTLY acc (bitwise), not approximately
+    m = np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(out_k)[m == 0],
+                                  np.asarray(acc)[m == 0])
+
+
+# -- config validation ---------------------------------------------------------
+
+def test_dynamics_config_validation():
+    with pytest.raises(ValueError, match="topology"):
+        DynamicsConfig(topology="wormhole")
+    with pytest.raises(ValueError, match="local_updates"):
+        DynamicsConfig(local_updates=0)
+    with pytest.raises(ValueError, match="drop_p"):
+        DynamicsConfig(topology="dropout", drop_p=1.0)
+    with pytest.raises(ValueError, match="link_drop_p"):
+        FaultConfig(link_drop_p=-0.1)
+    assert not DynamicsConfig().enabled
+    assert DynamicsConfig(local_updates=2).enabled
+    assert DynamicsConfig(faults=FaultConfig(straggler_p=0.1)).enabled
