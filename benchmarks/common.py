@@ -44,6 +44,52 @@ def stack_batches(fed, rng, batch: int, n: int):
     return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
 
 
+def _gossip_mixer(graph, kwargs, num_nodes, topology, drop_p, seed,
+                  compression, ef_rebase_every):
+    """Build the ppermute gossip lowering of a dynamic topology (needs
+    ``jax.device_count() >= num_nodes``: one node per device shard).
+
+    Returns ``(make, put_state)``: ``make(params_tree)`` builds the mixer
+    for that tree's structure, and ``put_state`` pins a freshly-initialized
+    DecentralizedState onto the mesh shardings so every ``run()`` segment
+    reuses ONE compiled program (an unpinned first segment would compile a
+    second program for the resharded carry).
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dynamics import DynamicGossipMixer, make_schedule
+    from repro.graphs import build_graph, metropolis_weights
+    from repro.utils.compat import make_auto_mesh
+
+    if jax.device_count() < num_nodes:
+        raise RuntimeError(
+            f"the gossip lowering needs >= {num_nodes} devices (got "
+            f"{jax.device_count()}); set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_nodes} before "
+            "importing jax (benchmarks/fig9_dynamics.py does)")
+    mesh = make_auto_mesh((num_nodes,), ("node",))
+    w = metropolis_weights(build_graph(graph, num_nodes, **kwargs))
+    schedule = make_schedule(topology, w=w, k=num_nodes, drop_p=drop_p,
+                             seed=seed)
+
+    def make(params_tree):
+        param_specs = jax.tree.map(lambda _: P("node"), params_tree)
+        return DynamicGossipMixer(schedule, mesh, "node", param_specs,
+                                  quantized=compression,
+                                  ef_rebase_every=ef_rebase_every)
+
+    def put_state(state):
+        def _put(x):
+            if hasattr(x, "shape") and getattr(x, "ndim", 0) >= 1 \
+                    and x.shape[0] == num_nodes:
+                return jax.device_put(x, NamedSharding(mesh, P("node")))
+            return jax.device_put(x, NamedSharding(mesh, P()))
+        return jax.tree.map(_put, state)
+
+    return make, put_state
+
+
 def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       num_nodes: int = 10, steps: int = 150, batch: int = 32,
                       graph: str = "erdos_renyi", p: float = 0.3,
@@ -56,7 +102,9 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       local_updates: int = 1,
                       gradient_tracking: bool = False,
                       straggler_p: float = 0.0,
-                      outage_p: float = 0.0) -> dict:
+                      outage_p: float = 0.0,
+                      lowering: str = "dense",
+                      ef_rebase_every: int = 8) -> dict:
     """One (DR-)DSGD training run; returns metrics + eval history + timing.
 
     ``lr_compensate`` equalizes the *initial* effective step size across
@@ -65,6 +113,12 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     at short horizons measure the LR mismatch, not the DRO weighting (the
     paper tunes a single η per experiment on converged real-data runs;
     see EXPERIMENTS.md §Paper-repro).
+
+    ``lowering="gossip"`` runs the consensus on the ppermute lowering
+    (``repro.dynamics.DynamicGossipMixer`` — one node per device shard):
+    memoryless masked int8 wire for ``error_feedback=False`` configs, the
+    error-feedback wire with ``hat_mix`` re-basing every
+    ``ef_rebase_every`` rounds otherwise.
     """
     fed, init_fn, apply_fn = make_task(dataset, num_nodes, seed)
     kwargs = {"p": p, "seed": seed} if graph == "erdos_renyi" else {"seed": seed}
@@ -74,6 +128,22 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     if robust and lr_compensate:
         ell0 = np.log(10.0)  # untrained 10-class CE
         base_lr = base_lr * mu / float(np.exp(ell0 / mu))
+    mixer = None
+    put_state = None
+    if lowering == "gossip":
+        if local_updates != 1 or gradient_tracking or straggler_p or outage_p:
+            raise ValueError("the gossip lowering here serves the topology/"
+                             "compression axes; compose local updates and "
+                             "faults on the dense lowering")
+        params0 = init_fn(jax.random.PRNGKey(seed))
+        node_params = jax.tree.map(
+            lambda x: np.broadcast_to(np.asarray(x)[None],
+                                      (num_nodes,) + np.asarray(x).shape),
+            params0)
+        make_mixer, put_state = _gossip_mixer(
+            graph, kwargs, num_nodes, topology, drop_p, seed, compression,
+            ef_rebase_every)
+        mixer = make_mixer(node_params)
     spec = TrainerSpec(
         num_nodes=num_nodes,
         graph=graph,
@@ -83,16 +153,19 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         lr=base_lr,
         grad_clip=grad_clip,
         compress=compression if compression is not None else "none",
-        topology=topology,
-        drop_p=drop_p,
+        topology=topology if mixer is None else "static",
+        drop_p=drop_p if mixer is None else 0.0,
         local_updates=local_updates,
         gradient_tracking=gradient_tracking,
         straggler_p=straggler_p,
         outage_p=outage_p,
         seed=seed,
     )
-    trainer = spec.build(make_classifier_loss(apply_fn), apply_fn)
+    trainer = spec.build(make_classifier_loss(apply_fn), apply_fn,
+                         mixer=mixer)
     state = trainer.init(init_fn(jax.random.PRNGKey(seed)))
+    if put_state is not None:
+        state = put_state(state)
     rng = np.random.default_rng(seed)
     x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200, seed=seed)
     history = []
@@ -111,6 +184,10 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         stats["cum_bytes"] = float(cum_bytes_dev)
         if compression is not None:
             stats["ef_residual_norm"] = float(ms["ef_residual_norm"][-1])
+        if "disagreement" in ms:
+            # Lemma-3 consensus error — the metric the wire codec moves
+            # (the memoryless ablation stalls here, EF keeps contracting)
+            stats["disagreement"] = float(ms["disagreement"][-1])
         history.append(stats)
 
     # first segment warms up the compiled scan program (excluded from timing,
@@ -167,12 +244,15 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         "topology": topology,
         "drop_p": drop_p,
         "local_updates": local_updates,
+        "lowering": lowering,
+        "ef_rebase_every": ef_rebase_every,
         # compiled scan programs the run used (1 = zero recompiles across
         # rounds; +1 tolerated for a ragged final segment)
         "run_programs": getattr(trainer._run, "_cache_size", lambda: -1)(),
         "comm_bytes_per_round": comm_bytes_round,
         "comm_bytes_total": cum_bytes,
         "us_per_step": wall / timed_steps * 1e6,
+        "disagreement_final": final.get("disagreement"),
         "acc_avg": final["acc_avg"],
         "acc_worst_dist": final["acc_worst_dist"],
         "acc_node_std": final["acc_node_std"],

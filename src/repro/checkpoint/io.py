@@ -144,9 +144,11 @@ def restore_train_state(ckpt_dir: str, step: int | None = None,
     ``(DecentralizedState, step)``.
 
     The CommState is reconstructed field-by-field; checkpoints written
-    before a CommState field was added (e.g. pre-``track``) are padded with
-    empty slots.  ``shardings`` may be a DecentralizedState of sharding
-    trees or the equivalent dict.
+    before a CommState field was added (e.g. pre-``track`` PR-3 states, or
+    pre-``ef_rounds`` PR-4 states — the EF re-base clock of the dynamic
+    compressed gossip mixer) are padded with empty slots, which is exactly
+    the value every mixer that predates the field expects.  ``shardings``
+    may be a DecentralizedState of sharding trees or the equivalent dict.
     """
     from repro.comm.protocol import CommState
     from repro.core.drdsgd import DecentralizedState

@@ -315,6 +315,28 @@ class KernelInt8Quantizer(IntQuantizer):
         return dequant_accumulate(acc, q, scale, weight,
                                   interpret=self.interpret)
 
+    def compress_masked(self, x, keys, mask, rate=None):
+        """Sender-masked quantize via the fused masked Pallas kernel: masked
+        rows emit a zero payload and zero scales (nothing on the wire), so
+        the EF innovation of a fully-faulted node stays unsent and its θ̂
+        frozen.  An all-ones mask is bit-identical to :meth:`compress`."""
+        from repro.kernels.quant_gossip.ops import masked_quantize_blockwise
+
+        qmax = jnp.float32(self.qmax) if rate is None else rate
+        u = _uniform_rows(keys, x.shape[1])
+        return masked_quantize_blockwise(x, u, mask, qmax=qmax,
+                                         block_d=self.block_d,
+                                         interpret=self.interpret)
+
+    def accumulate_masked(self, acc, payload, weight, mask):
+        """acc + mask·weight·dequantize(payload), fused; masked links add
+        exactly 0 (bitwise passthrough of acc)."""
+        from repro.kernels.quant_gossip.ops import masked_dequant_accumulate
+
+        q, scale = payload
+        return masked_dequant_accumulate(acc, q, scale, weight, mask,
+                                         interpret=self.interpret)
+
     def _n_blocks(self, d):
         from repro.kernels.quant_gossip.kernel import num_blocks
 

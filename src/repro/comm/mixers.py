@@ -48,6 +48,12 @@ Two lowerings, mirroring ``repro.core.consensus``:
   actual compressed payload (int8 values + scales, or topk values+indices),
   and the receiver dequantize-accumulates into its running mix buffer
   s_i = Σ_j W_ij θ̂_j.  A full-precision wire buffer is never materialized.
+  The per-leaf encode/EF-update/combine path (``_encode_leaf`` +
+  ``_gossip_round``) is shared with the time-varying lowering
+  (``repro.dynamics.DynamicCompressedGossipMixer``), which passes traced
+  per-round weight/mask vectors gathered from W_r and periodically re-bases
+  the cache — with no overrides the static path is the frozen original,
+  bit-for-bit.
 
 Both follow the uniform :class:`repro.comm.protocol.Mixer` protocol —
 ``mix(theta, CommState, *, round) -> (theta, CommState)`` — so
@@ -83,6 +89,16 @@ def ef_residual(theta, state: CommState):
 
 def _f32_zeros_like(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _send_mask(masks):
+    """Per-node "any live outgoing link this round" vector: ∨ over the
+    per-matching link masks.  A node with every incident link down emits a
+    zero payload and its θ̂ stays frozen (nobody could apply the delta)."""
+    send = masks[0]
+    for m in masks[1:]:
+        send = jnp.maximum(send, m)
+    return send
 
 
 def _leaf_payload_bytes(compressor, params, k: int) -> int:
@@ -169,20 +185,40 @@ class _CompressedMixerBase(Mixer):
 
     # -- shared per-leaf codec step -------------------------------------------
 
-    def _encode_leaf(self, x, hat, keys, rate):
+    def _compress(self, x, keys, rate, send_mask=None):
+        """Encode one (K_local, d) block, optionally sender-masked.
+
+        ``send_mask`` (K_local,) in {0, 1} is the dynamic lowering's
+        per-round "this node has at least one live link" vector: masked rows
+        emit a zero payload (nothing crosses the wire, their θ̂ stays
+        frozen).  The kernel quantizer serves it with the fused masked
+        Pallas kernel; other codecs mask the input block, which encodes to
+        an all-zero payload.  ``send_mask=None`` (static lowerings) and an
+        all-ones mask are bit-identical to the unmasked encode.
+        """
+        if send_mask is None:
+            return self.compressor.compress(x, keys, rate)
+        masked = getattr(self.compressor, "compress_masked", None)
+        if masked is not None:
+            return masked(x, keys, send_mask, rate)
+        return self.compressor.compress(x * send_mask[:, None], keys, rate)
+
+    def _encode_leaf(self, x, hat, keys, rate, send_mask=None):
         """Compress one flattened leaf.
 
         Returns (payload, public', hat') where ``public'`` is this node's
         new publicly-reconstructible value (θ̂' in EF mode, C(θ) memoryless)
         and ``hat'`` is the state to carry (θ̂' or ()).  ``keys`` is one PRNG
-        key per node row; ``rate`` the traced schedule rate (or None).
+        key per node row; ``rate`` the traced schedule rate (or None);
+        ``send_mask`` the dynamic lowerings' sender mask (see
+        :meth:`_compress`).
         """
         if self.ef:
-            payload = self.compressor.compress(x - hat, keys, rate)
+            payload = self._compress(x - hat, keys, rate, send_mask)
             qhat = self.compressor.decompress(payload, x.shape[1])
             new_hat = hat + qhat
             return payload, new_hat, new_hat
-        payload = self.compressor.compress(x, keys, rate)
+        payload = self._compress(x, keys, rate, send_mask)
         public = self.compressor.decompress(payload, x.shape[1])
         return payload, public, ()
 
@@ -244,7 +280,7 @@ class CompressedDenseMixer(_CompressedMixerBase):
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
             wire_bits=self._round_wire_bits(theta, rate,
                                             senders=self._senders(w)),
-            track=state.track)
+            track=state.track, ef_rounds=state.ef_rounds)
 
     def bytes_per_round(self, params) -> int:
         """Total payload bytes injected per round (every node sends once),
@@ -299,7 +335,19 @@ class CompressedGossipMixer(_CompressedMixerBase):
             idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
         return idx
 
-    def _gossip_round(self, theta, state: CommState):
+    def _gossip_round(self, theta, state: CommState, *, self_w=None,
+                      match_ws=None, masks=None, senders=None):
+        """One compressed gossip round over the matching decomposition.
+
+        The static mixer calls this with no overrides (frozen decomposition
+        weights, every matching link active).  The dynamic lowering
+        (``repro.dynamics.DynamicCompressedGossipMixer``) passes the
+        *traced* per-round vectors gathered from W_r: ``self_w`` (K,),
+        ``match_ws``/``masks`` per matching, and the traced active-link
+        count ``senders`` for wire accounting.  With all-ones masks the
+        masked paths are bit-identical to the unmasked ones, which is what
+        makes the static-schedule anchor exact.
+        """
         key, sub = jax.random.split(state.key)
         rate = self._rate(state)
         p_node = jax.sharding.PartitionSpec(self.axis)
@@ -307,9 +355,15 @@ class CompressedGossipMixer(_CompressedMixerBase):
         specs = self.param_specs
         ef = self.ef
         have_rate = rate is not None
+        have_masks = masks is not None
+        if self_w is None:
+            self_w = self.self_w
+        match_ws = list(self.match_ws) if match_ws is None else list(match_ws)
+        mask_args = list(masks) if have_masks else []
 
-        def body(t, hat, s, self_w, match_ws, k0, rate_op):
+        def body(t, hat, s, self_w, match_ws, mks, k0, rate_op):
             r_op = rate_op if have_rate else None
+            send = _send_mask(mks) if have_masks else None
             leaves, treedef = jax.tree.flatten(t)
             k_local = leaves[0].shape[0] if leaves else 1
             # global node ids of the local rows -> dense-identical keys
@@ -333,18 +387,19 @@ class CompressedGossipMixer(_CompressedMixerBase):
                         jnp.square(xf - h.reshape(k_local, d)))
                 payload, public, new_hat = self._encode_leaf(
                     xf, h.reshape(k_local, d) if ef else None,
-                    fold_leaf(node_ks, i), r_op)
+                    fold_leaf(node_ks, i), r_op, send_mask=send)
                 # EF: s_i += W_ii q_i + Σ_m W_i,perm(i)·dequant(recv) keeps
                 # s_i = Σ_j W_ij θ̂_j current; memoryless: same combine of the
                 # fresh C(θ) messages.  Only the payload crosses the wire.
                 base = sm.reshape(k_local, d) if ef else jnp.zeros_like(xf)
                 delta_or_msg = (public - h.reshape(k_local, d)) if ef else public
                 acc = base + self_w[:, None] * delta_or_msg
-                for pw, perm in zip(match_ws, self.perms):
+                for m, (pw, perm) in enumerate(zip(match_ws, self.perms)):
                     recv = jax.tree.map(
                         lambda leaf: jax.lax.ppermute(leaf, self.axis, perm),
                         payload)
-                    acc = self._accumulate(acc, recv, pw[:, None], d)
+                    acc = self._accumulate(acc, recv, pw[:, None], d,
+                                           mask=mks[m] if have_masks else None)
                 out = xf + self.gamma * (acc - public)
                 o_t.append(out.reshape(x.shape).astype(x.dtype))
                 if ef:
@@ -360,27 +415,43 @@ class CompressedGossipMixer(_CompressedMixerBase):
             body,
             mesh=self.mesh,
             in_specs=(specs, in_hat[0], in_hat[1], p_node,
-                      [p_node] * len(self.match_ws), p_rep, p_rep),
+                      [p_node] * len(match_ws), [p_node] * len(mask_args),
+                      p_rep, p_rep),
             out_specs=(specs, in_hat[0], in_hat[1], p_rep),
         )
         rate_op = rate if have_rate else jnp.float32(0.0)
         t2, h2, s2, res_sq = shard(theta, state.hat, state.hat_mix,
-                                   self.self_w, list(self.match_ws), sub,
+                                   self_w, match_ws, mask_args, sub,
                                    rate_op)
         res_norm, res_ref, rounds = self._next_sched_state(
             state, jnp.sqrt(res_sq))
-        sends = sum(len(pairs) for pairs in self.perms)
+        if senders is None:
+            senders = sum(len(pairs) for pairs in self.perms)
         return t2, CommState(
             hat=h2, hat_mix=s2, key=key,
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=self._round_wire_bits(theta, rate, senders=sends),
-            track=state.track)
+            wire_bits=self._round_wire_bits(theta, rate, senders=senders),
+            track=state.track, ef_rounds=state.ef_rounds)
 
-    def _accumulate(self, acc, payload, weight, d):
-        fused = getattr(self.compressor, "accumulate", None)
+    def _accumulate(self, acc, payload, weight, d, mask=None):
+        """acc + weight·dequant(payload), with an optional traced link mask.
+
+        ``mask`` (K_local,) in {0, 1}: masked links must contribute exactly
+        acc — the dynamic lowerings gather per-round weights out of W_r, so
+        a dropped link already has weight 0, and the mask makes the
+        passthrough bitwise (and lets a mask-consulting transport skip the
+        payload entirely).  ``mask=None``/all-ones are bit-identical.
+        """
+        if mask is None:
+            fused = getattr(self.compressor, "accumulate", None)
+            if fused is not None:
+                return fused(acc, payload, weight)
+            return acc + weight * self.compressor.decompress(payload, d)
+        fused = getattr(self.compressor, "accumulate_masked", None)
         if fused is not None:
-            return fused(acc, payload, weight)
-        return acc + weight * self.compressor.decompress(payload, d)
+            return fused(acc, payload, weight, mask)
+        return acc + (weight * mask[:, None]) * self.compressor.decompress(
+            payload, d)
 
     def bytes_per_round(self, params) -> int:
         """Payload bytes per round: active senders per matching × payload,

@@ -69,6 +69,16 @@ class CommState(NamedTuple):
               window anchor of ``LocalUpdateMixer`` live here.  () for every
               plain mixer.  Inner mixers must treat it as opaque — wrappers
               re-attach it after delegating (see LocalUpdateMixer).
+    ef_rounds: the error-feedback *consensus-round* clock of the dynamic
+              compressed gossip lowering (int32): counts rounds the EF wire
+              actually executed and drives the periodic ``hat_mix`` re-base
+              (``repro.dynamics.DynamicCompressedGossipMixer``, rebase when
+              ``ef_rounds % B == B − 1``).  Deliberately distinct from
+              ``rounds``, which wrapper mixers (``LocalUpdateMixer``)
+              overwrite with the optimizer-step clock — the re-base cadence
+              must follow executed consensus rounds, not steps.  () for
+              every other mixer (and in pre-PR5 checkpoints, which restore
+              padded — see ``repro.checkpoint.restore_train_state``).
     """
 
     hat: Any
@@ -79,6 +89,7 @@ class CommState(NamedTuple):
     rounds: jax.Array
     wire_bits: jax.Array
     track: Any = ()
+    ef_rounds: Any = ()
 
     @property
     def metrics(self) -> CommMetrics:

@@ -53,6 +53,12 @@ def add_dynamics_cli_args(ap) -> None:
     ap.add_argument("--gradient-tracking", action="store_true",
                     help="carry the local-update drift correction "
                          "(2x consensus wire; uncompressed mixers only)")
+    ap.add_argument("--ef-rebase-every", type=int, default=8,
+                    help="B: re-base period of the error-feedback "
+                         "compressed gossip wire over a time-varying "
+                         "topology — every B-th consensus round exchanges "
+                         "full-precision public copies to rebuild the "
+                         "hat_mix cache (0 = never; static schedules only)")
     ap.add_argument("--straggler-p", type=float, default=0.0,
                     help="per-node per-round probability of skipping "
                          "communication")
@@ -143,6 +149,7 @@ class TrainerSpec:
     radius: float = 0.5                   # radius for topology=geometric
     local_updates: int = 1                # H: steps per consensus round
     gradient_tracking: bool = False       # local-update drift correction
+    ef_rebase_every: int = 8              # B: EF-gossip hat_mix re-base period
     straggler_p: float = 0.0              # per-round node comm skips
     outage_p: float = 0.0                 # correlated node outages
     outage_len: int = 10
@@ -168,6 +175,7 @@ class TrainerSpec:
             topology=self.topology, drop_p=self.drop_p, radius=self.radius,
             local_updates=self.local_updates,
             gradient_tracking=self.gradient_tracking,
+            ef_rebase_every=self.ef_rebase_every,
             faults=faults, seed=self.seed)
         return cfg if cfg.enabled else None
 
@@ -271,6 +279,7 @@ class TrainerSpec:
             radius=getattr(args, "radius", 0.5),
             local_updates=getattr(args, "local_updates", 1),
             gradient_tracking=getattr(args, "gradient_tracking", False),
+            ef_rebase_every=getattr(args, "ef_rebase_every", 8),
             straggler_p=getattr(args, "straggler_p", 0.0),
             outage_p=getattr(args, "outage_p", 0.0),
             outage_len=getattr(args, "outage_len", 10),

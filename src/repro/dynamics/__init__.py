@@ -23,7 +23,12 @@ mixers.py   — the consensus lowerings: :class:`DynamicDenseMixer` (einsum,
               any schedule), :class:`DynamicGossipMixer` (static matchings +
               traced weights/masks; optional masked int8 Pallas wire),
               :class:`DynamicCompressedDenseMixer` (error-feedback
-              compression × dynamic topology, exact on the dense lowering).
+              compression × dynamic topology, exact on the dense lowering),
+              :class:`DynamicCompressedGossipMixer` (EF on the ppermute
+              lowering: θ̂-delta gossip with per-round weights plus a
+              periodic full-precision re-base of the ``hat_mix`` cache
+              every ``ef_rebase_every`` rounds — the ``CommState.ef_rounds``
+              clock).
 local.py    — :class:`LocalUpdateMixer`: H local steps per consensus round
               with optional gradient-tracking correction carried in
               ``CommState.track``.
@@ -51,6 +56,12 @@ Conventions — how H, dropout p and the EF step size γ interact:
 * Wire accounting is per active directed link × per-node payload (traced
   ``wire_bits``): straggler/outage rounds with no live links report exactly
   0 comm bytes; gradient tracking doubles consensus-round bytes.
+* The EF gossip wire keeps a SECOND clock, ``CommState.ef_rounds``: it
+  counts consensus rounds the compressed wire actually executed (wrappers
+  overwrite ``rounds`` with the step clock) and fires the full-precision
+  ``hat_mix`` re-base every ``ef_rebase_every``-th tick.  Delta rounds bill
+  the codec payload on active links, re-base rounds bill f32 — the
+  amortized wire is ((B−1)·codec + f32)/B per link per round.
 """
 
 from repro.dynamics.config import (
@@ -62,8 +73,10 @@ from repro.dynamics.faults import FaultConfig, fault_keep_matrix
 from repro.dynamics.local import LocalUpdateMixer
 from repro.dynamics.mixers import (
     DynamicCompressedDenseMixer,
+    DynamicCompressedGossipMixer,
     DynamicDenseMixer,
     DynamicGossipMixer,
+    gather_round_vectors,
 )
 from repro.dynamics.schedule import (
     DropoutSchedule,
@@ -79,6 +92,7 @@ __all__ = [
     "FaultConfig", "fault_keep_matrix",
     "LocalUpdateMixer",
     "DynamicDenseMixer", "DynamicGossipMixer", "DynamicCompressedDenseMixer",
+    "DynamicCompressedGossipMixer", "gather_round_vectors",
     "TopologySchedule", "StaticSchedule", "RoundRobinSchedule",
     "DropoutSchedule", "GeometricRedrawSchedule", "make_schedule",
 ]

@@ -43,6 +43,13 @@ class DynamicsConfig:
       faults: optional :class:`~repro.dynamics.faults.FaultConfig`
         (stragglers / correlated outages / extra link dropout) composed on
         top of the schedule.
+      ef_rebase_every: B — re-base period of the error-feedback compressed
+        *gossip* lowering (:class:`~repro.dynamics.DynamicCompressedGossipMixer`):
+        every B-th consensus round exchanges full-precision public copies to
+        rebuild the incremental ``hat_mix`` cache under the current W.
+        0 = never re-base (only valid for a static fault-free topology).
+        The dense EF lowering ignores it (it re-mixes full public copies
+        every round, so its cache never goes stale).
       seed: schedule PRNG seed (fault noise has its own seed in
         ``FaultConfig``).
     """
@@ -53,6 +60,7 @@ class DynamicsConfig:
     local_updates: int = 1
     gradient_tracking: bool = False
     faults: FaultConfig | None = None
+    ef_rebase_every: int = 8
     seed: int = 0
 
     def __post_init__(self):
@@ -62,6 +70,8 @@ class DynamicsConfig:
                 f"{TOPOLOGY_KINDS}")
         if self.local_updates < 1:
             raise ValueError("local_updates (H) must be >= 1")
+        if self.ef_rebase_every < 0:
+            raise ValueError("ef_rebase_every (B) must be >= 0")
         if self.topology == "dropout" and not 0.0 <= self.drop_p < 1.0:
             raise ValueError("drop_p must be in [0, 1)")
         if self.drop_p > 0 and self.topology != "dropout":

@@ -11,14 +11,19 @@ program per configuration (asserted by ``benchmarks/fig9_dynamics.py``).
   any schedule including moving-support ones (geometric re-draws).
 * :class:`DynamicGossipMixer`  — shard_map gossip over the *static* edge
   coloring of the union support with traced per-matching weights/masks;
-  optionally int8-quantized on the wire via the masked Pallas
-  ``quant_gossip`` kernels (memoryless — see note below).
+  with an ``error_feedback=False`` int8 config, the memoryless masked
+  Pallas wire (the stall ablation); with an EF config it constructs a
+  :class:`DynamicCompressedGossipMixer`.
 * :class:`DynamicCompressedDenseMixer` — error-feedback compressed
   consensus (any ``repro.comm`` codec) under a dynamic topology.  EF
   composes with faults *exactly* on this lowering because the dense mixer
-  re-mixes the full public-copy matrix every round; the gossip EF lowering's
-  incremental ``hat_mix`` cache (s_i = Σ_j W_ij θ̂_j) is only valid for a
-  static W, which is why the dynamic gossip wire is memoryless.
+  re-mixes the full public-copy matrix every round.
+* :class:`DynamicCompressedGossipMixer` — EF on the ppermute lowering: the
+  incremental ``hat_mix`` cache (s_i = Σ_j W_ij θ̂_j) advances by θ̂-delta
+  gossip weighted with the *current* traced W_r (average-preserving under
+  any doubly-stochastic sequence) and is re-based from full-precision
+  public copies every ``ef_rebase_every`` rounds, clocked by
+  ``CommState.ef_rounds``.
 * :class:`LocalUpdateMixer`    — wraps ANY v2 mixer: H−1 local rounds
   between consensus rounds, with an optional gradient-tracking correction
   (carried in ``CommState.track``) that steers each local step by the gap
@@ -45,18 +50,22 @@ Conventions (H / dropout / γ — see also the package docstring):
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.compressors import CompressionConfig, make_compressor
-from repro.comm.mixers import CompressedDenseMixer
+from repro.comm.compressors import CompressionConfig, fold_leaf, per_node_keys
+from repro.comm.mixers import (
+    CompressedDenseMixer,
+    CompressedGossipMixer,
+    _leaf_payload_bytes,
+    _send_mask,
+)
 from repro.comm.protocol import CommState, Mixer
 from repro.dynamics.faults import FaultConfig, fault_keep_matrix
-from repro.dynamics.schedule import TopologySchedule
+from repro.dynamics.schedule import StaticSchedule, TopologySchedule
 from repro.graphs.mixing import renormalize_masked_weights
 from repro.utils.compat import shard_map, shard_map_unchecked
 from repro.utils.tree import tree_bytes
@@ -69,6 +78,36 @@ def _active_links(w) -> jax.Array:
     k = w.shape[0]
     off = 1.0 - jnp.eye(k, dtype=jnp.float32)
     return jnp.sum((w > 0).astype(jnp.float32) * off)
+
+
+def gather_round_vectors(w, perm_idx):
+    """(self_w, [match_w], [mask]) gathered from a traced round matrix W_r.
+
+    ``perm_idx`` is the static edge coloring of the union support (one (K,)
+    involution per matching); the per-matching edge weights and {0, 1} link
+    masks are gathered out of W_r, so a dropped/faulted link carries weight
+    0 and mask 0 without the ppermute structure ever changing.  Shared by
+    the plain/memoryless and error-feedback dynamic gossip lowerings — the
+    single source of per-round wire truth.
+    """
+    k = w.shape[0]
+    arange = np.arange(k)
+    self_w = jnp.diagonal(w)
+    match_ws, masks = [], []
+    for pidx in perm_idx:
+        active = pidx != arange
+        pw = jnp.where(active, w[arange, pidx], 0.0)
+        match_ws.append(pw)
+        masks.append((pw > 0).astype(jnp.float32))
+    return self_w, match_ws, masks
+
+
+def _active_sends(masks) -> jax.Array:
+    """Traced count of active directed matching links (wire accounting)."""
+    sends = jnp.float32(0.0)
+    for m in masks:
+        sends = sends + jnp.sum(m)
+    return sends
 
 
 class _DynamicTopology:
@@ -149,19 +188,43 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
     W_r*, so dropped links carry weight 0 and the program never recompiles.
     Requires K == prod(mesh node axes), like the static gossip mixer.
 
-    With ``quantized`` (an int8 ``CompressionConfig``), each matching runs
-    the fused masked Pallas kernels: quantize(mask) → ppermute(int8 payload
-    + scales) → masked dequantize-accumulate.  This wire is *memoryless*
-    (fresh C(θ) every round, no error feedback): the EF lowering's
-    incremental Σ W θ̂ cache needs a static W.  Pair dynamic EF compression
-    with :class:`DynamicCompressedDenseMixer` instead.
+    With ``quantized`` (a ``CompressionConfig``), the wire depends on
+    ``quantized.error_feedback``:
+
+    * ``error_feedback=True`` (the config default) — constructing this
+      class returns a :class:`DynamicCompressedGossipMixer`: CHOCO-style
+      error-feedback innovation gossip whose incremental ``hat_mix`` cache
+      is re-based from full public copies every ``ef_rebase_every`` rounds
+      (see that class).  Before PR 5 an EF config here silently downgraded
+      to the memoryless wire — the exact ablation documented to stall.
+    * ``error_feedback=False`` — the memoryless ablation wire (int8 only):
+      each matching runs the fused masked Pallas kernels, quantize(mask) →
+      ppermute(int8 payload + scales) → masked dequantize-accumulate, with
+      a fresh C(θ) every round.  ``ef_rebase_every`` is ignored (there is
+      no cache to re-base).
     """
 
     traced_wire = True
 
+    def __new__(cls, schedule: TopologySchedule = None, mesh=None,
+                node_axis: AxisName = None, param_specs=None,
+                faults: FaultConfig | None = None,
+                quantized: CompressionConfig | None = None,
+                ef_rebase_every: int = 8):
+        if (cls is DynamicGossipMixer and quantized is not None
+                and quantized.enabled and quantized.error_feedback):
+            # EF wire: the sibling class owns the hat/hat_mix state and the
+            # re-base clock.  Returning a non-subclass instance skips this
+            # class's __init__ entirely (Python data model).
+            return DynamicCompressedGossipMixer(
+                schedule, mesh, node_axis, param_specs, quantized,
+                faults=faults, ef_rebase_every=ef_rebase_every)
+        return super().__new__(cls)
+
     def __init__(self, schedule: TopologySchedule, mesh, node_axis: AxisName,
                  param_specs, faults: FaultConfig | None = None,
-                 quantized: CompressionConfig | None = None):
+                 quantized: CompressionConfig | None = None,
+                 ef_rebase_every: int = 8):
         self._init_topology(schedule, faults)
         decomp = schedule.decomposition()
         axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
@@ -180,15 +243,22 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
         self._p_node = jax.sharding.PartitionSpec(self.axis)
         self.quantized = None
         if quantized is not None and quantized.enabled:
-            if quantized.kind != "int8":
+            if quantized.kind not in ("int8", "int4"):
                 raise ValueError(
-                    "the masked quant_gossip wire serves kind='int8'")
+                    "the masked quant_gossip wire serves kind='int8' or "
+                    "'int4' (the traced-qmax rate in the int8 container)")
             if quantized.schedule is not None:
                 raise ValueError(
                     "rate schedules are not supported on the masked wire")
             self.quantized = quantized
-            self._compressor = make_compressor(
-                dataclasses.replace(quantized, use_kernel=True))
+            # int4 rides the int8 container at qmax=7 (the masked kernel's
+            # traced rate); payload accounting bills the effective bits,
+            # like the scheduled-rate static path
+            self._qmax = 127 if quantized.kind == "int8" else 7
+            from repro.comm.compressors import KernelInt8Quantizer
+
+            self._compressor = KernelInt8Quantizer(
+                quantized.block_d, quantized.interpret)
 
     @property
     def compression(self):
@@ -203,14 +273,7 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
 
     def _round_vectors(self, w):
         """(self_w, [match_w], [mask]) gathered from the traced W_r."""
-        self_w = jnp.diagonal(w)
-        match_ws, masks = [], []
-        for pidx in self._perm_idx:
-            active = pidx != self._arange
-            pw = jnp.where(active, w[self._arange, pidx], 0.0)
-            match_ws.append(pw)
-            masks.append((pw > 0).astype(jnp.float32))
-        return self_w, match_ws, masks
+        return gather_round_vectors(w, self._perm_idx)
 
     def _node_index(self):
         if isinstance(self.axis, str):
@@ -259,7 +322,7 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
                         zip(mws, mks, self.perms)):
                     acc = masked_quant_gossip_round(
                         xf, acc, pw, mk, self.axis, perm,
-                        jax.random.fold_in(lk, m),
+                        jax.random.fold_in(lk, m), qmax=self._qmax,
                         block_d=cfg.block_d, interpret=interpret,
                         use_kernel=cfg.use_kernel)
                 out.append(acc.reshape(x.shape).astype(x.dtype))
@@ -286,9 +349,9 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
             key, sub = jax.random.split(state.key)
             mixed = self._quantized_gossip(theta, self_w, match_ws, masks,
                                            sub)
-            per_node_bits = 8.0 * sum(
-                self._compressor.payload_bytes(x.size // self.k)
-                for x in jax.tree.leaves(theta))
+            per_node_bits = float(sum(
+                self._quant_leaf_bits(x.size // self.k)
+                for x in jax.tree.leaves(theta)))
         sends = sum(jnp.sum(m) for m in masks)
         return mixed, state._replace(
             key=key,
@@ -296,14 +359,25 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
             wire_bits=jnp.asarray(sends * per_node_bits, jnp.float32),
         )
 
+    def _quant_leaf_bits(self, d: int) -> float:
+        """Effective wire bits per node for one leaf: ceil(log2(2qmax+1))
+        per entry — 8 for int8, 4 for the int4 rate riding the int8
+        container (what a bit-packing transport moves) — plus the
+        per-(node, block) f32 scales.  Pure python (this is called from a
+        traced context; staging a constant would leak a tracer)."""
+        import math
+
+        bits = math.ceil(math.log2(2 * self._qmax + 1))
+        return float(bits * d + 32 * self._compressor._n_blocks(d))
+
     def bytes_per_round(self, params) -> int:
         """Fault-free static estimate: every matching edge active."""
         sends = sum(len(pairs) for pairs in self.perms)
         if self.quantized is None:
             return sends * tree_bytes(params) // self.k
-        per_node = sum(self._compressor.payload_bytes(x.size // self.k)
-                       for x in jax.tree.leaves(params))
-        return sends * per_node
+        per_node = sum(self._quant_leaf_bits(x.size // self.k)
+                       for x in jax.tree.leaves(params)) / 8.0
+        return round(sends * per_node)
 
 
 class DynamicCompressedDenseMixer(CompressedDenseMixer, _DynamicTopology):
@@ -339,3 +413,208 @@ class DynamicCompressedDenseMixer(CompressedDenseMixer, _DynamicTopology):
         # per-link accounting (matches the other dynamic mixers): each
         # active directed link moves one node payload
         return _active_links(w)
+
+
+class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
+    """Error-feedback compressed gossip over a time-varying topology.
+
+    The static :class:`~repro.comm.mixers.CompressedGossipMixer` keeps the
+    incremental cache s_i = Σ_j W_ij θ̂_j current by adding each round's
+    received innovations — valid **only under a static W**, because the
+    base term Σ_j W_ij θ̂_j(r₀) silently goes stale the moment W moves.
+    This lowering makes EF sound on the traced per-round weights with a
+    two-mode round, selected by a second traced clock
+    (``CommState.ef_rounds``):
+
+    * **delta rounds** (all but every B-th): the shared EF leaf path of the
+      static mixer, with this round's gathered weights/masks — each node
+      quantizes its innovation against θ̂ (masked senders emit nothing and
+      freeze their θ̂), and the cache advances by the *current-W-weighted*
+      increments, s_i += W_ii(r)·q_i + Σ_m W_{i,pm(i)}(r)·dequant(recv).
+      Because every increment is weighted by a doubly-stochastic W_r, the
+      CHOCO invariant Σ_i s_i = Σ_i θ̂_i holds exactly no matter how the
+      topology moves (the delta recursion never bakes a stale W into the
+      cache); only the *bias* of s_i as an estimate of Σ_j W_ij(r) θ̂_j(r)
+      drifts with the topology variation.
+    * **re-base rounds** (``ef_rounds % B == B − 1``): the codec still runs
+      (θ̂ advances), but instead of the quantized payload the matchings
+      exchange the **full-precision public copies**, and the cache is
+      rebuilt exactly under the current weights:
+      s_i = W_ii(r)·θ̂_i + Σ_m W_{i,pm(i)}(r)·θ̂_{pm(i)} — resetting the
+      accumulated drift.  The re-base wire is full f32 (active links only
+      in the accounting), amortized 1/B.
+
+    ``ef_rebase_every`` (B):
+      * B = 0 — never re-base: bit-exact to the frozen static mixer, and
+        therefore only legal under a ``StaticSchedule`` with no faults.
+      * B = 1 — re-base every round: the cache is always fresh, the combine
+        degenerates to the memoryless semantics applied to θ̂ (and matches
+        the dense EF lowering, which re-mixes full public copies each
+        round, at the fixed-seed PRNG contract).
+      * B ≥ 2 — one ``lax.cond`` selects the round mode at runtime; both
+        modes live in ONE compiled program, so a (p, B) sweep never
+        recompiles across rounds.
+
+    Under a ``StaticSchedule`` with no faults the gathered weights equal
+    the frozen decomposition weights bit-for-bit and every mask is 1, so
+    the delta rounds reproduce :class:`CompressedGossipMixer` exactly (the
+    masked encode/accumulate paths are bit-identical at mask ≡ 1).
+    """
+
+    def __init__(self, schedule: TopologySchedule, mesh, node_axis: AxisName,
+                 param_specs, compression: CompressionConfig,
+                 faults: FaultConfig | None = None,
+                 ef_rebase_every: int = 8,
+                 replica_axis: str | None = None):
+        if compression is None or not compression.enabled:
+            raise ValueError("DynamicCompressedGossipMixer needs an enabled "
+                             "CompressionConfig")
+        if not compression.error_feedback:
+            raise ValueError(
+                "error_feedback=False is the memoryless ablation — build "
+                "DynamicGossipMixer(quantized=...) for that wire")
+        decomp = schedule.decomposition()
+        super().__init__(decomp, mesh, node_axis, param_specs, compression,
+                         replica_axis=replica_axis)
+        self._init_topology(schedule, faults)
+        if ef_rebase_every < 0:
+            raise ValueError("ef_rebase_every must be >= 0")
+        time_varying = (not isinstance(schedule, StaticSchedule)
+                        or self.faults is not None)
+        if ef_rebase_every == 0 and time_varying:
+            raise ValueError(
+                "ef_rebase_every=0 (never re-base) keeps the incremental "
+                "hat_mix cache forever, which is only valid for a static "
+                "fault-free W; this schedule/fault config varies per round "
+                "— pass ef_rebase_every >= 1")
+        self.ef_rebase_every = int(ef_rebase_every)
+        self._perm_idx = [np.asarray(p, np.int64) for p in decomp.matchings]
+
+    @property
+    def traced_wire(self) -> bool:
+        return True  # active-link accounting varies per round
+
+    # -- state ----------------------------------------------------------------
+
+    def init_state(self, params) -> CommState:
+        return super().init_state(params)._replace(ef_rounds=jnp.int32(0))
+
+    def state_specs(self, param_specs) -> CommState:
+        rep = jax.sharding.PartitionSpec()
+        return super().state_specs(param_specs)._replace(ef_rounds=rep)
+
+    # -- the round -------------------------------------------------------------
+
+    def __call__(self, theta, state: CommState, *, round=None):
+        w = self._round_topology_w(state.rounds)
+        self_w, match_ws, masks = gather_round_vectors(w, self._perm_idx)
+        senders = _active_sends(masks)
+
+        def delta(t, st):
+            return self._gossip_round(t, st, self_w=self_w,
+                                      match_ws=match_ws, masks=masks,
+                                      senders=senders)
+
+        def rebase(t, st):
+            return self._rebase_round(t, st, self_w, match_ws, masks,
+                                      senders)
+
+        b = self.ef_rebase_every
+        if b == 0:
+            t2, s2 = delta(theta, state)
+        elif b == 1:
+            t2, s2 = rebase(theta, state)
+        else:
+            t2, s2 = jax.lax.cond(state.ef_rounds % b == b - 1,
+                                  rebase, delta, theta, state)
+        return t2, s2._replace(ef_rounds=state.ef_rounds + 1)
+
+    def _rebase_round(self, theta, state: CommState, self_w, match_ws,
+                      masks, senders):
+        """Codec step + full-precision θ̂ exchange rebuilding the cache.
+
+        The innovation is still encoded (θ̂ must keep tracking θ; masked
+        senders stay frozen) but the quantized payload never crosses the
+        wire this round — the matchings ppermute the fresh public copies
+        instead, and s_i = Σ_j W_ij(r) θ̂_j is exact under the current W.
+        """
+        key, sub = jax.random.split(state.key)
+        rate = self._rate(state)
+        p_node = jax.sharding.PartitionSpec(self.axis)
+        p_rep = jax.sharding.PartitionSpec()
+        specs = self.param_specs
+        have_rate = rate is not None
+
+        def body(t, hat, self_w, match_ws, mks, k0, rate_op):
+            r_op = rate_op if have_rate else None
+            send = _send_mask(mks)
+            leaves, treedef = jax.tree.flatten(t)
+            k_local = leaves[0].shape[0] if leaves else 1
+            rows = self._node_index() * k_local + jnp.arange(k_local)
+            node_ks = per_node_keys(k0, rows)
+            hats = treedef.flatten_up_to(hat)
+            o_t, o_h, o_s = [], [], []
+            res_sq = jnp.float32(0.0)
+            for i, (x, h) in enumerate(zip(leaves, hats)):
+                k_local = x.shape[0]
+                d = x.size // k_local
+                xf = x.reshape(k_local, d).astype(jnp.float32)
+                if self.replica_axis is not None:
+                    r = self.mesh.shape[self.replica_axis]
+                    xf = jax.lax.psum(xf, self.replica_axis) / r
+                hf = h.reshape(k_local, d)
+                res_sq = res_sq + jnp.sum(jnp.square(xf - hf))
+                _, _, new_hat = self._encode_leaf(
+                    xf, hf, fold_leaf(node_ks, i), r_op, send_mask=send)
+                acc = self_w[:, None] * new_hat
+                for pw, mk, perm in zip(match_ws, mks, self.perms):
+                    recv = jax.lax.ppermute(new_hat, self.axis, perm)
+                    acc = acc + (pw * mk)[:, None] * recv
+                out = xf + self.gamma * (acc - new_hat)
+                o_t.append(out.reshape(x.shape).astype(x.dtype))
+                o_h.append(new_hat.reshape(x.shape))
+                o_s.append(acc.reshape(x.shape))
+            res_sq = jax.lax.psum(res_sq, self.axis)
+            u = treedef.unflatten
+            return u(o_t), u(o_h), u(o_s), res_sq
+
+        n = len(self.perms)
+        shard = shard_map_unchecked(
+            body,
+            mesh=self.mesh,
+            in_specs=(specs, specs, p_node, [p_node] * n, [p_node] * n,
+                      p_rep, p_rep),
+            out_specs=(specs, specs, specs, p_rep),
+        )
+        rate_op = rate if have_rate else jnp.float32(0.0)
+        t2, h2, s2, res_sq = shard(theta, state.hat, self_w, list(match_ws),
+                                   list(masks), sub, rate_op)
+        res_norm, res_ref, rounds = self._next_sched_state(
+            state, jnp.sqrt(res_sq))
+        # full-precision wire: active links × per-node f32 payload
+        full_bits = 32.0 * sum(x.size // self.k
+                               for x in jax.tree.leaves(theta))
+        return t2, CommState(
+            hat=h2, hat_mix=s2, key=key,
+            res_norm=res_norm, res_ref=res_ref, rounds=rounds,
+            wire_bits=jnp.asarray(senders * full_bits, jnp.float32),
+            track=state.track, ef_rounds=state.ef_rounds)
+
+    def bytes_per_round(self, params) -> int:
+        """Fault-free amortized estimate over the FULL union support —
+        ((B−1)·compressed + 1·f32 re-base)/B per link — i.e. an upper
+        bound: masked links move zero payload, so the authoritative
+        per-round figure is the traced active-link ``CommState.wire_bits``
+        (what ``build_train_step`` reports for ``traced_wire`` mixers).
+        The compiled collective-permutes do move the full union-support
+        buffers (see the HLO cross-check in tests/test_dynamics.py); a
+        mask-consulting transport is a ROADMAP item."""
+        sends = sum(len(pairs) for pairs in self.perms)
+        q = _leaf_payload_bytes(self.compressor, params, self.k)
+        full = 4 * sum(x.size // self.k for x in jax.tree.leaves(params))
+        b = self.ef_rebase_every
+        if b == 0:
+            return sends * q
+        if b == 1:
+            return sends * full
+        return round(sends * ((b - 1) * q + full) / b)

@@ -66,6 +66,15 @@ def masked_quantize_blockwise(x, u, mask, *, qmax=127, block_d: int = 65536,
 
     ``mask`` (K,) in {0, 1} is traced, like ``qmax`` — per-round topology
     faults reuse one compiled program.
+
+    Two wires are built from this kernel: the memoryless dynamic gossip
+    round quantizes θ per matching (``masked_quant_gossip_round``), and the
+    error-feedback dynamic wire quantizes the *innovation delta* θ − θ̂ once
+    per round (``KernelInt8Quantizer.compress_masked``) with the node-level
+    any-live-link sender mask — a fully-masked node emits zero payload and
+    zero scales, so its θ̂ stays frozen exactly as the jnp path's masked
+    input does (dequantizing to 0), and the zero buffer is what a
+    mask-consulting transport would skip.
     """
     if _use_pallas(interpret, use_kernel):
         on_tpu = jax.default_backend() == "tpu"
@@ -81,7 +90,12 @@ def masked_dequant_accumulate(acc, q, scales, w, mask, *,
                               interpret: bool = False,
                               use_kernel: bool = True):
     """acc + mask·w·dequant(q, scales): per-round neighbor weights *and*
-    link mask are traced operands (the dynamic-topology receive combine)."""
+    link mask are traced operands (the dynamic-topology receive combine,
+    shared by the memoryless wire and the EF delta rounds via
+    ``KernelInt8Quantizer.accumulate_masked``).  A masked link contributes
+    exactly ``acc`` bitwise — with the weights gathered from W_r a dropped
+    link already has weight 0, so the mask is the bitwise-passthrough (and
+    transport-skip) guarantee on top."""
     w = jnp.reshape(jnp.asarray(w, jnp.float32), (-1,))
     mask = jnp.reshape(jnp.asarray(mask, jnp.float32), (-1,))
     if _use_pallas(interpret, use_kernel):

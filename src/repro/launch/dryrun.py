@@ -74,7 +74,8 @@ def _shardings(mesh, spec_tree):
 def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
                 graph_kind: str = "ring",
                 compression: CompressionConfig | None = None,
-                topology: str = "dropout", drop_p: float = 0.2):
+                topology: str = "dropout", drop_p: float = 0.2,
+                ef_rebase_every: int = 8):
     """Returns (fn, example_args, in_shardings)."""
     model = TransformerLM(cfg)
     hier = "fsdp" in mesh.axis_names
@@ -93,18 +94,23 @@ def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, mixer_kind: str,
             compression=compression)
     elif mixer_kind == "gossip-dynamic":
         # time-varying topology lowering (repro.dynamics): static ppermute
-        # structure over the union support, traced per-round weights/masks;
-        # int8 compression runs the masked quant_gossip kernel wire
+        # structure over the union support, traced per-round weights/masks.
+        # An error-feedback config builds the EF wire with periodic hat_mix
+        # re-basing (DynamicCompressedGossipMixer, --ef-rebase-every);
+        # --no-error-feedback keeps the memoryless masked int8 kernel wire.
         from repro.dynamics import DynamicGossipMixer, make_schedule
 
-        if compression is not None and compression.enabled \
-                and compression.kind != "int8":
+        if (compression is not None and compression.enabled
+                and not compression.error_feedback
+                and compression.kind not in ("int8", "int4")):
             raise ValueError(
-                "gossip-dynamic serves --compress int8 (masked kernel wire) "
-                "or uncompressed")
+                "the memoryless gossip-dynamic wire serves --compress "
+                "int8/int4 (masked kernel wire, traced qmax); "
+                "error-feedback configs take any codec")
         mixer = DynamicGossipMixer(
             make_schedule(topology, w=w, k=k, drop_p=drop_p),
-            mesh, node_axis, pspecs, quantized=compression)
+            mesh, node_axis, pspecs, quantized=compression,
+            ef_rebase_every=ef_rebase_every)
     else:
         raise ValueError(mixer_kind)
     step_cfg = TrainStepConfig(
@@ -177,10 +183,12 @@ def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh):
 
 
 def build_fn(cfg, shape, mesh, mixer_kind, graph_kind="ring",
-             compression=None, topology="dropout", drop_p=0.2):
+             compression=None, topology="dropout", drop_p=0.2,
+             ef_rebase_every=8):
     if shape.kind == "train":
         return build_train(cfg, shape, mesh, mixer_kind, graph_kind,
-                           compression, topology=topology, drop_p=drop_p)
+                           compression, topology=topology, drop_p=drop_p,
+                           ef_rebase_every=ef_rebase_every)
     if shape.kind == "prefill":
         return build_prefill(cfg, shape, mesh)
     return build_decode(cfg, shape, mesh)
@@ -200,9 +208,10 @@ def _cost_entries(compiled) -> dict:
 
 def compile_and_measure(cfg, shape, mesh, mixer_kind, want_hlo=True,
                         graph_kind="ring", compression=None,
-                        topology="dropout", drop_p=0.2):
+                        topology="dropout", drop_p=0.2, ef_rebase_every=8):
     fn, args = build_fn(cfg, shape, mesh, mixer_kind, graph_kind, compression,
-                        topology=topology, drop_p=drop_p)
+                        topology=topology, drop_p=drop_p,
+                        ef_rebase_every=ef_rebase_every)
     t0 = time.time()
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
@@ -254,14 +263,14 @@ def _with_groups(cfg: ArchConfig, g: int, keep_chunking: bool = False
 
 def fit_scan_correction(cfg, shape, mesh, mixer_kind, graph_kind="ring",
                         compression=None, keep_chunking=False,
-                        topology="dropout", drop_p=0.2):
+                        topology="dropout", drop_p=0.2, ef_rebase_every=8):
     """Unrolled G=1 / G=2 probes -> cost(G) = a + b*G, evaluated at n_groups."""
     probes = {}
     for g in (1, 2):
         r = compile_and_measure(
             _with_groups(cfg, g, keep_chunking=keep_chunking), shape, mesh,
             mixer_kind, graph_kind=graph_kind, compression=compression,
-            topology=topology, drop_p=drop_p)
+            topology=topology, drop_p=drop_p, ef_rebase_every=ef_rebase_every)
         probes[g] = {
             "flops": r["cost"]["flops"],
             "bytes": r["cost"]["bytes"],
@@ -284,7 +293,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
             compression=None, compute_dtype=None, moe_constraints: bool = False,
             keep_chunking: bool = False, variant: str = "",
             hier_nodes: int = 0, remat_policy: str = "",
-            topology: str = "dropout", drop_p: float = 0.2) -> dict | None:
+            topology: str = "dropout", drop_p: float = 0.2,
+            ef_rebase_every: int = 8) -> dict | None:
     cfg = get_arch(arch)
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -331,12 +341,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
     print(f"[run ] {tag}: {model.num_params()/1e9:.2f}B params ...", flush=True)
     res = compile_and_measure(cfg, shape, mesh, mixer_kind,
                               graph_kind=graph_kind, compression=compression,
-                              topology=topology, drop_p=drop_p)
+                              topology=topology, drop_p=drop_p,
+                              ef_rebase_every=ef_rebase_every)
     fitted = fit_scan_correction(cfg, shape, mesh, mixer_kind,
                                  graph_kind=graph_kind,
                                  compression=compression,
                                  keep_chunking=keep_chunking,
-                                 topology=topology, drop_p=drop_p)
+                                 topology=topology, drop_p=drop_p,
+                                 ef_rebase_every=ef_rebase_every)
 
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
     mf = model_flops(model.num_params(), tokens,
@@ -384,6 +396,10 @@ def main():
                     help="gossip-dynamic: per-round topology schedule")
     ap.add_argument("--drop-p", type=float, default=0.2,
                     help="gossip-dynamic: link dropout probability")
+    ap.add_argument("--ef-rebase-every", type=int, default=8,
+                    help="gossip-dynamic: hat_mix re-base period B of the "
+                         "error-feedback compressed wire (0 = never; "
+                         "static schedules only)")
     ap.add_argument("--graph", default="ring")
     add_compression_cli_args(ap)
     ap.add_argument("--compute-dtype", default=None, choices=[None, "bf16"])
@@ -421,7 +437,8 @@ def main():
                             variant=args.variant,
                             hier_nodes=args.hier_nodes,
                             remat_policy=args.remat_policy,
-                            topology=args.topology, drop_p=args.drop_p)
+                            topology=args.topology, drop_p=args.drop_p,
+                            ef_rebase_every=args.ef_rebase_every)
                 except Exception as e:  # a failure here is a sharding bug
                     failures.append((arch, shape, multi, repr(e)))
                     print(f"[FAIL] {arch} {shape} multi={multi}: {e!r}",

@@ -138,4 +138,59 @@ def test_pre_track_checkpoint_pads_comm(tmp_path):
     assert step == 5
     assert isinstance(restored.comm, CommState)
     assert restored.comm.track == ()
+    assert restored.comm.ef_rounds == ()
     assert int(restored.comm.rounds) == 0
+
+
+def test_pre_pr5_checkpoint_pads_ef_rounds_and_continues_bitexact(tmp_path):
+    """PR-5 satellite: a checkpoint written before CommState grew the EF
+    re-base clock (8 fields, PR-4 layout) restores with ``ef_rounds`` padded
+    empty, and a run restored from it continues bit-exactly — only the EF
+    dynamic gossip mixer allocates the clock, so every pre-PR5 state is
+    correct with the empty slot."""
+    tr = _toy_trainer(compress="int8")
+    state = tr.init({"w": jnp.zeros((4, 2))})
+    state, _ = tr.step(state, _toy_batch(0))
+    state, _ = tr.step(state, _toy_batch(1))
+    assert state.comm.ef_rounds == ()  # static mixers never allocate it
+
+    # simulate the PR-4 on-disk layout: comm truncated to its 8 fields
+    old = {
+        "params": state.params,
+        "opt_state": state.opt_state,
+        "step": state.step,
+        "comm": tuple(state.comm)[:8],
+    }
+    save_checkpoint(str(tmp_path), 2, old)
+    restored, step = restore_train_state(str(tmp_path))
+    assert step == 2
+    assert restored.comm.ef_rounds == ()
+    _assert_trees_equal(state, restored)
+
+    nxt = _toy_batch(2)
+    s1, _ = tr.step(state, nxt)
+    s2, _ = tr.step(restored, nxt)
+    _assert_trees_equal(s1, s2)
+
+
+def test_ef_rounds_clock_roundtrips(tmp_path):
+    """A CommState carrying the int32 re-base clock (EF dynamic gossip)
+    round-trips through save/restore_train_state as a typed field."""
+    from repro.comm.protocol import CommState
+    from repro.core.drdsgd import DecentralizedState
+
+    comm = CommState(
+        hat={"w": jnp.ones((4, 2))}, hat_mix={"w": jnp.full((4, 2), 2.0)},
+        key=jax.random.PRNGKey(3), res_norm=jnp.float32(0.5),
+        res_ref=jnp.float32(0.25), rounds=jnp.int32(11),
+        wire_bits=jnp.float32(96.0), track=(), ef_rounds=jnp.int32(11))
+    state = DecentralizedState(
+        params={"w": jnp.zeros((4, 2))}, opt_state=(),
+        step=jnp.int32(11), comm=comm)
+    from repro.checkpoint import save_train_state as _save
+
+    _save(str(tmp_path), 11, state)
+    restored, _ = restore_train_state(str(tmp_path))
+    assert isinstance(restored.comm, CommState)
+    assert int(restored.comm.ef_rounds) == 11
+    _assert_trees_equal(state, restored)

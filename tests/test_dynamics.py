@@ -47,6 +47,15 @@ ALL_BUILDERS = ["ring", "grid", "torus", "erdos_renyi", "geometric",
                 "complete", "star", "hypercube"]  # K=16 suits hypercube too
 
 
+def _run_subprocess(script, devices=8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
 def _params(k, seed=0):
     rng = np.random.default_rng(seed)
     return {"a": jnp.asarray(rng.normal(size=(k, 5, 3)), jnp.float32),
@@ -374,6 +383,393 @@ def test_compressed_dynamic_converges_under_dropout():
     assert disagreement(theta) < 0.05 * d0
 
 
+# -- EF compression on the gossip lowering (hat_mix re-basing) -----------------
+
+def test_ef_gossip_rebase_anchors():
+    """The three PR-5 bit-exactness anchors (subprocess, 8 host devices):
+
+    * an EF config on ``DynamicGossipMixer`` builds the re-based wire (the
+      silent memoryless downgrade was the bug);
+    * static schedule + EF ≡ the frozen ``CompressedGossipMixer`` bit-exact
+      while no re-base fires (B = 0 and B > horizon), tight-allclose across
+      a re-base (pure float reordering under a static W);
+    * B = 1 re-bases every round: the cache is the fresh memoryless-style
+      combine Σ_j W_ij(r)·θ̂_j of the public copies, and the round output
+      reconstructs as θ + γ(s − θ̂);
+    * dense vs gossip dynamic EF agree at a fixed seed: bit-equal θ̂ on the
+      first round (the (node, leaf) PRNG fold contract), trajectory-level
+      agreement after 6 dropout rounds (stochastic-rounding boundary flips
+      are re-absorbed by EF);
+    * B = 0 (never re-base) on a time-varying schedule is refused.
+    """
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import CompressionConfig
+from repro.comm.mixers import CompressedGossipMixer
+from repro.dynamics import (DynamicCompressedDenseMixer,
+                            DynamicCompressedGossipMixer, DynamicGossipMixer,
+                            DropoutSchedule, StaticSchedule)
+from repro.graphs import metropolis_weights, ring_graph, permutation_decomposition
+from repro.utils.compat import make_auto_mesh
+
+k = 8
+w = metropolis_weights(ring_graph(k))
+mesh = make_auto_mesh((k,), ("data",))
+specs = {"a": P("data", None), "b": P("data", None, None)}
+rng = np.random.default_rng(0)
+theta = {"a": jnp.asarray(rng.normal(size=(k, 64)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(k, 3, 5)), jnp.float32)}
+cc = CompressionConfig(kind="int8", seed=7)
+
+m = DynamicGossipMixer(StaticSchedule(w), mesh, "data", specs, quantized=cc,
+                       ef_rebase_every=8)
+assert isinstance(m, DynamicCompressedGossipMixer), type(m)
+
+ref = CompressedGossipMixer(permutation_decomposition(w), mesh, "data", specs, cc)
+for b in (0, 8):
+    dyn = DynamicCompressedGossipMixer(StaticSchedule(w), mesh, "data",
+                                       specs, cc, ef_rebase_every=b)
+    ta, sa = theta, ref.init_state(theta)
+    tb, sb = theta, dyn.init_state(theta)
+    ja, jb = jax.jit(ref), jax.jit(dyn)
+    for r in range(5):
+        ta, sa = ja(ta, sa)
+        tb, sb = jb(tb, sb)
+    for n in theta:
+        np.testing.assert_array_equal(np.asarray(ta[n]), np.asarray(tb[n]))
+        np.testing.assert_array_equal(np.asarray(sa.hat[n]), np.asarray(sb.hat[n]))
+        np.testing.assert_array_equal(np.asarray(sa.hat_mix[n]),
+                                      np.asarray(sb.hat_mix[n]))
+    assert float(sa.res_norm) == float(sb.res_norm)
+    assert float(sa.wire_bits) == float(sb.wire_bits)
+    assert int(sb.ef_rounds) == 5
+
+dyn = DynamicCompressedGossipMixer(StaticSchedule(w), mesh, "data", specs, cc,
+                                   ef_rebase_every=2)
+ta, sa = theta, ref.init_state(theta)
+tb, sb = theta, dyn.init_state(theta)
+ja, jb = jax.jit(ref), jax.jit(dyn)
+for r in range(4):
+    ta, sa = ja(ta, sa)
+    tb, sb = jb(tb, sb)
+for n in theta:
+    np.testing.assert_allclose(np.asarray(ta[n]), np.asarray(tb[n]),
+                               rtol=1e-5, atol=1e-5)
+
+sched = DropoutSchedule(w, 0.3, seed=5)
+m1 = DynamicCompressedGossipMixer(sched, mesh, "data", specs, cc,
+                                  ef_rebase_every=1)
+t1, s1 = jax.jit(m1)(theta, m1.init_state(theta))
+w0 = np.asarray(m1._round_topology_w(jnp.int32(0)))
+for n in theta:
+    hat = np.asarray(s1.hat[n]).reshape(k, -1)
+    s = np.asarray(s1.hat_mix[n]).reshape(k, -1)
+    np.testing.assert_allclose(s, w0 @ hat, rtol=1e-5, atol=1e-6)
+    out = np.asarray(theta[n]).reshape(k, -1) + m1.gamma * (s - hat)
+    np.testing.assert_allclose(np.asarray(t1[n]).reshape(k, -1), out,
+                               rtol=1e-5, atol=1e-6)
+
+dm = DynamicCompressedDenseMixer(DropoutSchedule(w, 0.3, seed=5), cc)
+gm = DynamicCompressedGossipMixer(DropoutSchedule(w, 0.3, seed=5), mesh,
+                                  "data", specs, cc, ef_rebase_every=1)
+td, sd = theta, dm.init_state(theta)
+tg, sg = theta, gm.init_state(theta)
+jd, jg = jax.jit(dm), jax.jit(gm)
+for r in range(6):
+    td, sd = jd(td, sd)
+    tg, sg = jg(tg, sg)
+    if r == 0:
+        for n in theta:
+            np.testing.assert_array_equal(np.asarray(sd.hat[n]),
+                                          np.asarray(sg.hat[n]))
+            np.testing.assert_allclose(np.asarray(td[n]), np.asarray(tg[n]),
+                                       rtol=1e-6, atol=1e-6)
+for n in theta:
+    np.testing.assert_allclose(np.asarray(td[n]), np.asarray(tg[n]),
+                               rtol=1e-2, atol=2e-2)
+
+try:
+    DynamicCompressedGossipMixer(DropoutSchedule(w, 0.3), mesh, "data",
+                                 specs, cc, ef_rebase_every=0)
+    raise AssertionError("B=0 on a dropout schedule must raise")
+except ValueError:
+    pass
+print("OK")
+"""
+    _run_subprocess(script)
+
+
+def test_ef_gossip_beats_memoryless_under_dropout():
+    """Stall regression (subprocess): on the heterogeneous quadratic problem
+    under dropout p = 0.2, the memoryless int8 wire stalls at the
+    quantization noise floor while EF with periodic re-basing keeps
+    contracting — EF must reach strictly lower consensus error.  Also pins
+    the wire accounting: delta rounds bill int8 payloads on active links,
+    re-base rounds bill f32, and the ``ef_rounds`` clock matches the round
+    count."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import CompressionConfig
+from repro.core import TrainerSpec
+from repro.dynamics import DynamicGossipMixer, DropoutSchedule
+from repro.graphs import metropolis_weights, ring_graph
+from repro.utils.compat import make_auto_mesh
+
+k = 8
+w = metropolis_weights(ring_graph(k))
+mesh = make_auto_mesh((k,), ("node",))
+rng = np.random.default_rng(0)
+c = jnp.asarray(rng.normal(size=(k, 6)), jnp.float32)
+
+def loss_fn(params, batch):
+    return jnp.sum((params["x"] - batch) ** 2)
+
+def run(cfg, b):
+    specs = {"x": P("node")}
+    mixer = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=3), mesh, "node",
+                               specs, quantized=cfg, ef_rebase_every=b)
+    spec = TrainerSpec(num_nodes=k, graph="ring", robust=False, lr=0.03,
+                       compress=cfg, metrics_disagreement=False)
+    tr = spec.build(loss_fn, mixer=mixer)
+    state = tr.init({"x": jnp.zeros(6)})
+    state, ms = tr.run(state, jnp.broadcast_to(c[None], (300, k, 6)))
+    x = np.asarray(state.params["x"])
+    err = float(np.linalg.norm(x - x.mean(0, keepdims=True), axis=1).max())
+    return err, state, ms
+
+mem_err, _, _ = run(CompressionConfig(kind="int8", error_feedback=False), 8)
+ef_err, st, ms = run(CompressionConfig(kind="int8"), 4)
+assert ef_err < mem_err, (ef_err, mem_err)
+assert int(st.comm.ef_rounds) == 300
+
+# wire accounting: every 4th round bills f32 public copies, others int8
+wire = np.asarray(ms["wire_bits"])
+per_node_f32 = 32.0 * 6
+assert wire.max() <= 16 * per_node_f32 + 1e-3  # <= all links live, f32
+rebases = wire[3::4]
+deltas = np.concatenate([wire[0::4], wire[1::4], wire[2::4]])
+# int8 payload (6 bytes + 4-byte scale) < f32 (24 bytes) per node payload
+assert np.median(rebases) > np.median(deltas)
+print("consensus err: memoryless", mem_err, "ef", ef_err)
+print("OK")
+"""
+    _run_subprocess(script)
+
+
+def test_dynamic_gossip_wire_matches_hlo_collective_permute():
+    """ISSUE satellite: the static ``bytes_per_round`` of the dynamic gossip
+    mixers counts every union-support link (the buffers ppermute physically
+    moves), while the traced ``wire_bits`` counts active links only — the
+    authoritative figure.  Cross-check the static estimate against the
+    compiled-HLO collective-permute bytes for the plain, memoryless-int8,
+    EF-delta (B=0) and EF-re-base (B=1) programs, and a B=4 program whose
+    HLO carries BOTH round modes."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import CompressionConfig
+from repro.dynamics import (DynamicCompressedGossipMixer, DynamicGossipMixer,
+                            DropoutSchedule, StaticSchedule)
+from repro.graphs import metropolis_weights, ring_graph
+from repro.utils.compat import make_auto_mesh
+from repro.utils.hlo import parse_collectives
+
+k = 8
+w = metropolis_weights(ring_graph(k))
+mesh = make_auto_mesh((k,), ("data",))
+specs = {"a": P("data", None), "b": P("data", None, None)}
+theta = {"a": jnp.zeros((k, 64), jnp.float32),
+         "b": jnp.zeros((k, 3, 5), jnp.float32)}
+
+def cp_bytes(mixer):
+    st = mixer.init_state(theta)
+    compiled = jax.jit(mixer).lower(theta, st).compile()
+    ops = [o for o in parse_collectives(compiled.as_text(), world_size=k)
+           if o.kind == "collective-permute"]
+    assert ops, "no collective-permute in compiled program"
+    return sum(o.wire_bytes for o in ops) * k
+
+cc = CompressionConfig(kind="int8", seed=0)
+plain = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh, "data", specs)
+assert cp_bytes(plain) == plain.bytes_per_round(theta)
+
+mem = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh, "data", specs,
+    quantized=CompressionConfig(kind="int8", error_feedback=False))
+assert cp_bytes(mem) == mem.bytes_per_round(theta)
+
+# int4 rate rides the int8 container: the wire moves the same s8 buffers
+# (HLO bytes unchanged) while the effective-bit accounting halves the
+# entry bits — the scheduled-rate convention of repro.comm
+mem4 = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh, "data",
+    specs, quantized=CompressionConfig(kind="int4", error_feedback=False))
+assert cp_bytes(mem4) == cp_bytes(mem)
+assert mem4.bytes_per_round(theta) < mem.bytes_per_round(theta)
+
+delta = DynamicCompressedGossipMixer(StaticSchedule(w), mesh, "data", specs,
+                                     cc, ef_rebase_every=0)
+d_bytes = cp_bytes(delta)
+assert d_bytes == delta.bytes_per_round(theta), (
+    d_bytes, delta.bytes_per_round(theta))
+
+rebase = DynamicCompressedGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh,
+                                      "data", specs, cc, ef_rebase_every=1)
+r_bytes = cp_bytes(rebase)
+assert r_bytes == rebase.bytes_per_round(theta), (
+    r_bytes, rebase.bytes_per_round(theta))
+
+# B >= 2: ONE program holds both round modes -> HLO carries both wires
+both = DynamicCompressedGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh,
+                                    "data", specs, cc, ef_rebase_every=4)
+assert cp_bytes(both) == d_bytes + r_bytes
+# amortized static estimate sits between the two modes
+assert d_bytes < both.bytes_per_round(theta) < r_bytes
+
+# the traced accounting is bounded by the full-activity estimate and hits
+# it exactly when every link is live (p = 0 schedule round)
+st = delta.init_state(theta)
+_, st = jax.jit(delta)(theta, st)
+assert float(st.wire_bits) == 8.0 * d_bytes
+print("OK")
+"""
+    _run_subprocess(script)
+
+
+def test_masked_innovation_compress_matches_ref():
+    """ISSUE satellite: the kernel compressor's sender-masked innovation
+    encode (``compress_masked``) and masked receive combine
+    (``accumulate_masked``) are served by the existing masked Pallas
+    kernels, bit-exact against the jnp oracles given the same per-node
+    keys — and an all-ones mask is bit-identical to the unmasked encode."""
+    from repro.comm.compressors import (
+        KernelInt8Quantizer, _uniform_rows, per_node_keys)
+    from repro.kernels.quant_gossip.ref import (
+        masked_dequant_accumulate_ref, masked_quantize_blockwise_ref)
+
+    k, d = 6, 256
+    rng = np.random.default_rng(3)
+    delta = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)  # θ − θ̂
+    keys = per_node_keys(jax.random.PRNGKey(11), jnp.arange(k))
+    mask = jnp.asarray(np.arange(k) % 2, jnp.float32)
+    comp = KernelInt8Quantizer(interpret=True)
+
+    q, s = comp.compress_masked(delta, keys, mask)
+    u = _uniform_rows(keys, d)
+    qr, sr = masked_quantize_blockwise_ref(delta, u, mask)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # masked senders emit nothing, so their θ̂ increment dequantizes to 0
+    m = np.asarray(mask)
+    dq = np.asarray(comp.decompress((q, s), d))
+    assert np.all(dq[m == 0] == 0)
+    # all-ones mask == the unmasked encode, bitwise
+    q1, s1 = comp.compress_masked(delta, keys, jnp.ones(k))
+    q0, s0 = comp.compress(delta, keys)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q0))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+
+    acc = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    wgt = jnp.linspace(0.1, 0.4, k)
+    out = comp.accumulate_masked(acc, (q, s), wgt[:, None], mask)
+    ref = masked_dequant_accumulate_ref(acc, q, s, wgt, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out)[m == 0],
+                                  np.asarray(acc)[m == 0])
+
+
+def test_ef_gossip_kernel_wire_matches_jnp_path():
+    """The EF wire served by the fused masked Pallas kernels (interpret
+    mode on CPU) tracks the jnp codec path: identical PRNG and one scale
+    block mean the trajectories agree to float-reassociation noise, with
+    any stochastic-rounding boundary flip (a one-q-step event) re-absorbed
+    by the error feedback."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import CompressionConfig
+from repro.dynamics import DynamicCompressedGossipMixer, DropoutSchedule
+from repro.graphs import metropolis_weights, ring_graph
+from repro.utils.compat import make_auto_mesh
+
+k = 8
+w = metropolis_weights(ring_graph(k))
+mesh = make_auto_mesh((k,), ("data",))
+specs = {"a": P("data", None)}
+rng = np.random.default_rng(1)
+theta = {"a": jnp.asarray(rng.normal(size=(k, 64)), jnp.float32)}
+sched = lambda: DropoutSchedule(w, 0.3, seed=9)
+jn = DynamicCompressedGossipMixer(
+    sched(), mesh, "data", specs,
+    CompressionConfig(kind="int8", seed=2), ef_rebase_every=3)
+kr = DynamicCompressedGossipMixer(
+    sched(), mesh, "data", specs,
+    CompressionConfig(kind="int8", seed=2, use_kernel=True, interpret=True),
+    ef_rebase_every=3)
+ta, sa = theta, jn.init_state(theta)
+tb, sb = theta, kr.init_state(theta)
+ja, jb = jax.jit(jn), jax.jit(kr)
+for r in range(5):
+    ta, sa = ja(ta, sa)
+    tb, sb = jb(tb, sb)
+    if r == 0:
+        np.testing.assert_allclose(np.asarray(sa.hat["a"]),
+                                   np.asarray(sb.hat["a"]),
+                                   rtol=1e-5, atol=1e-5)
+np.testing.assert_allclose(np.asarray(ta["a"]), np.asarray(tb["a"]),
+                           rtol=1e-2, atol=5e-2)
+assert float(sa.wire_bits) == float(sb.wire_bits)
+print("OK")
+"""
+    _run_subprocess(script)
+
+
+def test_ef_rebase_clock_composes_with_local_updates():
+    """The re-base cadence follows ``CommState.ef_rounds`` (executed EF
+    consensus rounds), not the step clock that ``LocalUpdateMixer``
+    overwrites: with H = 2 and B = 2, steps 0/2/4/6 are local (0 wire),
+    steps 1/5 are int8 delta rounds and steps 3/7 f32 re-bases."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import CompressionConfig
+from repro.dynamics import (DynamicCompressedGossipMixer, DropoutSchedule,
+                            LocalUpdateMixer)
+from repro.graphs import metropolis_weights, ring_graph
+from repro.utils.compat import make_auto_mesh
+
+k = 8
+w = metropolis_weights(ring_graph(k))
+mesh = make_auto_mesh((k,), ("data",))
+specs = {"a": P("data", None)}
+rng = np.random.default_rng(0)
+theta = {"a": jnp.asarray(rng.normal(size=(k, 64)), jnp.float32)}
+inner = DynamicCompressedGossipMixer(
+    DropoutSchedule(w, 0.0, seed=2), mesh, "data", specs,
+    CompressionConfig(kind="int8", seed=1), ef_rebase_every=2)
+mixer = LocalUpdateMixer(inner, 2)
+state = mixer.init_state(theta)
+step = jax.jit(mixer)
+wires, efs = [], []
+t = theta
+for r in range(8):
+    t, state = step(t, state, round=r)
+    wires.append(float(state.wire_bits))
+    efs.append(int(state.ef_rounds))
+assert efs == [0, 1, 1, 2, 2, 3, 3, 4], efs
+assert wires[0] == wires[2] == wires[4] == wires[6] == 0.0, wires
+d = 64
+per_delta = 16 * 8.0 * (d + 4)          # active links x int8 payload bits
+per_rebase = 16 * 32.0 * d              # active links x f32 bits
+assert wires[1] == wires[5] == per_delta, wires
+assert wires[3] == wires[7] == per_rebase, wires
+assert int(state.rounds) == 8  # the wrapper owns the step clock
+print("OK")
+"""
+    _run_subprocess(script)
+
+
 # -- one compiled program per configuration ------------------------------------
 
 def test_zero_recompiles_across_dynamic_rounds():
@@ -454,6 +850,8 @@ def test_dynamics_config_validation():
         DynamicsConfig(topology="dropout", drop_p=1.0)
     with pytest.raises(ValueError, match="link_drop_p"):
         FaultConfig(link_drop_p=-0.1)
+    with pytest.raises(ValueError, match="ef_rebase_every"):
+        DynamicsConfig(ef_rebase_every=-1)
     assert not DynamicsConfig().enabled
     assert DynamicsConfig(local_updates=2).enabled
     assert DynamicsConfig(faults=FaultConfig(straggler_p=0.1)).enabled
