@@ -1,0 +1,150 @@
+"""BENCH_trainer: perf baseline of the scan-compiled trainer, with and
+without the streaming telemetry sink.
+
+Runs the canonical fmnist MLP configuration twice with identical seeds and
+batch sequences — once bare, once with a :class:`repro.obs.MetricsSink`
+tapped into the compiled step — and records:
+
+* ``steps_per_s`` for both runs and ``sink_overhead_pct`` (the acceptance
+  budget is 3%: the tap is an async ``io_callback``, the device never waits
+  on the host),
+* ``bit_exact``: sha256 digests of the final params must match — the tap
+  only *reads* values the step already computes,
+* ``comm_bytes_per_round`` and per-phase wall-clock (``phase_s`` from the
+  ``perf`` telemetry records ``run_segments`` emits),
+* ``run_programs`` per run (the RecompileWatchdog count: adding the sink
+  must not add programs beyond its own single scan program).
+
+Timing protocol: each mode warms its scan program up on a throwaway state
+(compile excluded), then times ``steps`` through ``run_segments`` on a
+fresh state.  Writes ``BENCH_trainer.json`` (``--out``) for CI and
+regression tracking.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_trainer.py --smoke
+  PYTHONPATH=src python benchmarks/bench_trainer.py --out BENCH_trainer.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_task, params_digest
+from repro.core import TrainerSpec, run_segments
+from repro.models.paper_nets import make_classifier_loss
+from repro.obs import MetricsSink, RecompileWatchdog
+
+
+def _bench_mode(steps: int, seg: int, seed: int, with_sink: bool,
+                repeats: int = 3) -> dict:
+    fed, init_fn, apply_fn = make_task("fmnist", 10, seed)
+    spec = TrainerSpec(num_nodes=10, graph="erdos_renyi",
+                       graph_kwargs={"p": 0.3, "seed": seed},
+                       mu=6.0, robust=True, lr=0.1, grad_clip=2.0, seed=seed)
+    sink = MetricsSink() if with_sink else None
+    trainer = spec.build(make_classifier_loss(apply_fn), apply_fn, obs=sink)
+    watch = RecompileWatchdog(label=f"bench_trainer[sink={with_sink}]")
+    watch.track("run", trainer._run, allowed=1 if steps % seg == 0 else 2)
+
+    def make_sampler():
+        rng = np.random.default_rng(seed)
+
+        def sample_batch(step):
+            return fed.sample_batch(rng, 32)
+
+        return sample_batch
+
+    # warmup: compile the scan program on a throwaway state (the timed run
+    # reuses it — RecompileWatchdog proves that below)
+    warm = trainer.init(init_fn(jax.random.PRNGKey(seed)))
+    run_segments(trainer, warm, make_sampler(), seg, seg)
+
+    # best-of-N timing: identical state/batches every repeat (the compiled
+    # program is cached, so repeats only average out scheduler/cache noise)
+    wall = float("inf")
+    for _ in range(max(1, repeats)):
+        state = trainer.init(init_fn(jax.random.PRNGKey(seed)))
+        t0 = time.perf_counter()
+        state = run_segments(trainer, state, make_sampler(), steps, seg,
+                             obs=sink)
+        jax.block_until_ready(state.params)
+        if sink is not None:
+            sink.barrier()
+        wall = min(wall, time.perf_counter() - t0)
+
+    out = {
+        "steps": steps,
+        "wall_s": wall,
+        "steps_per_s": steps / wall,
+        "params_digest": params_digest(state.params),
+        "run_programs": watch.check()["run"],
+    }
+    if sink is not None:
+        train_recs = sink.records("train")
+        perf_recs = sink.records("perf")
+        assert len(train_recs) >= min(steps, 4096), (
+            f"tap dropped records: {len(train_recs)} < {steps}")
+        out["comm_bytes_per_round"] = max(
+            r["comm_bytes"] for r in train_recs)
+        phase_s: dict[str, float] = {}
+        for r in perf_recs:
+            for k, v in r.get("phase_s", {}).items():
+                phase_s[k] = phase_s.get(k, 0.0) + v
+        out["phase_s"] = {k: round(v, 4) for k, v in phase_s.items()}
+        out["train_records"] = len(train_recs)
+    return out
+
+
+def run(steps: int = 200, seg: int = 50, seed: int = 0) -> dict:
+    bare = _bench_mode(steps, seg, seed, with_sink=False)
+    tapped = _bench_mode(steps, seg, seed, with_sink=True)
+    overhead = 100.0 * (1.0 - tapped["steps_per_s"] / bare["steps_per_s"])
+    record = {
+        "bench": "trainer",
+        "dataset": "fmnist",
+        "num_nodes": 10,
+        "steps": steps,
+        "seg": seg,
+        "seed": seed,
+        "sink_off": bare,
+        "sink_on": tapped,
+        "sink_overhead_pct": round(overhead, 3),
+        "bit_exact": bare["params_digest"] == tapped["params_digest"],
+    }
+    assert record["bit_exact"], (
+        "telemetry tap changed the numerics: final params differ between "
+        f"sink-off ({bare['params_digest'][:12]}) and sink-on "
+        f"({tapped['params_digest'][:12]}) runs")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seg", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (plumbing + bit-exactness, "
+                         "not stable timing)")
+    ap.add_argument("--out", default="BENCH_trainer.json")
+    args = ap.parse_args()
+    steps = 24 if args.smoke else args.steps
+    seg = 12 if args.smoke else args.seg
+    record = run(steps=steps, seg=seg, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"sink off: {record['sink_off']['steps_per_s']:.1f} steps/s  "
+          f"on: {record['sink_on']['steps_per_s']:.1f} steps/s  "
+          f"overhead: {record['sink_overhead_pct']:+.2f}%  "
+          f"bit_exact: {record['bit_exact']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

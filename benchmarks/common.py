@@ -8,6 +8,7 @@ rather than per-step Python dispatch."""
 
 from __future__ import annotations
 
+import hashlib
 import time
 
 import jax
@@ -15,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TrainerSpec
+from repro.obs import RecompileWatchdog
 from repro.data import (
     make_cifar_like,
     make_fmnist_like,
@@ -42,6 +44,14 @@ def stack_batches(fed, rng, batch: int, n: int):
     """Sample ``n`` per-node batches and stack them along a time axis."""
     xs, ys = zip(*[fed.sample_batch(rng, batch) for _ in range(n)])
     return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+
+def params_digest(params) -> str:
+    """sha256 over the raw bytes of every param leaf (bit-exactness checks)."""
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
 
 
 def _gossip_mixer(graph, kwargs, num_nodes, topology, drop_p, seed,
@@ -104,7 +114,8 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       straggler_p: float = 0.0,
                       outage_p: float = 0.0,
                       lowering: str = "dense",
-                      ef_rebase_every: int = 8) -> dict:
+                      ef_rebase_every: int = 8,
+                      obs=None) -> dict:
     """One (DR-)DSGD training run; returns metrics + eval history + timing.
 
     ``lr_compensate`` equalizes the *initial* effective step size across
@@ -119,6 +130,12 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     memoryless masked int8 wire for ``error_feedback=False`` configs, the
     error-feedback wire with ``hat_mix`` re-basing every
     ``ef_rebase_every`` rounds otherwise.
+
+    ``obs`` (a :class:`repro.obs.MetricsSink`) streams the per-step train
+    tap.  Every run is guarded by a :class:`repro.obs.RecompileWatchdog` on
+    the compiled scan driver — one program per configuration, +1 tolerated
+    for a ragged final segment — so each fig benchmark asserts the
+    zero-recompile invariant for free (``RecompileError`` on violation).
     """
     fed, init_fn, apply_fn = make_task(dataset, num_nodes, seed)
     kwargs = {"p": p, "seed": seed} if graph == "erdos_renyi" else {"seed": seed}
@@ -162,7 +179,7 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         seed=seed,
     )
     trainer = spec.build(make_classifier_loss(apply_fn), apply_fn,
-                         mixer=mixer)
+                         mixer=mixer, obs=obs)
     state = trainer.init(init_fn(jax.random.PRNGKey(seed)))
     if put_state is not None:
         state = put_state(state)
@@ -170,6 +187,13 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200, seed=seed)
     history = []
     seg = min(eval_every, steps)
+    # zero-recompile guard on the scan driver: one compiled program per
+    # configuration; a ragged final segment legitimately compiles one more
+    # scan length.  Raises RecompileError when a traced operand (topology,
+    # rate, mask, round mode) leaks into program structure.
+    watch = RecompileWatchdog(label=f"run_decentralized[{dataset}]")
+    watch.track("run", trainer._run,
+                allowed=1 if steps % seg == 0 else 2)
     # cumulative wire bytes: under an adaptive schedule comm_bytes moves
     # per round, so the bytes axis must integrate the traced metric rather
     # than multiply a per-round constant by the step count.  Accumulate as
@@ -230,6 +254,7 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         # warmup segment — seg steps of wall, compile included
         wall, timed_steps = warm_wall, seg
     cum_bytes = float(cum_bytes_dev)
+    programs = watch.check()["run"]
     final = history[-1]
     return {
         "dataset": dataset,
@@ -247,8 +272,10 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         "lowering": lowering,
         "ef_rebase_every": ef_rebase_every,
         # compiled scan programs the run used (1 = zero recompiles across
-        # rounds; +1 tolerated for a ragged final segment)
-        "run_programs": getattr(trainer._run, "_cache_size", lambda: -1)(),
+        # rounds; +1 tolerated for a ragged final segment) — already checked
+        # by the watchdog above, reported for the benchmark rows
+        "run_programs": programs,
+        "params_digest": params_digest(state.params),
         "comm_bytes_per_round": comm_bytes_round,
         "comm_bytes_total": cum_bytes,
         "us_per_step": wall / timed_steps * 1e6,

@@ -213,14 +213,15 @@ class _CompressedMixerBase(Mixer):
         ``send_mask`` the dynamic lowerings' sender mask (see
         :meth:`_compress`).
         """
-        if self.ef:
-            payload = self._compress(x - hat, keys, rate, send_mask)
-            qhat = self.compressor.decompress(payload, x.shape[1])
-            new_hat = hat + qhat
-            return payload, new_hat, new_hat
-        payload = self._compress(x, keys, rate, send_mask)
-        public = self.compressor.decompress(payload, x.shape[1])
-        return payload, public, ()
+        with jax.named_scope("obs:codec/encode"):
+            if self.ef:
+                payload = self._compress(x - hat, keys, rate, send_mask)
+                qhat = self.compressor.decompress(payload, x.shape[1])
+                new_hat = hat + qhat
+                return payload, new_hat, new_hat
+            payload = self._compress(x, keys, rate, send_mask)
+            public = self.compressor.decompress(payload, x.shape[1])
+            return payload, public, ()
 
 
 class CompressedDenseMixer(_CompressedMixerBase):
@@ -248,6 +249,10 @@ class CompressedDenseMixer(_CompressedMixerBase):
         return self.k
 
     def __call__(self, theta, state: CommState, *, round=None):
+        with jax.named_scope(f"obs:consensus/{type(self).__name__}"):
+            return self._dense_round(theta, state)
+
+    def _dense_round(self, theta, state: CommState):
         w = self._round_w(state)
         key, sub = jax.random.split(state.key)
         rate = self._rate(state)
@@ -319,7 +324,8 @@ class CompressedGossipMixer(_CompressedMixerBase):
         self.perms = decomp.ppermute_pairs()
 
     def __call__(self, theta, state: CommState, *, round=None):
-        return self._gossip_round(theta, state)
+        with jax.named_scope(f"obs:consensus/{type(self).__name__}"):
+            return self._gossip_round(theta, state)
 
     def _init_hat_mix(self, params):
         return _f32_zeros_like(params) if self.ef else ()

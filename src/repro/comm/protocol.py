@@ -174,7 +174,8 @@ class Mixer:
         ``CommState.rounds`` counter (which counts *consensus* rounds, a
         different clock under ``mix_every``/``repeat_mixer``).
         """
-        mixed = self._mix(theta)
+        with jax.named_scope(f"obs:consensus/{type(self).__name__}"):
+            mixed = self._mix(theta)
         return mixed, state._replace(
             rounds=state.rounds + 1,
             wire_bits=jnp.float32(8.0 * self.bytes_per_round(theta)),

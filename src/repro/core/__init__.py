@@ -46,6 +46,7 @@ from repro.core.spec import (
     TrainerSpec,
     add_compression_cli_args,
     add_dynamics_cli_args,
+    add_obs_cli_args,
     compression_from_args,
 )
 
@@ -60,5 +61,5 @@ __all__ = [
     "build_eval_step", "init_state", "replicate_params",
     "DecentralizedTrainer", "run_segments",
     "TrainerSpec", "add_compression_cli_args", "add_dynamics_cli_args",
-    "compression_from_args",
+    "add_obs_cli_args", "compression_from_args",
 ]

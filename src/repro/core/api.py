@@ -42,11 +42,12 @@ from repro.core.drdsgd import (
 )
 from repro.core.robust import RobustConfig
 from repro.graphs import build_graph, metropolis_weights, spectral_norm
+from repro.obs.profiler import PhaseTimer
 from repro.optim import Optimizer, sgd
 
 
 def run_segments(trainer: "DecentralizedTrainer", state, sample_batch,
-                 steps: int, seg: int, on_segment=None):
+                 steps: int, seg: int, on_segment=None, *, obs=None):
     """Drive ``trainer.run`` in host-sampled logging segments.
 
     For data pipelines that sample batches host-side per step
@@ -56,17 +57,43 @@ def run_segments(trainer: "DecentralizedTrainer", state, sample_batch,
     ``on_segment(last_step, state, seg_metrics)`` runs between compiled
     segments (the epoch-level host hook; same retention caveat as
     ``run`` — eval the state inside the hook, don't keep it).
+
+    ``obs`` (a :class:`repro.obs.MetricsSink`) adds the phase-timer rollup:
+    every chunk emits one ``perf`` record (steps/s, wire bytes/s, wall-clock
+    per ``sample``/``run``/``hook`` phase) into the telemetry stream, and
+    the ``run`` phase blocks on the segment's results so the timings are
+    wall-clock honest (one host sync per *segment* — the per-step taps stay
+    async).
     """
+    timer = PhaseTimer() if obs is not None else None
     done = 0
     while done < steps:
         n = min(seg, steps - done)
-        stacked = jax.tree.map(
-            lambda *xs: jnp.asarray(np.stack(xs)),
-            *[sample_batch(done + i) for i in range(n)])
-        state, ms = trainer.run(state, stacked)
+        if timer is None:
+            stacked = jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(xs)),
+                *[sample_batch(done + i) for i in range(n)])
+            state, ms = trainer.run(state, stacked)
+            done += n
+            if on_segment is not None:
+                on_segment(done - 1, state, ms)
+            continue
+        with timer.phase("sample"):
+            stacked = jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(xs)),
+                *[sample_batch(done + i) for i in range(n)])
+        with timer.phase("run"):
+            state, ms = trainer.run(state, stacked)
+            jax.block_until_ready(ms)
         done += n
         if on_segment is not None:
-            on_segment(done - 1, state, ms)
+            with timer.phase("hook"):
+                on_segment(done - 1, state, ms)
+        wire = (float(jnp.sum(ms["comm_bytes"]))
+                if "comm_bytes" in ms else None)
+        obs.log("perf", done - 1,
+                **timer.rollup(steps=n, wire_bytes=wire))
+        timer.reset()
     return state
 
 
@@ -95,6 +122,10 @@ class DecentralizedTrainer:
     mix_every: int = 1                    # consensus period (local SGD when >1)
     metrics_disagreement: bool = True     # Lemma-3 discrepancy metric; costs an
                                           # extra cross-node reduction per step
+    obs: Any = None                       # repro.obs.MetricsSink: stream the
+                                          # per-step record (metrics + per-node
+                                          # losses/DR weights) to the host via
+                                          # an in-graph tap; None = no telemetry
     loss_has_aux: bool = False
     jit: bool = True
 
@@ -150,7 +181,7 @@ class DecentralizedTrainer:
             compression=self.compression, mix_every=self.mix_every)
         self._train_step_fn = build_train_step(
             self.loss_fn, self.optimizer, self.mixer, step_cfg,
-            loss_has_aux=self.loss_has_aux,
+            loss_has_aux=self.loss_has_aux, obs=self.obs,
         )
         self._train_step = (jax.jit(self._train_step_fn) if self.jit
                             else self._train_step_fn)
@@ -252,7 +283,7 @@ class DecentralizedTrainer:
         return self._eval_step(state.params, jnp.asarray(x), jnp.asarray(y))
 
     def eval_local_distributions(self, state: DecentralizedState, x_nodes,
-                                 y_nodes) -> dict[str, float]:
+                                 y_nodes) -> dict:
         """Paper §6.2 protocol: device i's model on device i's distribution.
 
         x_nodes: (K, n, ...), y_nodes: (K, n). Worst distribution test
@@ -272,10 +303,11 @@ class DecentralizedTrainer:
             "acc_worst_dist": float(accs.min()),
             "acc_node_std": float(accs.std()),
             "acc_node_min": float(accs.min()),
+            "acc_nodes": [float(a) for a in accs],
         }
 
     def eval_worst_distribution(self, state: DecentralizedState, per_class_sets
-                                ) -> dict[str, float]:
+                                ) -> dict:
         """Paper's metrics: avg / worst-distribution accuracy + STDEV.
 
         ``per_class_sets`` is a list of (x, y) test subsets (one per class or
@@ -298,4 +330,5 @@ class DecentralizedTrainer:
             "acc_worst_dist": float(min(accs)),
             "acc_node_std": float(node_accs.std()),
             "acc_node_min": float(node_accs.min()),
+            "acc_nodes": [float(a) for a in node_accs],
         }

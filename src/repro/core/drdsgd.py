@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.comm import CompressionConfig
 from repro.comm.protocol import CommState, Mixer, trivial_comm_state
 from repro.core.robust import RobustConfig, mixture_weights, robust_objective, robust_scale
+from repro.obs.profiler import scope
 from repro.optim.optimizers import Optimizer
 from repro.utils.tree import tree_node_disagreement
 
@@ -95,12 +96,20 @@ def build_train_step(
     mixer: Mixer,
     cfg: TrainStepConfig,
     loss_has_aux: bool = False,
+    obs=None,
 ):
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``batch`` is a pytree whose leaves carry a leading node axis K, matching
     the params' node axis.  ``loss_fn(params_i, batch_i)`` must return a
     scalar (or (scalar, aux-dict) with ``loss_has_aux``).
+
+    ``obs`` is an optional :class:`repro.obs.MetricsSink`: when given, every
+    step stages an ordered ``io_callback`` tap that streams the metrics dict
+    plus the per-node vectors (``loss_nodes``, ``dr_weights``) to the host —
+    schema-versioned JSONL without per-step host syncs.  The tap only reads
+    values the step computes anyway, so the returned metrics, the scan
+    carry's donation, and the trajectory stay bit-exact vs ``obs=None``.
     """
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=loss_has_aux)
@@ -140,30 +149,35 @@ def build_train_step(
                 "build the state with init_state(params, optimizer, "
                 "mixer=mixer) (protocol v2: every mixer, compressed or "
                 "not, carries one)")
-        losses, grads, aux = jax.vmap(per_node)(state.params, batch)
+        with scope("obs:grad"):
+            losses, grads, aux = jax.vmap(per_node)(state.params, batch)
         # --- the paper's technique: exponential per-node gradient reweighting
-        scale = robust_scale(losses, cfg.robust)  # (K,)
-        scaled_grads = jax.tree.map(
-            lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype),
-            grads,
-        )
+        with scope("obs:dr_weighting"):
+            scale = robust_scale(losses, cfg.robust)  # (K,)
+            lam = mixture_weights(losses, cfg.robust)  # (K,) adversarial λ*
+            scaled_grads = jax.tree.map(
+                lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype),
+                grads,
+            )
         # --- local optimizer step (plain SGD in the paper)
-        updated, opt_state = optimizer.update(
-            scaled_grads, state.opt_state, state.params, state.step
-        )
+        with scope("obs:local_update"):
+            updated, opt_state = optimizer.update(
+                scaled_grads, state.opt_state, state.params, state.step
+            )
         # --- consensus: the only cross-node communication of the algorithm.
         # One protocol for every mixer; mix_every > 1 skips communication on
         # off-steps (local SGD / periodic averaging, the FedAvg-style PS
         # baseline of paper §1-2) and passes CommState through untouched.
         is_mix_step = state.step % cfg.mix_every == cfg.mix_every - 1
-        if cfg.mix_every == 1:
-            mixed, comm = mixer(updated, state.comm, round=state.step)
-        else:
-            mixed, comm = jax.lax.cond(
-                is_mix_step,
-                lambda theta, cs: mixer(theta, cs, round=state.step),
-                lambda theta, cs: (theta, cs),
-                updated, state.comm)
+        with scope("obs:consensus"):
+            if cfg.mix_every == 1:
+                mixed, comm = mixer(updated, state.comm, round=state.step)
+            else:
+                mixed, comm = jax.lax.cond(
+                    is_mix_step,
+                    lambda theta, cs: mixer(theta, cs, round=state.step),
+                    lambda theta, cs: (theta, cs),
+                    updated, state.comm)
         # estimated wire bytes this step (static estimate, gated on mixing;
         # traced wire_bits/8 when a schedule makes the rate dynamic)
         if traced_wire:
@@ -183,7 +197,7 @@ def build_train_step(
             "robust_objective": robust_objective(losses, cfg.robust),
             "scale_mean": jnp.mean(scale),
             "scale_max": jnp.max(scale),
-            "lambda_max": jnp.max(mixture_weights(losses, cfg.robust)),
+            "lambda_max": jnp.max(lam),
             # wire_bits is "bits injected by the last round" — gate on the
             # mix predicate so off-steps (mix_every > 1) report 0, not the
             # stale value the lax.cond pass-through branch carries
@@ -194,6 +208,16 @@ def build_train_step(
             metrics["disagreement"] = tree_node_disagreement(mixed)
         for k, v in aux.items():
             metrics[f"aux_{k}"] = jnp.mean(v)
+        if obs is not None:
+            # stream the step's record to the host sink.  The per-node
+            # vectors (the paper's trajectory axes) ride only on the tap,
+            # not in the returned metrics, so the scan-stacked metrics tree
+            # is identical with the sink on or off.
+            with scope("obs:tap"):
+                rec = dict(metrics)
+                rec["loss_nodes"] = losses.astype(jnp.float32)
+                rec["dr_weights"] = lam
+                obs.tap(state.step, rec)
         return (
             DecentralizedState(mixed, opt_state, state.step + 1, comm),
             metrics,

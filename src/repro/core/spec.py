@@ -69,6 +69,23 @@ def add_dynamics_cli_args(ap) -> None:
                     help="rounds per outage window")
 
 
+def add_obs_cli_args(ap) -> None:
+    """Install the observability flags (``repro.obs``) on an argparse parser.
+
+    ``--log-every`` is deliberately not here: entry points own their logging
+    cadence (it doubles as the ``run_segments`` chunk length).
+    """
+    ap.add_argument("--log-dir", default=None,
+                    help="write schema-versioned JSONL telemetry "
+                         "(repro.obs.MetricsSink: per-step train records, "
+                         "eval fairness metrics, per-chunk perf rollups) "
+                         "into this directory")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in jax.profiler.trace and dump a "
+                         "perfetto trace under --log-dir (phases carry "
+                         "obs:... scope names)")
+
+
 def add_compression_cli_args(ap) -> None:
     """Install the standard consensus wire-codec flags on an argparse parser."""
     ap.add_argument("--compress", default="none", choices=_COMPRESS_CHOICES,
@@ -205,7 +222,7 @@ class TrainerSpec:
     # -- the builder ---------------------------------------------------------
 
     def build(self, loss_fn, predict_fn=None, *, mixer: Mixer | None = None,
-              optimizer=None, loss_has_aux: bool = False
+              optimizer=None, loss_has_aux: bool = False, obs=None
               ) -> DecentralizedTrainer:
         return DecentralizedTrainer(
             loss_fn,
@@ -223,6 +240,7 @@ class TrainerSpec:
             dynamics=self.dynamics_config(),
             mix_every=self.mix_every,
             metrics_disagreement=self.metrics_disagreement,
+            obs=obs,
             loss_has_aux=loss_has_aux,
             jit=self.jit,
         )

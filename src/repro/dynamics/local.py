@@ -138,8 +138,9 @@ class LocalUpdateMixer(Mixer):
         def consensus(theta, st):
             mixed, st2 = self.inner(theta, st, round=round)
             if self.gt:
-                delta = _sub(_f32(theta), anchor)
-                wdelta = self.inner.mix_tree(delta, st)
+                with jax.named_scope("obs:consensus/tracker_exchange"):
+                    delta = _sub(_f32(theta), anchor)
+                    wdelta = self.inner.mix_tree(delta, st)
                 corr2 = _add(corr, jax.tree.map(
                     lambda wd, d: (wd - d) / self.period, wdelta, delta))
                 st2 = st2._replace(track=(corr2, _f32(mixed)),

@@ -161,8 +161,9 @@ class DynamicDenseMixer(Mixer, _DynamicTopology):
         return self._apply(self._round_topology_w(state.rounds), tree)
 
     def __call__(self, theta, state: CommState, *, round=None):
-        w = self._round_topology_w(state.rounds)
-        mixed = self._apply(w, theta)
+        with jax.named_scope("obs:consensus/DynamicDenseMixer"):
+            w = self._round_topology_w(state.rounds)
+            mixed = self._apply(w, theta)
         per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
         return mixed, state._replace(
             rounds=state.rounds + 1,
@@ -339,19 +340,20 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
         )(theta, self_w, list(match_ws), list(masks), key)
 
     def __call__(self, theta, state: CommState, *, round=None):
-        w = self._round_topology_w(state.rounds)
-        self_w, match_ws, masks = self._round_vectors(w)
-        key = state.key
-        if self.quantized is None:
-            mixed = self._plain_gossip(theta, self_w, match_ws)
-            per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
-        else:
-            key, sub = jax.random.split(state.key)
-            mixed = self._quantized_gossip(theta, self_w, match_ws, masks,
-                                           sub)
-            per_node_bits = float(sum(
-                self._quant_leaf_bits(x.size // self.k)
-                for x in jax.tree.leaves(theta)))
+        with jax.named_scope("obs:consensus/DynamicGossipMixer"):
+            w = self._round_topology_w(state.rounds)
+            self_w, match_ws, masks = self._round_vectors(w)
+            key = state.key
+            if self.quantized is None:
+                mixed = self._plain_gossip(theta, self_w, match_ws)
+                per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
+            else:
+                key, sub = jax.random.split(state.key)
+                mixed = self._quantized_gossip(theta, self_w, match_ws,
+                                               masks, sub)
+                per_node_bits = float(sum(
+                    self._quant_leaf_bits(x.size // self.k)
+                    for x in jax.tree.leaves(theta)))
         sends = sum(jnp.sum(m) for m in masks)
         return mixed, state._replace(
             key=key,
@@ -506,27 +508,28 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
     # -- the round -------------------------------------------------------------
 
     def __call__(self, theta, state: CommState, *, round=None):
-        w = self._round_topology_w(state.rounds)
-        self_w, match_ws, masks = gather_round_vectors(w, self._perm_idx)
-        senders = _active_sends(masks)
+        with jax.named_scope("obs:consensus/DynamicCompressedGossipMixer"):
+            w = self._round_topology_w(state.rounds)
+            self_w, match_ws, masks = gather_round_vectors(w, self._perm_idx)
+            senders = _active_sends(masks)
 
-        def delta(t, st):
-            return self._gossip_round(t, st, self_w=self_w,
-                                      match_ws=match_ws, masks=masks,
-                                      senders=senders)
+            def delta(t, st):
+                return self._gossip_round(t, st, self_w=self_w,
+                                          match_ws=match_ws, masks=masks,
+                                          senders=senders)
 
-        def rebase(t, st):
-            return self._rebase_round(t, st, self_w, match_ws, masks,
-                                      senders)
+            def rebase(t, st):
+                return self._rebase_round(t, st, self_w, match_ws, masks,
+                                          senders)
 
-        b = self.ef_rebase_every
-        if b == 0:
-            t2, s2 = delta(theta, state)
-        elif b == 1:
-            t2, s2 = rebase(theta, state)
-        else:
-            t2, s2 = jax.lax.cond(state.ef_rounds % b == b - 1,
-                                  rebase, delta, theta, state)
+            b = self.ef_rebase_every
+            if b == 0:
+                t2, s2 = delta(theta, state)
+            elif b == 1:
+                t2, s2 = rebase(theta, state)
+            else:
+                t2, s2 = jax.lax.cond(state.ef_rounds % b == b - 1,
+                                      rebase, delta, theta, state)
         return t2, s2._replace(ef_rounds=state.ef_rounds + 1)
 
     def _rebase_round(self, theta, state: CommState, self_w, match_ws,

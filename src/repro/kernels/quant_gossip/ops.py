@@ -117,16 +117,17 @@ def masked_quant_gossip_round(x, acc, weight, mask, axis, perm, key, *,
     and ``mask`` are traced (K_local,) operands, so every round of a dynamic
     topology reuses one compiled program.
     """
-    u = jax.random.uniform(key, x.shape, jnp.float32)
-    q, scales = masked_quantize_blockwise(x, u, mask, qmax=qmax,
-                                          block_d=block_d,
-                                          interpret=interpret,
-                                          use_kernel=use_kernel)
-    q = jax.lax.ppermute(q, axis, perm)
-    scales = jax.lax.ppermute(scales, axis, perm)
-    return masked_dequant_accumulate(acc, q, scales, weight, mask,
-                                     interpret=interpret,
-                                     use_kernel=use_kernel)
+    with jax.named_scope("obs:kernel/masked_quant_gossip_round"):
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        q, scales = masked_quantize_blockwise(x, u, mask, qmax=qmax,
+                                              block_d=block_d,
+                                              interpret=interpret,
+                                              use_kernel=use_kernel)
+        q = jax.lax.ppermute(q, axis, perm)
+        scales = jax.lax.ppermute(scales, axis, perm)
+        return masked_dequant_accumulate(acc, q, scales, weight, mask,
+                                         interpret=interpret,
+                                         use_kernel=use_kernel)
 
 
 def quant_gossip_round(x, acc, weight, axis, perm, key, *, qmax: int = 127,
@@ -144,10 +145,12 @@ def quant_gossip_round(x, acc, weight, axis, perm, key, *, qmax: int = 127,
 
     Returns acc + weight · dequant(ppermute(quantize(x))).
     """
-    u = jax.random.uniform(key, x.shape, jnp.float32)
-    q, scales = quantize_blockwise(x, u, qmax=qmax, block_d=block_d,
-                                   interpret=interpret, use_kernel=use_kernel)
-    q = jax.lax.ppermute(q, axis, perm)
-    scales = jax.lax.ppermute(scales, axis, perm)
-    return dequant_accumulate(acc, q, scales, weight, interpret=interpret,
-                              use_kernel=use_kernel)
+    with jax.named_scope("obs:kernel/quant_gossip_round"):
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        q, scales = quantize_blockwise(x, u, qmax=qmax, block_d=block_d,
+                                       interpret=interpret,
+                                       use_kernel=use_kernel)
+        q = jax.lax.ppermute(q, axis, perm)
+        scales = jax.lax.ppermute(scales, axis, perm)
+        return dequant_accumulate(acc, q, scales, weight, interpret=interpret,
+                                  use_kernel=use_kernel)

@@ -12,6 +12,16 @@ flags drive the benchmarks and examples) and the hot loop runs through
 segment with the carried state donated, instead of a per-step Python
 dispatch loop.
 
+Telemetry (``repro.obs``): every run streams through a
+:class:`~repro.obs.MetricsSink` — an in-graph ``io_callback`` tap delivers
+one ``train`` record per optimizer step (scalar metrics + per-node losses
+and DR weights), the eval hook writes the paper's fairness metrics as
+``eval`` records, and ``run_segments`` rolls up wall-clock phase timings as
+``perf`` records.  The console lines below are *formatters over those same
+records*; ``--log-dir`` additionally persists them as schema-versioned
+JSONL (``python -m repro.obs.schema`` validates), and ``--profile`` wraps
+the run in ``jax.profiler.trace`` (phases carry ``obs:...`` scopes).
+
 Dynamic graphs (``repro.dynamics``): ``--topology dropout --drop-p 0.3``
 trains over per-round Bernoulli link failures (renormalized on device, one
 compiled program for the whole run); ``--local-updates H`` runs H local
@@ -29,7 +39,7 @@ Examples:
       --steps 20 --nodes 4 --batch-per-node 2 --seq-len 64
   PYTHONPATH=src python -m repro.launch.train --paper fmnist --steps 150
   PYTHONPATH=src python -m repro.launch.train --paper fmnist --steps 150 \
-      --compress int8
+      --log-dir runs/fmnist --profile
   PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
       --steps 20 --nodes 4 --compress topk --compress-ratio 0.05
 """
@@ -44,7 +54,7 @@ import numpy as np
 
 from repro.checkpoint import save_train_state
 from repro.configs import get_arch, fmnist_default, cifar_default
-from repro.core import TrainerSpec, run_segments
+from repro.core import TrainerSpec, add_obs_cli_args, run_segments
 from repro.data import (
     make_cifar_like,
     make_fmnist_like,
@@ -53,9 +63,16 @@ from repro.data import (
 )
 from repro.models import TransformerLM, mlp_init, mlp_apply, cnn_init, cnn_apply
 from repro.models.paper_nets import make_classifier_loss
+from repro.obs import (
+    MetricsSink,
+    format_eval,
+    format_meta,
+    format_train,
+    profile,
+)
 
 
-def train_lm(args):
+def train_lm(args, sink: MetricsSink):
     args.steps = args.steps or 50
     args.batch_per_node = args.batch_per_node or 2
     cfg = get_arch(args.arch, smoke=args.smoke)
@@ -65,11 +82,12 @@ def train_lm(args):
     k = spec.num_nodes
     seq = args.seq_len
 
-    trainer = spec.build(model.loss)
-    print(f"arch={cfg.name} params={model.num_params():,} nodes={k} "
-          f"rho={trainer.rho:.3f} mu={args.mu} robust={spec.robust} "
-          f"compress={args.compress} topology={spec.topology} "
-          f"H={spec.local_updates}")
+    trainer = spec.build(model.loss, obs=sink)
+    print(format_meta(sink.log(
+        "meta", 0, arch=cfg.name, params=model.num_params(), nodes=k,
+        rho=round(trainer.rho, 4), mu=args.mu, robust=spec.robust,
+        compress=args.compress, topology=spec.topology,
+        local_updates=spec.local_updates, steps=args.steps)))
     state = trainer.init(model.init(jax.random.PRNGKey(args.seed)))
     streams = make_node_token_streams(k, cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -87,23 +105,23 @@ def train_lm(args):
 
     history = []
     t0 = time.time()
+    compressed = trainer.compression is not None
 
     def on_segment(step, seg_state, ms):
-        m = {kk: float(v[-1]) for kk, v in ms.items()}
-        m["step"] = step
-        m["wall_s"] = time.time() - t0
-        history.append(m)
-        extra = ""
-        if trainer.compression is not None:
-            extra = (f" ef_res={m['ef_residual_norm']:.2e}"
-                     f" wire_bits={m['wire_bits']:.3e}")
-        print(f"step {step:5d} loss_mean={m['loss_mean']:.4f} "
-              f"loss_worst={m['loss_worst']:.4f} "
-              f"disagree={m.get('disagreement', 0):.2e} "
-              f"comm_bytes={m.get('comm_bytes', 0):.3e}" + extra)
+        # the console line and the history entry are the SAME record the
+        # in-graph tap delivered for this step — no parallel metrics path
+        rec = sink.last("train")
+        rec = dict(rec) if rec is not None else {"step": step}
+        rec["wall_s"] = time.time() - t0
+        history.append(rec)
+        print(format_train(rec, compressed=compressed))
 
-    state = run_segments(trainer, state, sample_batch, args.steps,
-                         args.log_every, on_segment)
+    with profile(args.log_dir, enabled=args.profile) as prof:
+        state = run_segments(trainer, state, sample_batch, args.steps,
+                             args.log_every, on_segment, obs=sink)
+        sink.barrier()
+    if prof.trace_path:
+        print(f"profiler trace: {prof.trace_path}")
     if args.ckpt_dir:
         # full DecentralizedState incl. CommState (EF residuals, schedule
         # norms, dynamics tracking) — restore_train_state resumes bit-exactly
@@ -112,7 +130,7 @@ def train_lm(args):
     return history
 
 
-def train_paper(args):
+def train_paper(args, sink: MetricsSink):
     exp = fmnist_default() if args.paper == "fmnist" else cifar_default()
     steps = args.steps or exp.steps
     if args.paper == "fmnist":
@@ -129,29 +147,40 @@ def train_paper(args):
     k = spec.num_nodes
     fed = pathological_noniid_partition(ds, k, seed=args.seed)
     x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200, seed=args.seed)
-    trainer = spec.build(make_classifier_loss(apply_fn), apply_fn)
+    trainer = spec.build(make_classifier_loss(apply_fn), apply_fn, obs=sink)
     state = trainer.init(params)
     rng = np.random.default_rng(args.seed)
     bsz = args.batch_per_node or exp.batch_size
-    print(f"paper={args.paper} nodes={k} steps={steps} B={bsz} "
-          f"lr={spec.lr} mu={args.mu} rho={trainer.rho:.3f} "
-          f"compress={args.compress} topology={spec.topology} "
-          f"H={spec.local_updates}")
+    print(format_meta(sink.log(
+        "meta", 0, paper=args.paper, nodes=k, steps=steps, batch=bsz,
+        lr=spec.lr, mu=args.mu, rho=round(trainer.rho, 4),
+        compress=args.compress, topology=spec.topology,
+        local_updates=spec.local_updates)))
 
     def sample_batch(step):
         xb, yb = fed.sample_batch(rng, bsz)
         return (xb, yb)
 
     def on_segment(step, seg_state, ms):
+        # paper fairness metrics (worst-distribution accuracy, per-device
+        # STDEV) into the telemetry stream, with the DR-weight snapshot of
+        # the last train step riding along
         stats = trainer.eval_local_distributions(seg_state, x_nodes, y_nodes)
-        print(f"step {step:5d} loss={float(ms['loss_mean'][-1]):.4f} "
-              f"acc_avg={stats['acc_avg']:.3f} "
-              f"acc_worst={stats['acc_worst_dist']:.3f} "
-              f"std={stats['acc_node_std']:.3f} "
-              f"comm_bytes={float(ms['comm_bytes'][-1]):.3e}")
+        train_rec = sink.last("train")
+        rec = sink.log(
+            "eval", step,
+            loss_mean=float(ms["loss_mean"][-1]),
+            comm_bytes=float(ms["comm_bytes"][-1]),
+            dr_weights=(train_rec or {}).get("dr_weights"),
+            **stats)
+        print(format_eval(rec))
 
-    state = run_segments(trainer, state, sample_batch, steps,
-                         args.log_every, on_segment)
+    with profile(args.log_dir, enabled=args.profile) as prof:
+        state = run_segments(trainer, state, sample_batch, steps,
+                             args.log_every, on_segment, obs=sink)
+        sink.barrier()
+    if prof.trace_path:
+        print(f"profiler trace: {prof.trace_path}")
     return state
 
 
@@ -166,14 +195,18 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    add_obs_cli_args(ap)
     TrainerSpec.add_cli_args(ap)
     args = ap.parse_args()
-    if args.paper:
-        train_paper(args)
-    elif args.arch:
-        train_lm(args)
-    else:
-        raise SystemExit("provide --arch <id> or --paper fmnist|cifar")
+    with MetricsSink(args.log_dir) as sink:
+        if args.paper:
+            train_paper(args, sink)
+        elif args.arch:
+            train_lm(args, sink)
+        else:
+            raise SystemExit("provide --arch <id> or --paper fmnist|cifar")
+        if sink.path:
+            print(f"telemetry: {sink.path}")
 
 
 if __name__ == "__main__":

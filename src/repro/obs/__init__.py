@@ -1,0 +1,57 @@
+"""``repro.obs`` — observability for the training/serving stack.
+
+Three pieces, each usable alone:
+
+* **Streaming telemetry** (:mod:`repro.obs.sink`): device-side
+  ``io_callback`` taps inside the compiled train step stream
+  schema-versioned records (:mod:`repro.obs.schema`) into a host ring
+  buffer and JSONL, bit-exact and donation-preserving; console lines are
+  formatters over the same records, so printed fields cannot drift from
+  the persisted ones.
+* **Profiler scopes** (:mod:`repro.obs.profiler`): ``obs:...`` named
+  scopes on the gradient / DR-weighting / consensus / kernel phases, a
+  wall-clock :class:`PhaseTimer` rolled up per ``run_segments`` chunk, and
+  a ``--profile`` perfetto-trace dump.
+* **Recompile watchdog** (:mod:`repro.obs.watchdog`): jit-cache snapshots
+  (:class:`RecompileWatchdog`) and a global compile counter
+  (:func:`expect_compiles`) that turn the repo's zero-recompile invariant
+  into a reusable guard for every benchmark, the launch driver, and the
+  256-chip dryrun.
+"""
+
+from repro.obs.profiler import (
+    PhaseTimer,
+    find_perfetto_trace,
+    host_scope,
+    profile,
+    scope,
+)
+from repro.obs.schema import (
+    SCHEMA_VERSION,
+    validate_jsonl,
+    validate_record,
+)
+from repro.obs.sink import (
+    MetricsSink,
+    format_eval,
+    format_meta,
+    format_perf,
+    format_record,
+    format_train,
+)
+from repro.obs.watchdog import (
+    CompileCounter,
+    RecompileError,
+    RecompileWatchdog,
+    expect_compiles,
+    jit_cache_size,
+)
+
+__all__ = [
+    "SCHEMA_VERSION", "validate_jsonl", "validate_record",
+    "MetricsSink", "format_train", "format_eval", "format_perf",
+    "format_meta", "format_record",
+    "PhaseTimer", "scope", "host_scope", "profile", "find_perfetto_trace",
+    "RecompileWatchdog", "RecompileError", "CompileCounter",
+    "expect_compiles", "jit_cache_size",
+]

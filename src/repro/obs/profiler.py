@@ -1,0 +1,125 @@
+"""Profiler scopes and wall-clock phase timing for the training/serving stack.
+
+Three layers, cheapest first:
+
+* :func:`scope` — names a phase *inside* traced code (``jax.named_scope``):
+  the gradient, DR-weighting, consensus and kernel phases of the train step
+  carry ``obs:...`` scopes, so XLA traces and HLO dumps attribute ops to
+  algorithm phases.  Trace-time only; the compiled program is unchanged.
+* :func:`host_scope` — annotates a host-side phase on the profiler timeline
+  (``jax.profiler.TraceAnnotation``): batch sampling, eval hooks, segment
+  dispatch.
+* :class:`PhaseTimer` — plain wall-clock accounting per phase, rolled up per
+  ``run_segments`` chunk into ``perf`` telemetry records (steps/s, wire
+  bytes/s) by :func:`repro.core.api.run_segments`.
+
+The :func:`profile` context manager wraps a region in ``jax.profiler.trace``
+and returns the perfetto trace file XLA dumped (open it at
+https://ui.perfetto.dev or ``tensorboard --logdir``; see EXPERIMENTS.md
+§Observability).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import glob
+import os
+import time
+
+import jax
+
+
+def scope(name: str):
+    """Phase scope for *traced* code: names the ops in HLO/profiler traces.
+
+    Pure metadata — adding or removing a scope never changes numerics or
+    program structure, which is what lets the obs layer guarantee
+    bit-exactness with telemetry on.
+    """
+    return jax.named_scope(name)
+
+
+def host_scope(name: str):
+    """Phase scope for host-side code on the profiler timeline."""
+    return jax.profiler.TraceAnnotation(name)
+
+
+class PhaseTimer:
+    """Wall-clock seconds per named phase; one rollup per logging chunk.
+
+    Usage::
+
+        timer = PhaseTimer()
+        with timer.phase("sample"): batches = ...
+        with timer.phase("run"):    state, ms = trainer.run(state, batches)
+        rec = timer.rollup(steps=n, wire_bytes=float(ms["comm_bytes"].sum()))
+        timer.reset()
+
+    Each ``phase`` block is also a :func:`host_scope`, so a ``--profile``
+    trace shows the same phase names the rollup reports.
+    """
+
+    def __init__(self):
+        self.phases: dict[str, float] = {}
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        with jax.profiler.TraceAnnotation(f"obs:{name}"):
+            t0 = time.perf_counter()
+            try:
+                yield
+            finally:
+                self.phases[name] = (self.phases.get(name, 0.0)
+                                     + time.perf_counter() - t0)
+
+    def reset(self) -> None:
+        self.phases = {}
+
+    def rollup(self, *, steps: int = 0, wire_bytes: float | None = None,
+               run_phase: str = "run") -> dict:
+        """The chunk's ``perf`` record fields (see repro.obs.schema).
+
+        ``steps_per_s`` divides by the ``run_phase`` time when present (the
+        compiled-scan wall time), else by the total; ``wall_s`` is always the
+        total across phases.
+        """
+        wall = sum(self.phases.values())
+        run_s = self.phases.get(run_phase, wall)
+        rec = {
+            "wall_s": wall,
+            "steps": steps,
+            "steps_per_s": (steps / run_s) if steps and run_s > 0 else 0.0,
+            "phase_s": {k: round(v, 6) for k, v in self.phases.items()},
+        }
+        if wire_bytes is not None and run_s > 0:
+            rec["wire_bytes_per_s"] = wire_bytes / run_s
+        return rec
+
+
+def find_perfetto_trace(log_dir: str) -> str | None:
+    """The perfetto trace file a ``jax.profiler.trace(log_dir)`` run dumped."""
+    pats = [
+        os.path.join(log_dir, "plugins", "profile", "*", "*.trace.json.gz"),
+        os.path.join(log_dir, "plugins", "profile", "*", "*.trace.json"),
+    ]
+    hits = sorted(h for p in pats for h in glob.glob(p))
+    return hits[-1] if hits else None
+
+
+@contextlib.contextmanager
+def profile(log_dir: str | None, enabled: bool = True):
+    """Wrap a region in ``jax.profiler.trace`` and yield a result holder.
+
+    ``enabled=False`` (or ``log_dir=None``) is a no-op, so call sites can
+    thread a ``--profile`` flag straight through.  On exit the holder's
+    ``trace_path`` points at the perfetto trace (or None if the backend
+    produced none).
+    """
+    holder = type("ProfileResult", (), {"trace_path": None})()
+    if not enabled or log_dir is None:
+        yield holder
+        return
+    os.makedirs(log_dir, exist_ok=True)
+    with jax.profiler.trace(log_dir):
+        yield holder
+    holder.trace_path = find_perfetto_trace(log_dir)

@@ -1,0 +1,225 @@
+"""Streaming metrics sink: device-side taps → host ring buffer → typed JSONL.
+
+The sink is the host-side record of a training run.  Two ways in:
+
+* :meth:`MetricsSink.tap` — called from *traced* code (``build_train_step``
+  stages it when the trainer is built with ``obs=sink``).  It appends an
+  ordered ``io_callback`` to the compiled program, so every scanned step
+  delivers its metrics to the host exactly once, in step order, without a
+  per-step host sync: the callback runs on the runtime's callback thread
+  while the device keeps scanning, and donation/bit-exactness of the scan
+  carry are untouched (the tap only *reads* values the step already
+  computes).
+
+* :meth:`MetricsSink.log` — plain host-side records (``eval``/``perf``/
+  ``meta``) written into the same stream, so the paper's fairness metrics
+  and the phase-timer rollups interleave with the per-step trajectory.
+
+Records land in a bounded ring buffer (:attr:`records`) and, when
+``log_dir`` is given, in ``<log_dir>/<name>.jsonl`` — one schema-versioned
+JSON object per line (:mod:`repro.obs.schema`).  Console output is a
+*formatter over the same record* (:func:`format_record`), so the printed
+line cannot drift from the JSONL fields.
+
+Reading taps back on the host (``last``/``records``) drains pending device
+callbacks first via ``jax.effects_barrier()`` — one barrier per read, never
+one per step.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.schema import SCHEMA_VERSION, validate_record
+
+
+def _to_py(v) -> Any:
+    """One telemetry value → JSON-encodable python (floats / int / list)."""
+    if isinstance(v, (str, bool, int, float)) or v is None:
+        return v
+    if isinstance(v, dict):
+        return {k: _to_py(x) for k, x in v.items()}
+    arr = np.asarray(v)
+    if arr.ndim == 0:
+        return int(arr) if np.issubdtype(arr.dtype, np.integer) else float(arr)
+    return [float(x) for x in arr.reshape(-1)]
+
+
+class MetricsSink:
+    """Host-side telemetry stream of one run (ring buffer + optional JSONL).
+
+    Args:
+      log_dir: directory for the JSONL file (created if missing); None keeps
+        records only in the in-memory ring buffer.
+      name: stem of the JSONL file (``<name>.jsonl``).
+      ring: ring-buffer capacity (oldest records drop first; the JSONL file
+        always keeps everything).
+      ordered: thread the taps through jax's ordered-effect token so records
+        arrive in step order.  False trades ordering for a little less
+        serialization between callbacks; completeness (every step exactly
+        once after :meth:`barrier`) holds either way.
+    """
+
+    def __init__(self, log_dir: str | None = None, *, name: str = "telemetry",
+                 ring: int = 4096, ordered: bool = True):
+        self._ring: collections.deque = collections.deque(maxlen=ring)
+        self._ordered = ordered
+        self._lock = threading.Lock()
+        self._t0 = time.time()
+        self.path = None
+        self._file = None
+        if log_dir is not None:
+            os.makedirs(log_dir, exist_ok=True)
+            self.path = os.path.join(log_dir, f"{name}.jsonl")
+            self._file = open(self.path, "a", buffering=1)
+
+    # -- the traced tap -------------------------------------------------------
+
+    def tap(self, step, fields: dict, kind: str = "train") -> None:
+        """Stage a telemetry record from inside a jitted/scanned function.
+
+        ``step`` is the (traced) optimizer-step scalar; ``fields`` a flat
+        dict of traced scalars / small vectors.  The host conversion happens
+        on the callback thread — the device never waits.
+        """
+        from jax.experimental import io_callback
+
+        names = tuple(sorted(fields))
+        values = [jnp.asarray(fields[k]) for k in names]
+
+        def append(step_v, *vals):
+            self._push(self._make_record(
+                kind, int(np.asarray(step_v)),
+                {k: _to_py(v) for k, v in zip(names, vals)}))
+
+        io_callback(append, None, jnp.asarray(step), *values,
+                    ordered=self._ordered)
+
+    # -- host-side records ----------------------------------------------------
+
+    def log(self, kind: str, step: int, **fields) -> dict:
+        """Append a host-side record (eval / perf / meta) to the stream."""
+        rec = self._make_record(
+            kind, int(step), {k: _to_py(v) for k, v in fields.items()
+                              if v is not None})
+        self._push(rec)
+        return rec
+
+    def _make_record(self, kind: str, step: int, fields: dict) -> dict:
+        rec = {"v": SCHEMA_VERSION, "kind": kind, "step": step}
+        rec.update(fields)
+        return rec
+
+    def _push(self, rec: dict) -> None:
+        with self._lock:
+            self._ring.append(rec)
+            if self._file is not None:
+                self._file.write(json.dumps(rec) + "\n")
+
+    # -- reading back ---------------------------------------------------------
+
+    def barrier(self) -> None:
+        """Drain pending device-side taps (one host sync, not per-step)."""
+        jax.effects_barrier()
+
+    def records(self, kind: str | None = None) -> list[dict]:
+        self.barrier()
+        with self._lock:
+            recs = list(self._ring)
+        if kind is None:
+            return recs
+        return [r for r in recs if r["kind"] == kind]
+
+    def last(self, kind: str | None = None) -> dict | None:
+        self.barrier()
+        with self._lock:
+            for rec in reversed(self._ring):
+                if kind is None or rec["kind"] == kind:
+                    return rec
+        return None
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def flush(self) -> None:
+        self.barrier()
+        with self._lock:
+            if self._file is not None:
+                self._file.flush()
+
+    def close(self) -> None:
+        self.flush()
+        with self._lock:
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+
+    def __enter__(self) -> "MetricsSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def validate(self) -> list[str]:
+        """Schema-check every record currently in the ring buffer."""
+        errors = []
+        for i, rec in enumerate(self.records()):
+            for msg in validate_record(rec):
+                errors.append(f"record {i}: {msg}")
+        return errors
+
+
+# -- console formatters (the print line IS the record) -------------------------
+
+def format_train(rec: dict, compressed: bool = False) -> str:
+    line = (f"step {rec['step']:5d} loss_mean={rec['loss_mean']:.4f} "
+            f"loss_worst={rec['loss_worst']:.4f} "
+            f"disagree={rec.get('disagreement', 0.0):.2e} "
+            f"comm_bytes={rec.get('comm_bytes', 0.0):.3e}")
+    if compressed:
+        line += (f" ef_res={rec.get('ef_residual_norm', 0.0):.2e}"
+                 f" wire_bits={rec.get('wire_bits', 0.0):.3e}")
+    return line
+
+
+def format_eval(rec: dict) -> str:
+    line = f"step {rec['step']:5d}"
+    if "loss_mean" in rec:
+        line += f" loss={rec['loss_mean']:.4f}"
+    line += (f" acc_avg={rec['acc_avg']:.3f} "
+             f"acc_worst={rec['acc_worst_dist']:.3f} "
+             f"std={rec['acc_node_std']:.3f}")
+    if "comm_bytes" in rec:
+        line += f" comm_bytes={rec['comm_bytes']:.3e}"
+    return line
+
+
+def format_perf(rec: dict) -> str:
+    phases = rec.get("phase_s", {})
+    ph = " ".join(f"{k}={v:.2f}s" for k, v in phases.items()) if phases else ""
+    line = f"perf step {rec['step']:5d} steps/s={rec['steps_per_s']:.1f}"
+    if "wire_bytes_per_s" in rec:
+        line += f" wire_bytes/s={rec['wire_bytes_per_s']:.3e}"
+    return line + (f" [{ph}]" if ph else "")
+
+
+def format_meta(rec: dict) -> str:
+    skip = {"v", "kind", "step"}
+    return " ".join(f"{k}={rec[k]}" for k in rec if k not in skip)
+
+
+def format_record(rec: dict, **kw) -> str:
+    """Render one telemetry record as the console line for its kind."""
+    fmt = {"train": format_train, "eval": format_eval, "perf": format_perf,
+           "meta": format_meta}.get(rec.get("kind"))
+    if fmt is None:
+        return json.dumps(rec)
+    return fmt(rec, **kw) if rec.get("kind") == "train" else fmt(rec)

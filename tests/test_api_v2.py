@@ -191,7 +191,8 @@ def test_eval_worst_distribution_all_empty_raises():
         state, [(x, y), (np.zeros((0, 3), np.float32),
                          np.zeros((0,), np.int64))])
     assert set(stats) == {"acc_avg", "acc_worst_dist", "acc_node_std",
-                          "acc_node_min"}
+                          "acc_node_min", "acc_nodes"}
+    assert len(stats["acc_nodes"]) == 4  # one accuracy per node
 
 
 # -- (e) TrainerSpec builder ---------------------------------------------------

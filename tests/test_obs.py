@@ -1,0 +1,253 @@
+"""repro.obs: tap completeness/ordering under the donated scan, bit-exactness
+with the sink enabled, JSONL schema validation, the recompile watchdog, and
+the run_segments perf rollup."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DecentralizedTrainer, RobustConfig, run_segments
+from repro.obs import (
+    MetricsSink,
+    RecompileError,
+    RecompileWatchdog,
+    SCHEMA_VERSION,
+    expect_compiles,
+    format_eval,
+    format_perf,
+    format_train,
+    validate_jsonl,
+    validate_record,
+)
+from repro.obs.schema import main as schema_main
+
+
+def _quad_loss(params, batch):
+    (target,) = batch
+    return jnp.mean((params["w"] - target) ** 2)
+
+
+def _targets(k=8, d=3):
+    return jnp.linspace(-1.5, 1.5, k).reshape(k, 1) * jnp.ones((k, d))
+
+
+def _stack_time(batch, t):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (t,) + x.shape),
+                        batch)
+
+
+def _trainer(k=8, d=3, obs=None, **kw):
+    return DecentralizedTrainer(
+        _quad_loss, num_nodes=k, graph="ring", lr=0.05,
+        robust=RobustConfig(mu=3.0), obs=obs, **kw)
+
+
+# -- tap completeness & ordering under the donated scan ------------------------
+
+def test_tap_delivers_every_scanned_step_exactly_once_in_order():
+    """The core tentpole property: ordered io_callback taps inside
+    ``lax.scan`` with a donated carry deliver one record per step, in step
+    order, with no per-step host sync."""
+    k, d, steps = 8, 3, 23
+    sink = MetricsSink()
+    trainer = _trainer(k, d, obs=sink)
+    state = trainer.init({"w": jnp.zeros((d,))})
+    state, _ = trainer.run(state, _stack_time((_targets(k, d),), steps))
+    recs = sink.records("train")
+    assert [r["step"] for r in recs] == list(range(steps))
+    for r in recs:
+        assert r["v"] == SCHEMA_VERSION
+        assert validate_record(r) == []
+        assert len(r["loss_nodes"]) == k
+        assert len(r["dr_weights"]) == k
+        # the DR weights are a distribution over nodes
+        assert abs(sum(r["dr_weights"]) - 1.0) < 1e-4
+
+
+def test_tap_survives_segment_boundaries():
+    """Records stay complete and ordered across multiple donated run()
+    segments (the run_segments chunking)."""
+    k, d = 8, 3
+    sink = MetricsSink()
+    trainer = _trainer(k, d, obs=sink)
+    state = trainer.init({"w": jnp.zeros((d,))})
+    state = run_segments(trainer, state,
+                         lambda step: (np.asarray(_targets(k, d)),),
+                         steps=17, seg=5, obs=sink)
+    steps_seen = [r["step"] for r in sink.records("train")]
+    assert steps_seen == list(range(17))
+
+
+# -- bit-exactness with the sink enabled ---------------------------------------
+
+def test_sink_is_bit_exact():
+    """The tap only reads values the step already computes: final params are
+    bitwise identical with the sink on and off."""
+    k, d, steps = 8, 3, 12
+    batches = _stack_time((_targets(k, d),), steps)
+
+    def final_params(obs):
+        trainer = _trainer(k, d, obs=obs)
+        state = trainer.init({"w": jnp.zeros((d,))})
+        state, ms = trainer.run(state, batches)
+        return state.params, ms
+
+    p_off, ms_off = final_params(None)
+    p_on, ms_on = final_params(MetricsSink())
+    for a, b in zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the scan-returned metrics tree is identical too (per-node vectors ride
+    # only on the tap, never in the carry/stacked outputs)
+    assert set(ms_off) == set(ms_on)
+    for name in ms_off:
+        np.testing.assert_array_equal(np.asarray(ms_off[name]),
+                                      np.asarray(ms_on[name]))
+
+
+# -- JSONL stream + schema -----------------------------------------------------
+
+def test_jsonl_stream_validates(tmp_path):
+    k, d = 8, 3
+    sink = MetricsSink(str(tmp_path), name="t")
+    sink.log("meta", 0, nodes=k, task="quad")
+    trainer = _trainer(k, d, obs=sink)
+    state = trainer.init({"w": jnp.zeros((d,))})
+
+    def on_segment(step, seg_state, ms):
+        sink.log("eval", step, acc_avg=0.5, acc_worst_dist=0.25,
+                 acc_node_std=0.1,
+                 dr_weights=sink.last("train")["dr_weights"])
+
+    run_segments(trainer, state,
+                 lambda step: (np.asarray(_targets(k, d)),),
+                 steps=10, seg=5, on_segment=on_segment, obs=sink)
+    sink.close()
+    summary = validate_jsonl(sink.path)
+    assert summary["errors"] == []
+    assert summary["kinds"] == {"meta": 1, "train": 10, "eval": 2, "perf": 2}
+    assert summary["steps"] == (0, 9)
+    assert summary["train_steps_contiguous"]
+    # the CLI validator agrees (what CI runs)
+    assert schema_main([sink.path, "--require-kinds",
+                        "train,eval,perf,meta", "--require-contiguous"]) == 0
+
+
+def test_schema_rejects_bad_records(tmp_path):
+    assert validate_record({"v": 1, "kind": "train", "step": 0}) != []
+    assert validate_record({"kind": "train"}) != []
+    assert validate_record(
+        {"v": 1, "kind": "nope", "step": 0}) == ["unknown record kind 'nope'"]
+    p = tmp_path / "bad.jsonl"
+    p.write_text(json.dumps({"v": 1, "kind": "perf", "step": 3,
+                             "steps_per_s": "fast", "wall_s": 1.0}) + "\n"
+                 + "not json\n")
+    summary = validate_jsonl(str(p))
+    assert len(summary["errors"]) == 2
+    assert schema_main([str(p)]) == 1
+
+
+def test_ring_buffer_bounds_memory():
+    sink = MetricsSink(ring=4)
+    for i in range(10):
+        sink.log("meta", i)
+    recs = sink.records()
+    assert len(recs) == 4
+    assert [r["step"] for r in recs] == [6, 7, 8, 9]
+
+
+# -- console formatters consume the record dicts -------------------------------
+
+def test_formatters_render_the_record_fields():
+    train = {"v": 1, "kind": "train", "step": 7, "loss_mean": 1.25,
+             "loss_worst": 2.5, "disagreement": 1e-3, "comm_bytes": 1e6,
+             "ef_residual_norm": 2e-2, "wire_bits": 8e6}
+    line = format_train(train, compressed=True)
+    assert "step     7" in line and "loss_mean=1.2500" in line
+    assert "ef_res=2.00e-02" in line
+    assert "ef_res" not in format_train(train, compressed=False)
+    ev = {"v": 1, "kind": "eval", "step": 9, "acc_avg": 0.9,
+          "acc_worst_dist": 0.7, "acc_node_std": 0.05}
+    assert "acc_worst=0.700" in format_eval(ev)
+    pf = {"v": 1, "kind": "perf", "step": 4, "steps_per_s": 123.4,
+          "wall_s": 1.0, "phase_s": {"run": 0.9}}
+    assert "steps/s=123.4" in format_perf(pf)
+
+
+# -- the recompile watchdog ----------------------------------------------------
+
+def test_watchdog_catches_an_injected_retrace():
+    f = jax.jit(lambda x: x * 2)
+    watch = RecompileWatchdog(label="test").track("f", f, allowed=1)
+    f(jnp.ones(4))
+    f(jnp.ones(4) * 3)          # same shape: cache hit
+    assert watch.check() == {"f": 1}
+    f(jnp.ones(8))              # new shape: the injected retrace
+    with pytest.raises(RecompileError, match="f compiled 2 programs"):
+        watch.check()
+    assert watch.snapshot() == {"f": 2}
+    # the extra_allowed escape hatch (ragged final segment)
+    assert watch.check(extra_allowed=1) == {"f": 2}
+
+
+def test_watchdog_warn_mode_collects_violations():
+    f = jax.jit(lambda x: x + 1)
+    watch = RecompileWatchdog(on_violation="warn", label="w")
+    watch.track("f", f, allowed=0)
+    f(jnp.ones(2))
+    with pytest.warns(RuntimeWarning, match="recompile watchdog"):
+        watch.check()
+    assert len(watch.violations) == 1
+
+
+def test_watchdog_guards_the_trainer_scan_program():
+    """The generalized fig9 guard: one compiled scan program across
+    same-shape segments; a different scan length trips it."""
+    k, d = 8, 3
+    trainer = _trainer(k, d)
+    watch = RecompileWatchdog(label="trainer").track(
+        "run", trainer._run, allowed=1)
+    state = trainer.init({"w": jnp.zeros((d,))})
+    state, _ = trainer.run(state, _stack_time((_targets(k, d),), 5))
+    state, _ = trainer.run(state, _stack_time((_targets(k, d),), 5))
+    assert watch.check() == {"run": 1}
+    state, _ = trainer.run(state, _stack_time((_targets(k, d),), 3))
+    with pytest.raises(RecompileError):
+        watch.check()
+
+
+def test_watchdog_needs_a_jitted_callable():
+    with pytest.raises(ValueError, match="_cache_size"):
+        RecompileWatchdog().track("f", lambda x: x)
+
+
+def test_expect_compiles_flags_a_busy_region():
+    with pytest.raises(RecompileError, match="backend compiles"):
+        with expect_compiles(at_most=0, label="aot"):
+            jax.jit(lambda x: x * 3 + 1).lower(jnp.ones(16)).compile()
+    # and passes with a sane budget
+    with expect_compiles(at_most=8, label="aot") as guard:
+        jax.jit(lambda x: x * 5 + 2).lower(jnp.ones(16)).compile()
+    assert guard.count >= 1
+
+
+# -- run_segments perf rollup --------------------------------------------------
+
+def test_run_segments_emits_perf_records():
+    k, d = 8, 3
+    sink = MetricsSink()
+    trainer = _trainer(k, d, obs=sink)
+    state = trainer.init({"w": jnp.zeros((d,))})
+    run_segments(trainer, state,
+                 lambda step: (np.asarray(_targets(k, d)),),
+                 steps=9, seg=4, obs=sink)
+    perf = sink.records("perf")
+    assert [r["step"] for r in perf] == [3, 7, 8]
+    for rec, n in zip(perf, (4, 4, 1)):
+        assert validate_record(rec) == []
+        assert rec["steps"] == n
+        assert rec["steps_per_s"] > 0
+        assert set(rec["phase_s"]) >= {"sample", "run"}
+        assert "wire_bytes_per_s" in rec
