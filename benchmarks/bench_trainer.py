@@ -13,7 +13,12 @@ tapped into the compiled step — and records:
 * ``comm_bytes_per_round`` and per-phase wall-clock (``phase_s`` from the
   ``perf`` telemetry records ``run_segments`` emits),
 * ``run_programs`` per run (the RecompileWatchdog count: adding the sink
-  must not add programs beyond its own single scan program).
+  must not add programs beyond its own single scan program),
+* a third ``sanitize_on`` mode (``--sanitize`` trainer: in-step checkify
+  invariant checks from ``repro.analysis.sanitize``) with
+  ``sanitize_overhead_pct`` and ``sanitize_bit_exact`` — the sanitizer
+  only *checks* values the step already computes, so the trajectory must
+  stay sha256-identical to the bare run.
 
 Timing protocol: each mode warms its scan program up on a throwaway state
 (compile excluded), then times ``steps`` through ``run_segments`` on a
@@ -41,14 +46,16 @@ from repro.obs import MetricsSink, RecompileWatchdog
 
 
 def _bench_mode(steps: int, seg: int, seed: int, with_sink: bool,
-                repeats: int = 3) -> dict:
+                sanitize: bool = False, repeats: int = 3) -> dict:
     fed, init_fn, apply_fn = make_task("fmnist", 10, seed)
     spec = TrainerSpec(num_nodes=10, graph="erdos_renyi",
                        graph_kwargs={"p": 0.3, "seed": seed},
-                       mu=6.0, robust=True, lr=0.1, grad_clip=2.0, seed=seed)
+                       mu=6.0, robust=True, lr=0.1, grad_clip=2.0, seed=seed,
+                       sanitize=sanitize)
     sink = MetricsSink() if with_sink else None
     trainer = spec.build(make_classifier_loss(apply_fn), apply_fn, obs=sink)
-    watch = RecompileWatchdog(label=f"bench_trainer[sink={with_sink}]")
+    watch = RecompileWatchdog(
+        label=f"bench_trainer[sink={with_sink},sanitize={sanitize}]")
     watch.track("run", trainer._run, allowed=1 if steps % seg == 0 else 2)
 
     def make_sampler():
@@ -103,7 +110,10 @@ def _bench_mode(steps: int, seg: int, seed: int, with_sink: bool,
 def run(steps: int = 200, seg: int = 50, seed: int = 0) -> dict:
     bare = _bench_mode(steps, seg, seed, with_sink=False)
     tapped = _bench_mode(steps, seg, seed, with_sink=True)
+    checked = _bench_mode(steps, seg, seed, with_sink=False, sanitize=True)
     overhead = 100.0 * (1.0 - tapped["steps_per_s"] / bare["steps_per_s"])
+    sani_overhead = 100.0 * (1.0 -
+                             checked["steps_per_s"] / bare["steps_per_s"])
     record = {
         "bench": "trainer",
         "dataset": "fmnist",
@@ -113,13 +123,21 @@ def run(steps: int = 200, seg: int = 50, seed: int = 0) -> dict:
         "seed": seed,
         "sink_off": bare,
         "sink_on": tapped,
+        "sanitize_on": checked,
         "sink_overhead_pct": round(overhead, 3),
+        "sanitize_overhead_pct": round(sani_overhead, 3),
         "bit_exact": bare["params_digest"] == tapped["params_digest"],
+        "sanitize_bit_exact":
+            bare["params_digest"] == checked["params_digest"],
     }
     assert record["bit_exact"], (
         "telemetry tap changed the numerics: final params differ between "
         f"sink-off ({bare['params_digest'][:12]}) and sink-on "
         f"({tapped['params_digest'][:12]}) runs")
+    assert record["sanitize_bit_exact"], (
+        "checkify sanitizer changed the numerics: final params differ "
+        f"between sanitize-off ({bare['params_digest'][:12]}) and "
+        f"sanitize-on ({checked['params_digest'][:12]}) runs")
     return record
 
 
@@ -143,6 +161,9 @@ def main():
           f"on: {record['sink_on']['steps_per_s']:.1f} steps/s  "
           f"overhead: {record['sink_overhead_pct']:+.2f}%  "
           f"bit_exact: {record['bit_exact']}")
+    print(f"sanitize on: {record['sanitize_on']['steps_per_s']:.1f} steps/s  "
+          f"overhead: {record['sanitize_overhead_pct']:+.2f}%  "
+          f"bit_exact: {record['sanitize_bit_exact']}")
     print(f"wrote {args.out}")
 
 

@@ -55,7 +55,7 @@ def params_digest(params) -> str:
 
 
 def _gossip_mixer(graph, kwargs, num_nodes, topology, drop_p, seed,
-                  compression, ef_rebase_every):
+                  compression, ef_rebase_every, ef_rebase_threshold=0.0):
     """Build the ppermute gossip lowering of a dynamic topology (needs
     ``jax.device_count() >= num_nodes``: one node per device shard).
 
@@ -87,7 +87,8 @@ def _gossip_mixer(graph, kwargs, num_nodes, topology, drop_p, seed,
         param_specs = jax.tree.map(lambda _: P("node"), params_tree)
         return DynamicGossipMixer(schedule, mesh, "node", param_specs,
                                   quantized=compression,
-                                  ef_rebase_every=ef_rebase_every)
+                                  ef_rebase_every=ef_rebase_every,
+                                  ef_rebase_threshold=ef_rebase_threshold)
 
     def put_state(state):
         def _put(x):
@@ -115,6 +116,9 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       outage_p: float = 0.0,
                       lowering: str = "dense",
                       ef_rebase_every: int = 8,
+                      ef_rebase_threshold: float = 0.0,
+                      sanitize: bool = False,
+                      audit: bool = False,
                       obs=None) -> dict:
     """One (DR-)DSGD training run; returns metrics + eval history + timing.
 
@@ -136,6 +140,14 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     the compiled scan driver — one program per configuration, +1 tolerated
     for a ragged final segment — so each fig benchmark asserts the
     zero-recompile invariant for free (``RecompileError`` on violation).
+
+    ``sanitize`` checkify-wraps the step with the runtime invariant checks
+    of ``repro.analysis.sanitize`` (bit-exact trajectory when off);
+    ``audit`` runs the static ``repro.analysis.audit`` passes — host-sync,
+    baked-const, donation — on the trainer's hot loop before the timed run
+    and raises :class:`~repro.analysis.AuditError` on any error finding.
+    ``ef_rebase_threshold`` > 0 switches the EF gossip wire to the adaptive
+    drift-proxy re-base (replaces the fixed ``ef_rebase_every`` clock).
     """
     fed, init_fn, apply_fn = make_task(dataset, num_nodes, seed)
     kwargs = {"p": p, "seed": seed} if graph == "erdos_renyi" else {"seed": seed}
@@ -159,7 +171,7 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
             params0)
         make_mixer, put_state = _gossip_mixer(
             graph, kwargs, num_nodes, topology, drop_p, seed, compression,
-            ef_rebase_every)
+            ef_rebase_every, ef_rebase_threshold)
         mixer = make_mixer(node_params)
     spec = TrainerSpec(
         num_nodes=num_nodes,
@@ -177,6 +189,8 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         straggler_p=straggler_p,
         outage_p=outage_p,
         seed=seed,
+        ef_rebase_threshold=ef_rebase_threshold if mixer is None else 0.0,
+        sanitize=sanitize,
     )
     trainer = spec.build(make_classifier_loss(apply_fn), apply_fn,
                          mixer=mixer, obs=obs)
@@ -187,6 +201,27 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
     x_nodes, y_nodes = fed.per_node_test_sets(n_per_node=200, seed=seed)
     history = []
     seg = min(eval_every, steps)
+    if audit:
+        # static-analysis gate on the hot loop (repro.analysis.audit):
+        # host-sync hazards, baked scalar consts, donation failures.  Pure
+        # trace/AOT probes — nothing executes, the param/rng streams are
+        # untouched — and it runs BEFORE watch.track so any probe program
+        # stays outside the watchdog's compile budget.
+        from repro.analysis import AuditError, audit_train_step
+        audit_rng = np.random.default_rng(seed)
+        report = audit_train_step(
+            trainer, state, tuple(map(jnp.asarray,
+                                      fed.sample_batch(audit_rng, batch))))
+        # donation is advisory here: on the forced host-platform CPU mesh
+        # XLA aliases only part of the sharded scan carry (a backend
+        # property, not a program bug — the dense single-device lowering
+        # aliases fully), so only host-sync/baked-const/wire errors gate
+        hard = [f for f in report.errors if f.code != "donation"]
+        if hard:
+            raise AuditError("\n".join(str(f) for f in hard))
+        for f in report.findings:
+            if f.code == "donation":
+                print(f"audit advisory: {f}")
     # zero-recompile guard on the scan driver: one compiled program per
     # configuration; a ragged final segment legitimately compiles one more
     # scan length.  Raises RecompileError when a traced operand (topology,
@@ -271,6 +306,8 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         "local_updates": local_updates,
         "lowering": lowering,
         "ef_rebase_every": ef_rebase_every,
+        "ef_rebase_threshold": ef_rebase_threshold,
+        "sanitize": sanitize,
         # compiled scan programs the run used (1 = zero recompiles across
         # rounds; +1 tolerated for a ragged final segment) — already checked
         # by the watchdog above, reported for the benchmark rows

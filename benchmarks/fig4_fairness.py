@@ -6,8 +6,6 @@ the same average — up to ~60% variance reduction."""
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import fmt_row, run_decentralized
 
 

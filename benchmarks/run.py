@@ -9,7 +9,6 @@ Prints ``name,us_per_call,derived`` CSV rows (see repo scaffold contract).
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import fmt_row, make_task, run_decentralized
+from benchmarks.common import fmt_row, run_decentralized
 
 
 def _worst10(history_stats, accs: np.ndarray) -> float:
@@ -17,9 +17,6 @@ def _worst10(history_stats, accs: np.ndarray) -> float:
 
 
 def run(steps: int = 600, seed: int = 0) -> list[str]:
-    import jax
-    import jax.numpy as jnp
-
     rows = []
     # two protocols (see EXPERIMENTS.md): 'strict' = paper's single eta for
     # all mu (the mu-sweep is then confounded by the exp(l/mu)/mu effective

@@ -1,0 +1,54 @@
+"""Static analysis + runtime sanitizer for the decentralized training stack.
+
+Three layers of correctness tooling (see EXPERIMENTS.md §Static-analysis):
+
+* ``repro.analysis.audit`` — jaxpr/HLO auditor: host-sync hazards, wire
+  dtype-discipline (declared vs compiled collective-permute bytes),
+  donation failures, baked-constant recompile hazards.  Needs jax.
+* ``repro.analysis.lint`` — AST repo-discipline linter (rules RPR001-005),
+  runnable as ``python -m repro.analysis [paths]``.  Pure stdlib — safe to
+  import before jax is configured.
+* ``repro.analysis.sanitize`` — checkify invariant checks staged inside the
+  jitted step via ``TrainerSpec(sanitize=True)`` / ``--sanitize``.
+
+The auditor and sanitizer import jax; this package ``__init__`` re-exports
+only through lazy attribute access so the lint CLI can run (and set
+``XLA_FLAGS``) before any backend initialization.
+"""
+
+from repro.analysis.lint import LintFinding, lint_paths, lint_source
+
+__all__ = [
+    "AuditError",
+    "AuditReport",
+    "Finding",
+    "LintFinding",
+    "audit_baked_consts",
+    "audit_donation",
+    "audit_host_callbacks",
+    "audit_mixer",
+    "audit_recompile",
+    "audit_train_step",
+    "audit_wire",
+    "lint_paths",
+    "lint_source",
+    "step_checks",
+    "wire_summary",
+]
+
+_AUDIT = {"AuditError", "AuditReport", "Finding", "audit_baked_consts",
+          "audit_donation", "audit_host_callbacks", "audit_mixer",
+          "audit_recompile", "audit_train_step", "audit_wire",
+          "wire_summary"}
+
+
+def __getattr__(name):
+    if name in _AUDIT:
+        from repro.analysis import audit
+
+        return getattr(audit, name)
+    if name == "step_checks":
+        from repro.analysis.sanitize import step_checks
+
+        return step_checks
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,421 @@
+"""Jaxpr/HLO auditor: check compiled programs against the repo's invariants.
+
+Every correctness incident so far was a violation of an invariant this repo
+states in prose: the PR-4 memoryless-wire downgrade broke "wire bytes ==
+HLO collective-permute bytes", the PR-5 ``ef_rounds`` bug broke "every
+CommState field is registered everywhere", the fig9 recompile sweeps broke
+traced-operand discipline.  This module turns those invariants into
+reusable passes over the *artifacts XLA already produces* — the closed
+jaxpr, the compiled HLO text, and ``memory_analysis()`` — so they are
+checked by tools instead of per-test one-offs:
+
+* :func:`audit_host_callbacks` — walk the closed jaxpr (including scan /
+  cond / pjit / shard_map sub-jaxprs) for host-callback primitives.  Any
+  callback whose target function does not live in an allowed module (the
+  registered ``repro.obs`` tap by default) is a host-sync hazard: a stray
+  ``jax.debug.print`` or ``pure_callback`` in the hot step serializes the
+  device against the host.
+* :func:`audit_wire` — compile one mixer round and cross-check the
+  collective-permute bytes (and their dtype split) against the mixer's
+  declared physical wire (:meth:`Mixer.wire_dtype_bytes`).  A full-precision
+  tensor smuggled onto an int8 wire shows up as missing ``s8`` bytes and
+  excess ``f32`` bytes — the generalized form of the ad-hoc HLO
+  cross-checks that used to live in tests.
+* :func:`audit_donation` — compare the bytes the caller donated against
+  the input/output aliasing XLA actually installed
+  (``memory_analysis().alias_size_in_bytes``); a donated scan carry that
+  XLA copies (dtype change, layout mismatch) is flagged with the copied
+  byte count.
+* :func:`audit_baked_consts` / :func:`audit_recompile` — scalar closures
+  baked into the program as literals recompile on every config change; the
+  two-point probe lowers the function at two operand settings and flags
+  any difference in the lowered text.
+
+``audit_mixer`` / ``audit_train_step`` bundle the passes for the two
+objects the repo actually ships; ``python -m repro.analysis --audit-smoke``
+runs them on the fmnist-scale step in CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.hlo import parse_collectives
+
+# jaxpr primitives that reach back to the host.  ``debug_callback`` is
+# jax.debug.print/breakpoint; ``io_callback``/``pure_callback`` are the
+# explicit host-callback APIs.  Ordered infeed/outfeed never appear in this
+# repo and are flagged unconditionally.
+_CALLBACK_PRIMS = ("io_callback", "pure_callback", "debug_callback",
+                   "infeed", "outfeed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One auditor observation.
+
+    code:     stable machine-readable kind ("host-sync", "wire-bytes",
+              "wire-dtype", "donation", "baked-const", "recompile").
+    severity: "error" (invariant violated) or "warning" (advisory).
+    message:  one-line human summary.
+    detail:   supporting evidence (the HLO line, byte counts, ...).
+    """
+
+    code: str
+    severity: str
+    message: str
+    detail: str = ""
+
+    def __str__(self) -> str:
+        s = f"[{self.code}/{self.severity}] {self.message}"
+        return s + (f"\n    {self.detail}" if self.detail else "")
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Findings of one audited program plus summary context."""
+
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    context: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        """True when no *error* finding was recorded (warnings pass)."""
+        return not self.errors
+
+    @property
+    def errors(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def warnings(self) -> list[Finding]:
+        return [f for f in self.findings if f.severity == "warning"]
+
+    def extend(self, findings: Iterable[Finding]) -> "AuditReport":
+        self.findings.extend(findings)
+        return self
+
+    def raise_on_error(self) -> "AuditReport":
+        if self.errors:
+            raise AuditError(self)
+        return self
+
+    def __str__(self) -> str:
+        if not self.findings:
+            return "audit clean"
+        return "\n".join(str(f) for f in self.findings)
+
+
+class AuditError(AssertionError):
+    """An audit pass found at least one error-severity finding."""
+
+    def __init__(self, report: AuditReport):
+        self.report = report
+        super().__init__(str(report))
+
+
+# -- jaxpr walking -------------------------------------------------------------
+
+def _subjaxprs(value) -> Iterable[Any]:
+    """Jaxpr objects nested inside one eqn param value (scan/cond/pjit...)."""
+    if hasattr(value, "eqns"):            # a Jaxpr
+        yield value
+    elif hasattr(value, "jaxpr"):         # a ClosedJaxpr
+        yield value.jaxpr
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def _iter_eqns(jaxpr) -> Iterable[Any]:
+    """Every eqn in a jaxpr, recursing into sub-jaxprs (scan bodies, cond
+    branches, pjit/shard_map calls)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+def _callback_target(eqn) -> tuple[str, str]:
+    """(module, qualname) of the host function a callback eqn invokes."""
+    cb = eqn.params.get("callback")
+    # unwrap jax's _FlatCallback / functools.partial layers
+    for attr in ("callback_func", "func", "callback"):
+        inner = getattr(cb, attr, None)
+        if inner is not None:
+            cb = inner
+    mod = getattr(cb, "__module__", "") or ""
+    name = getattr(cb, "__qualname__", None) or repr(cb)
+    return mod, name
+
+
+def audit_host_callbacks(fn, *args, allowed: Sequence[str] = ("repro.obs",),
+                         **kwargs) -> list[Finding]:
+    """Flag host-callback primitives staged anywhere in ``fn``'s jaxpr.
+
+    ``fn`` may also be an already-traced ``ClosedJaxpr``.  Callbacks whose
+    target function lives in a module with an ``allowed`` prefix (the
+    registered obs tap) pass; everything else — a stray ``jax.debug.print``,
+    an ad-hoc ``pure_callback`` — is an error: it serializes the compiled
+    step against the host.
+    """
+    closed = fn if hasattr(fn, "jaxpr") else jax.make_jaxpr(fn)(*args,
+                                                               **kwargs)
+    findings = []
+    for eqn in _iter_eqns(closed.jaxpr):
+        prim = eqn.primitive.name
+        if prim not in _CALLBACK_PRIMS:
+            continue
+        mod, name = _callback_target(eqn)
+        if any(mod == a or mod.startswith(a + ".") for a in allowed):
+            continue
+        findings.append(Finding(
+            code="host-sync", severity="error",
+            message=f"{prim} to {mod or '<unknown>'}.{name} staged in "
+                    "traced code (host-sync hazard)",
+            detail="callbacks in the hot step must come from an allowed "
+                   f"module ({', '.join(allowed)}) — the registered obs tap",
+        ))
+    return findings
+
+
+# -- wire audit ----------------------------------------------------------------
+
+def wire_summary(mixer, theta, state=None) -> dict:
+    """Compile one mixer round and summarize its collective-permute wire.
+
+    Returns ``{"total": bytes, "by_dtype": {dtype: bytes}, "ops": [...]}``
+    with all byte counts scaled to the whole graph (per-device × K).
+    """
+    if state is None:
+        state = mixer.init_state(theta)
+    compiled = jax.jit(mixer).lower(theta, state).compile()
+    # node count: gossip mixers carry .k; dense/identity lowerings (no
+    # collectives) fall back to the node-stacked leading axis
+    k = int(getattr(mixer, "k", 0) or
+            jax.tree.leaves(theta)[0].shape[0])
+    ops = [o for o in parse_collectives(compiled.as_text(), world_size=k)
+           if o.kind == "collective-permute"]
+    by_dtype: dict[str, float] = {}
+    for o in ops:
+        for dt, b in o.bytes_by_dtype:
+            by_dtype[dt] = by_dtype.get(dt, 0.0) + b * k
+    return {
+        "total": sum(o.wire_bytes for o in ops) * k,
+        "by_dtype": by_dtype,
+        "ops": ops,
+    }
+
+
+def audit_wire(mixer, theta, state=None) -> list[Finding]:
+    """Cross-check a mixer's compiled collective-permute bytes against its
+    declared physical wire.
+
+    The contract is :meth:`repro.comm.protocol.Mixer.wire_dtype_bytes`:
+    the per-dtype bytes one round's collective-permutes physically move
+    (``None`` for accounted-only lowerings — dense/einsum mixers compile to
+    no collectives and are checked for exactly that).  With an int8/int4
+    codec the quantized payload must ride as ``s8``; full-precision bytes
+    beyond the declared scale/re-base budget are a dtype-widening leak.
+    """
+    expected = mixer.wire_dtype_bytes(theta)
+    summary = wire_summary(mixer, theta, state)
+    findings: list[Finding] = []
+    if expected is None:
+        if summary["ops"]:
+            findings.append(Finding(
+                code="wire-bytes", severity="error",
+                message=f"{type(mixer).__name__} declares no physical wire "
+                        f"but compiles {len(summary['ops'])} "
+                        "collective-permute op(s)",
+                detail=summary["ops"][0].line,
+            ))
+        return findings
+    exp_total = float(sum(expected.values()))
+    if not summary["ops"]:
+        findings.append(Finding(
+            code="wire-bytes", severity="error",
+            message=f"{type(mixer).__name__} declares a physical wire of "
+                    f"{exp_total:.0f} B/round but compiles to no "
+                    "collective-permute ops",
+        ))
+        return findings
+    if summary["total"] != exp_total:
+        findings.append(Finding(
+            code="wire-bytes", severity="error",
+            message=f"collective-permute bytes {summary['total']:.0f} != "
+                    f"declared physical wire {exp_total:.0f} "
+                    f"({type(mixer).__name__})",
+            detail=f"HLO by dtype: {summary['by_dtype']}; "
+                   f"declared: {expected}",
+        ))
+    for dt in sorted(set(expected) | set(summary["by_dtype"])):
+        got = float(summary["by_dtype"].get(dt, 0.0))
+        want = float(expected.get(dt, 0.0))
+        if got == want:
+            continue
+        widened = dt not in ("s8", "u8") and got > want
+        findings.append(Finding(
+            code="wire-dtype", severity="error",
+            message=(f"dtype-widening leak: {got - want:.0f} excess {dt} "
+                     "bytes on the wire" if widened else
+                     f"wire {dt} bytes {got:.0f} != declared {want:.0f}"),
+            detail=f"HLO by dtype: {summary['by_dtype']}; "
+                   f"declared: {expected}",
+        ))
+    return findings
+
+
+# -- donation audit ------------------------------------------------------------
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+def audit_donation(fn, *args, donate_argnums: Sequence[int] = (0,),
+                   tol_bytes: int = 0) -> list[Finding]:
+    """Flag donated buffers XLA copies instead of aliasing.
+
+    ``fn`` may be a plain function (jitted here with ``donate_argnums``) or
+    an already-jitted function (``donate_argnums`` then only selects which
+    args count as donated for the byte comparison).  A failed donation —
+    dtype/layout change between a donated input and every output — shows up
+    as ``memory_analysis().alias_size_in_bytes`` falling short of the
+    donated bytes; anything beyond ``tol_bytes`` is an error.
+    """
+    jfn = fn if hasattr(fn, "lower") else jax.jit(
+        fn, donate_argnums=tuple(donate_argnums))
+    compiled = jfn.lower(*args).compile()
+    donated = sum(_tree_bytes(args[i]) for i in donate_argnums)
+    try:
+        ma = compiled.memory_analysis()
+        aliased = int(getattr(ma, "alias_size_in_bytes", 0))
+    except Exception as e:  # backend without memory analysis
+        return [Finding(code="donation", severity="warning",
+                        message=f"memory_analysis unavailable ({e!r}); "
+                                "donation not audited")]
+    copied = donated - aliased
+    if copied > tol_bytes:
+        return [Finding(
+            code="donation", severity="error",
+            message=f"{copied} of {donated} donated bytes are NOT aliased "
+                    "to an output — XLA copies them every call",
+            detail="a donated buffer aliases only when some output matches "
+                   "its shape+dtype; check for dtype casts or dropped "
+                   "fields on the carry",
+        )]
+    return []
+
+
+# -- baked-constant / recompile audit -----------------------------------------
+
+def audit_baked_consts(fn, *args, max_report: int = 8, **kwargs
+                       ) -> list[Finding]:
+    """Warn about scalar constants closed over by a traced function.
+
+    A python/numpy scalar captured by the step becomes an XLA constant:
+    changing it (a sweep over μ, γ, drop-p...) recompiles the whole
+    program.  Scalars are advisory (many are genuinely static); arrays are
+    ignored — weight matrices are *supposed* to be baked.
+    """
+    closed = fn if hasattr(fn, "jaxpr") else jax.make_jaxpr(fn)(*args,
+                                                               **kwargs)
+    findings = []
+    for var, val in zip(closed.jaxpr.constvars, closed.consts):
+        arr = jnp.asarray(val)
+        if arr.ndim != 0:
+            continue
+        if len(findings) >= max_report:
+            break
+        findings.append(Finding(
+            code="baked-const", severity="warning",
+            message=f"scalar constant {var} = {arr} ({arr.dtype}) baked "
+                    "into the program",
+            detail="if this value is swept per run, pass it as a traced "
+                   "operand or it recompiles on every change",
+        ))
+    return findings
+
+
+def _strip_locs(text: str) -> str:
+    # drop MLIR location metadata — it can differ between identical lowers
+    return "\n".join(ln for ln in text.splitlines() if "loc(" not in ln)
+
+
+def audit_recompile(fn: Callable, args_a: tuple, args_b: tuple
+                    ) -> list[Finding]:
+    """Two-point probe for baked-constant recompile hazards.
+
+    Lower ``fn`` at two settings of its inputs (same shapes/dtypes,
+    different values).  Traced-operand discipline means the lowered program
+    text is identical — any difference proves a value from the arguments
+    (or a closure keyed off them) was baked into the program as a literal
+    and will force a recompile per setting.
+    """
+    ta = _strip_locs(jax.jit(fn).lower(*args_a).as_text())
+    tb = _strip_locs(jax.jit(fn).lower(*args_b).as_text())
+    if ta == tb:
+        return []
+    diff = [f"- {a}\n+ {b}" for a, b in zip(ta.splitlines(), tb.splitlines())
+            if a != b][:4]
+    return [Finding(
+        code="recompile", severity="error",
+        message="lowered program differs between two operand settings — a "
+                "config value is baked as a literal (recompile hazard)",
+        detail="\n".join(diff),
+    )]
+
+
+# -- bundled audits ------------------------------------------------------------
+
+def audit_mixer(mixer, theta, state=None,
+                allowed: Sequence[str] = ("repro.obs",)) -> AuditReport:
+    """Host-callback + wire audit of one consensus round."""
+    if state is None:
+        state = mixer.init_state(theta)
+    report = AuditReport(context={"mixer": type(mixer).__name__})
+    report.extend(audit_host_callbacks(
+        lambda t, s: mixer(t, s, round=jnp.int32(0)), theta, state,
+        allowed=allowed))
+    report.extend(audit_wire(mixer, theta, state))
+    return report
+
+
+def audit_train_step(trainer, state, batch,
+                     allowed: Sequence[str] = ("repro.obs",),
+                     scan_steps: int = 2) -> AuditReport:
+    """Audit a :class:`repro.core.api.DecentralizedTrainer`'s hot loop.
+
+    Checks the traced step for host-sync hazards and baked scalar consts,
+    and the scan driver (``trainer._run``) for donation failures on the
+    carried state.  ``batch`` is one per-step batch pytree (leaves
+    (K, ...)); the scan probe stacks it ``scan_steps`` deep.
+    """
+    report = AuditReport(context={"trainer": type(trainer).__name__})
+    step = trainer._train_step_fn
+    if getattr(trainer, "sanitize", False):
+        # the step stages checkify.check calls: they only trace under the
+        # checkify transform, so audit the transformed step (the one that
+        # actually compiles; trainer._scan_run_fn already embeds it)
+        from jax.experimental import checkify
+
+        step = checkify.checkify(step, errors=checkify.user_checks)
+    run = trainer._run if hasattr(trainer._run, "lower") else None
+    if run is None and trainer.jit:
+        run = jax.jit(trainer._scan_run_fn, donate_argnums=(0,))
+    report.extend(audit_host_callbacks(step, state, batch, allowed=allowed))
+    report.extend(audit_baked_consts(step, state, batch))
+    if trainer.jit:
+        batches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (scan_steps,) + x.shape),
+            batch)
+        report.extend(audit_donation(run, state, batches,
+                                     donate_argnums=(0,)))
+    return report

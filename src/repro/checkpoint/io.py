@@ -121,6 +121,45 @@ def restore_checkpoint(ckpt_dir: str, step: int | None = None, shardings=None):
     return state, step
 
 
+# Zero-padding for CommState fields missing from older checkpoints, keyed by
+# field name.  Every CommState field MUST have an entry here the moment it is
+# added to the NamedTuple — restore refuses to guess, and the repo linter
+# (repro.analysis.lint, RPR005) cross-checks this table against
+# CommState._fields so a new field cannot ship without deciding its legacy
+# value.  () is the protocol's "empty slot": exactly what every mixer that
+# predates the field expects.
+COMM_STATE_PAD = {
+    "hat": (),
+    "hat_mix": (),
+    "key": (),
+    "res_norm": (),
+    "res_ref": (),
+    "rounds": (),
+    "wire_bits": (),
+    "track": (),
+    "ef_rounds": (),
+    "ef_drift": (),
+}
+
+
+def _pad_comm_fields(stored: tuple) -> tuple:
+    """Extend a positionally-stored CommState tuple to the current schema."""
+    from repro.comm.protocol import CommState
+
+    missing = [f for f in CommState._fields if f not in COMM_STATE_PAD]
+    if missing:
+        raise KeyError(
+            f"CommState fields {missing} have no COMM_STATE_PAD entry — add "
+            "one (repro/checkpoint/io.py) so old checkpoints keep restoring")
+    if len(stored) > len(CommState._fields):
+        raise ValueError(
+            f"checkpoint CommState has {len(stored)} fields but the current "
+            f"schema has {len(CommState._fields)} — written by a newer repo?")
+    pad = tuple(COMM_STATE_PAD[f]
+                for f in CommState._fields[len(stored):])
+    return tuple(stored) + pad
+
+
 # -- typed train-state checkpoints --------------------------------------------
 #
 # The generic pytree round-trip above flattens NamedTuples to plain tuples:
@@ -162,8 +201,7 @@ def restore_train_state(ckpt_dir: str, step: int | None = None,
             f"(keys: {sorted(raw) if isinstance(raw, dict) else type(raw)})")
     comm = raw.get("comm", ())
     if isinstance(comm, (list, tuple)) and len(comm) > 0:
-        fields = tuple(comm) + ((),) * (len(CommState._fields) - len(comm))
-        comm = CommState(*fields)
+        comm = CommState(*_pad_comm_fields(tuple(comm)))
     state = DecentralizedState(
         params=raw["params"],
         opt_state=raw.get("opt_state", ()),

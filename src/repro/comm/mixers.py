@@ -101,6 +101,35 @@ def _send_mask(masks):
     return send
 
 
+def _codec_wire_dtypes(compressor, d: int) -> dict[str, int]:
+    """Physical per-node wire bytes of one encoded leaf, split by HLO dtype.
+
+    The payload a gossip round ppermutes: the quantized values ride as
+    ``s8`` (nibble-packed into half the bytes on the static int4 path),
+    scales as ``f32``; topk/randk move (f32 values, s32 indices); bf16
+    moves the cast tensor.  This is the per-dtype truth the HLO auditor
+    checks collective-permute ops against (``Mixer.wire_dtype_bytes``).
+    """
+    total = compressor.payload_bytes(d)
+    name = getattr(compressor, "name", "")
+    if name.startswith("int"):  # int8 / int4 / int8-kernel
+        q = d if not compressor._pack() else (d + 1) // 2
+        return {"s8": q, "f32": total - q}
+    if name in ("topk", "randk"):
+        return {"f32": total // 2, "s32": total // 2}
+    if name == "bf16":
+        return {"bf16": total}
+    return {"f32": total}
+
+
+def _merge_dtype_bytes(*dicts, scale: float = 1.0) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for d in dicts:
+        for dt, b in d.items():
+            out[dt] = out.get(dt, 0.0) + scale * b
+    return out
+
+
 def _leaf_payload_bytes(compressor, params, k: int) -> int:
     """Per-round payload bytes one node injects (sum over leaves).
 
@@ -280,12 +309,15 @@ class CompressedDenseMixer(_CompressedMixerBase):
         res_norm, res_ref, rounds = self._next_sched_state(
             state, jnp.sqrt(res_sq))
         unflat = treedef.unflatten
-        return unflat(out_theta), CommState(
-            hat=unflat(out_hat) if self.ef else (), hat_mix=(), key=key,
+        # _replace, not CommState(...): fields this round does not own
+        # (track, ef_rounds, ef_drift, ...) must thread through untouched —
+        # an explicit construction silently resets any field added later
+        # (the PR-4/PR-5 bug class; repro.analysis lint RPR005 enforces it)
+        return unflat(out_theta), state._replace(
+            hat=unflat(out_hat) if self.ef else (), key=key,
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
             wire_bits=self._round_wire_bits(theta, rate,
-                                            senders=self._senders(w)),
-            track=state.track, ef_rounds=state.ef_rounds)
+                                            senders=self._senders(w)))
 
     def bytes_per_round(self, params) -> int:
         """Total payload bytes injected per round (every node sends once),
@@ -433,11 +465,11 @@ class CompressedGossipMixer(_CompressedMixerBase):
             state, jnp.sqrt(res_sq))
         if senders is None:
             senders = sum(len(pairs) for pairs in self.perms)
-        return t2, CommState(
+        # _replace so fields this round does not own thread through (RPR005)
+        return t2, state._replace(
             hat=h2, hat_mix=s2, key=key,
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=self._round_wire_bits(theta, rate, senders=senders),
-            track=state.track, ef_rounds=state.ef_rounds)
+            wire_bits=self._round_wire_bits(theta, rate, senders=senders))
 
     def _accumulate(self, acc, payload, weight, d, mask=None):
         """acc + weight·dequant(payload), with an optional traced link mask.
@@ -465,3 +497,12 @@ class CompressedGossipMixer(_CompressedMixerBase):
         per_node = _leaf_payload_bytes(self.compressor, params, self.k)
         sends = sum(len(pairs) for pairs in self.perms)
         return sends * per_node
+
+    def wire_dtype_bytes(self, params) -> dict[str, float]:
+        """Physical collective-permute bytes per round, split by dtype:
+        every matching link moves each leaf's encoded payload."""
+        sends = sum(len(pairs) for pairs in self.perms)
+        per_node = _merge_dtype_bytes(*[
+            _codec_wire_dtypes(self.compressor, x.size // self.k)
+            for x in jax.tree.leaves(params)])
+        return _merge_dtype_bytes(per_node, scale=sends)

@@ -79,6 +79,14 @@ class CommState(NamedTuple):
               must follow executed consensus rounds, not steps.  () for
               every other mixer (and in pre-PR5 checkpoints, which restore
               padded — see ``repro.checkpoint.restore_train_state``).
+    ef_drift: f32 — the measured staleness ‖s − W_r θ̂‖_F of the incremental
+              ``hat_mix`` cache, maintained only by the *adaptive* re-base
+              mode of ``DynamicCompressedGossipMixer``
+              (``ef_rebase_threshold > 0``): each round measures the drift
+              against the current topology and the next round re-bases when
+              it exceeds the threshold.  () for every other mixer and for
+              the fixed-clock re-base mode (and in older checkpoints, which
+              restore padded).
     """
 
     hat: Any
@@ -90,6 +98,7 @@ class CommState(NamedTuple):
     wire_bits: jax.Array
     track: Any = ()
     ef_rounds: Any = ()
+    ef_drift: Any = ()
 
     @property
     def metrics(self) -> CommMetrics:
@@ -152,6 +161,17 @@ class Mixer:
     def bytes_per_round(self, params) -> int:
         """Static estimate of wire bytes one consensus round injects."""
         raise NotImplementedError
+
+    def wire_dtype_bytes(self, params) -> dict[str, float] | None:
+        """Per-HLO-dtype bytes one round's collective-permutes physically
+        move across the whole graph, or None when the lowering compiles to
+        no collectives (the dense/einsum simulation mixers, whose wire is
+        accounted only).  This is the contract the jaxpr/HLO auditor
+        (``repro.analysis.audit.audit_wire``) cross-checks against the
+        compiled program — it may differ from :meth:`bytes_per_round` where
+        the accounting is *effective* bits (the int4 rate riding the int8
+        container) or amortized (the EF re-base period)."""
+        return None
 
     # -- the protocol ---------------------------------------------------------
 

@@ -128,6 +128,12 @@ class DecentralizedTrainer:
                                           # an in-graph tap; None = no telemetry
     loss_has_aux: bool = False
     jit: bool = True
+    sanitize: bool = False                # checkify-wrap the step with the
+                                          # runtime invariant checks of
+                                          # repro.analysis.sanitize; a failed
+                                          # check raises on the host at the
+                                          # next err.throw() (per step/run),
+                                          # params stay bit-exact when off
 
     def __post_init__(self):
         g = build_graph(self.graph, self.num_nodes, **self.graph_kwargs)
@@ -182,12 +188,59 @@ class DecentralizedTrainer:
         self._train_step_fn = build_train_step(
             self.loss_fn, self.optimizer, self.mixer, step_cfg,
             loss_has_aux=self.loss_has_aux, obs=self.obs,
+            sanitize=self.sanitize,
         )
-        self._train_step = (jax.jit(self._train_step_fn) if self.jit
-                            else self._train_step_fn)
+        if self.sanitize:
+            # the step stages checkify.check calls: transform once, jit the
+            # transformed fn, and surface failures host-side via err.throw()
+            from jax.experimental import checkify
 
-        def scan_run(state, batches):
-            return jax.lax.scan(self._train_step_fn, state, batches)
+            checked_step = checkify.checkify(
+                self._train_step_fn, errors=checkify.user_checks)
+            jitted_step = (jax.jit(checked_step) if self.jit
+                           else checked_step)
+
+            def step_and_throw(state, batch):
+                err, out = jitted_step(state, batch)
+                err.throw()
+                return out
+
+            if self.jit:
+                # keep the wrapper trackable by RecompileWatchdog
+                step_and_throw._cache_size = jitted_step._cache_size
+            self._train_step = step_and_throw
+        else:
+            self._train_step = (jax.jit(self._train_step_fn) if self.jit
+                                else self._train_step_fn)
+
+        if self.sanitize:
+            from jax.experimental import checkify
+
+            checked_body = checkify.checkify(
+                self._train_step_fn, errors=checkify.user_checks)
+
+            def scan_run(state, batches):
+                # discharge checkify PER STEP inside the scan body: the
+                # error reaching the mixer's shard_map is then always the
+                # empty one (checkify's shard_map rule reshapes any live
+                # error to per-device shape, which breaks the scan carry),
+                # and the per-step errors ride out as a stacked scan output
+                # for one batched throw() on the host
+                def body(st, batch):
+                    err, (st2, m) = checked_body(st, batch)
+                    return st2, (err, m)
+
+                state, (errs, ms) = jax.lax.scan(body, state, batches)
+                return state, (errs, ms)
+        else:
+
+            def scan_run(state, batches):
+                return jax.lax.scan(self._train_step_fn, state, batches)
+
+        # the jittable scan driver, kept for the static auditor
+        # (repro.analysis.audit probes donation on it even when the
+        # err.throw() wrapping makes self._run a host-throwing closure)
+        self._scan_run_fn = scan_run
 
         def eager_run(state, batches):
             # jit=False debugging path: plain Python loop so prints and
@@ -195,7 +248,7 @@ class DecentralizedTrainer:
             t = jax.tree.leaves(batches)[0].shape[0]
             out = []
             for i in range(t):
-                state, m = self._train_step_fn(
+                state, m = self._train_step(
                     state, jax.tree.map(lambda x: x[i], batches))
                 out.append(m)
             return state, jax.tree.map(lambda *xs: jnp.stack(xs), *out)
@@ -203,8 +256,21 @@ class DecentralizedTrainer:
         # the multi-step driver: one compiled program for N steps, with the
         # carried DecentralizedState donated (params/opt/comm buffers are
         # reused in place on backends that support donation)
-        self._run = (jax.jit(scan_run, donate_argnums=(0,)) if self.jit
-                     else eager_run)
+        if self.sanitize and self.jit:
+            checked_run = jax.jit(scan_run, donate_argnums=(0,))
+
+            def run_and_throw(state, batches):
+                state, (errs, ms) = checked_run(state, batches)
+                errs.throw()  # batched over steps: reports every violation
+                return state, ms
+
+            # keep the wrapper trackable by RecompileWatchdog
+            run_and_throw._cache_size = checked_run._cache_size
+            self._run = run_and_throw
+        elif self.jit:
+            self._run = jax.jit(scan_run, donate_argnums=(0,))
+        else:
+            self._run = eager_run
         if self.predict_fn is not None:
             self._eval_step = build_eval_step(self.predict_fn)
             if self.jit:

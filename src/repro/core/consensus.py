@@ -156,6 +156,19 @@ class GossipMixer(Mixer):
         sends = sum(len(pairs) for pairs in self.perms)
         return sends * tree_bytes(params) // self.k
 
+    def wire_dtype_bytes(self, params) -> dict[str, float]:
+        """Physical collective-permute bytes per round by dtype: every
+        matching link moves each leaf shard at its own precision."""
+        from repro.utils.hlo import hlo_dtype_name
+
+        sends = sum(len(pairs) for pairs in self.perms)
+        out: dict[str, float] = {}
+        for x in jax.tree.leaves(params):
+            dt = hlo_dtype_name(x.dtype)
+            out[dt] = out.get(dt, 0.0) \
+                + sends * (x.size // self.k) * x.dtype.itemsize
+        return out
+
 
 def make_gossip_mixer(
     decomp: MixingDecomposition,
@@ -270,6 +283,14 @@ class RepeatMixer(Mixer):
 
     def bytes_per_round(self, params) -> int:
         return self.rounds * self.inner.bytes_per_round(params)
+
+    def wire_dtype_bytes(self, params):
+        inner = self.inner.wire_dtype_bytes(params)
+        if inner is None:
+            return None
+        # the python loop unrolls: the HLO carries `rounds` copies of the
+        # inner round's collectives
+        return {dt: self.rounds * b for dt, b in inner.items()}
 
 
 def repeat_mixer(mixer: Mixer, rounds: int) -> Mixer:

@@ -97,6 +97,7 @@ def build_train_step(
     cfg: TrainStepConfig,
     loss_has_aux: bool = False,
     obs=None,
+    sanitize: bool = False,
 ):
     """Returns train_step(state, batch) -> (state, metrics).
 
@@ -110,9 +111,20 @@ def build_train_step(
     schema-versioned JSONL without per-step host syncs.  The tap only reads
     values the step computes anyway, so the returned metrics, the scan
     carry's donation, and the trajectory stay bit-exact vs ``obs=None``.
+
+    ``sanitize`` stages the runtime invariant checks of
+    ``repro.analysis.sanitize`` (doubly-stochastic W, CHOCO cache drift,
+    finite mixed params, in-container codec rate) after the consensus.
+    They are ``checkify.check`` calls: the returned step must then run
+    under a ``checkify.checkify`` transform (the trainer wraps it), and
+    the computed values are untouched — the trajectory stays bit-exact vs
+    ``sanitize=False``.
     """
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=loss_has_aux)
+    step_checks = None
+    if sanitize:
+        from repro.analysis.sanitize import step_checks
     if cfg.compression is not None and cfg.compression.enabled \
             and mixer.compression is None:
         raise ValueError(
@@ -178,12 +190,17 @@ def build_train_step(
                     lambda theta, cs: mixer(theta, cs, round=state.step),
                     lambda theta, cs: (theta, cs),
                     updated, state.comm)
+        if step_checks is not None:
+            with scope("obs:sanitize"):
+                step_checks(mixer, state.comm, mixed, comm)
         # estimated wire bytes this step (static estimate, gated on mixing;
         # traced wire_bits/8 when a schedule makes the rate dynamic)
         if traced_wire:
             comm_bytes = jnp.where(is_mix_step, comm.wire_bits / 8.0, 0.0)
         else:
-            round_bytes = float(mixer.bytes_per_round(state.params))
+            # bytes_per_round is shape-only host math on static mixers
+            # (traced_wire is False here): no tracer reaches the float()
+            round_bytes = float(mixer.bytes_per_round(state.params))  # repro: noqa[RPR002]
             if cfg.mix_every == 1:
                 comm_bytes = jnp.float32(round_bytes)
             else:

@@ -59,6 +59,11 @@ def add_dynamics_cli_args(ap) -> None:
                          "topology — every B-th consensus round exchanges "
                          "full-precision public copies to rebuild the "
                          "hat_mix cache (0 = never; static schedules only)")
+    ap.add_argument("--ef-rebase-threshold", type=float, default=0.0,
+                    help="adaptive re-base: measure the EF cache drift "
+                         "||s - W_r theta_hat||_F each round and re-base "
+                         "when it exceeds this threshold instead of on the "
+                         "B clock (0 = clock)")
     ap.add_argument("--straggler-p", type=float, default=0.0,
                     help="per-node per-round probability of skipping "
                          "communication")
@@ -167,11 +172,13 @@ class TrainerSpec:
     local_updates: int = 1                # H: steps per consensus round
     gradient_tracking: bool = False       # local-update drift correction
     ef_rebase_every: int = 8              # B: EF-gossip hat_mix re-base period
+    ef_rebase_threshold: float = 0.0      # adaptive re-base drift threshold
     straggler_p: float = 0.0              # per-round node comm skips
     outage_p: float = 0.0                 # correlated node outages
     outage_len: int = 10
     seed: int = 0
     jit: bool = True
+    sanitize: bool = False                # checkify invariant checks in-step
 
     # -- derived configs ----------------------------------------------------
 
@@ -193,6 +200,7 @@ class TrainerSpec:
             local_updates=self.local_updates,
             gradient_tracking=self.gradient_tracking,
             ef_rebase_every=self.ef_rebase_every,
+            ef_rebase_threshold=self.ef_rebase_threshold,
             faults=faults, seed=self.seed)
         return cfg if cfg.enabled else None
 
@@ -243,6 +251,7 @@ class TrainerSpec:
             obs=obs,
             loss_has_aux=loss_has_aux,
             jit=self.jit,
+            sanitize=self.sanitize,
         )
 
     # -- CLI integration ------------------------------------------------------
@@ -265,6 +274,11 @@ class TrainerSpec:
                         help="consensus period (local SGD when > 1)")
         ap.add_argument("--lr", type=float, default=None)
         ap.add_argument("--seed", type=int, default=0)
+        ap.add_argument("--sanitize", action="store_true",
+                        help="checkify-wrap the train step with runtime "
+                             "invariant checks (doubly-stochastic W, CHOCO "
+                             "cache drift, finite dequantized payloads, "
+                             "in-range codec rate; repro.analysis.sanitize)")
         add_compression_cli_args(ap)
         add_dynamics_cli_args(ap)
 
@@ -298,10 +312,12 @@ class TrainerSpec:
             local_updates=getattr(args, "local_updates", 1),
             gradient_tracking=getattr(args, "gradient_tracking", False),
             ef_rebase_every=getattr(args, "ef_rebase_every", 8),
+            ef_rebase_threshold=getattr(args, "ef_rebase_threshold", 0.0),
             straggler_p=getattr(args, "straggler_p", 0.0),
             outage_p=getattr(args, "outage_p", 0.0),
             outage_len=getattr(args, "outage_len", 10),
             seed=args.seed,
+            sanitize=getattr(args, "sanitize", False),
         )
         if args.nodes is not None:
             spec["num_nodes"] = args.nodes

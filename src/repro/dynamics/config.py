@@ -47,9 +47,14 @@ class DynamicsConfig:
         *gossip* lowering (:class:`~repro.dynamics.DynamicCompressedGossipMixer`):
         every B-th consensus round exchanges full-precision public copies to
         rebuild the incremental ``hat_mix`` cache under the current W.
-        0 = never re-base (only valid for a static fault-free topology).
+        0 = never re-base (only valid for a static fault-free topology, or
+        with an adaptive threshold below).
         The dense EF lowering ignores it (it re-mixes full public copies
         every round, so its cache never goes stale).
+      ef_rebase_threshold: adaptive re-base: when > 0, the EF gossip
+        lowering measures the cache drift ‖s − W_r θ̂‖_F each round and
+        re-bases the round it exceeds this threshold, replacing the fixed
+        B clock.  0 = use the clock.
       seed: schedule PRNG seed (fault noise has its own seed in
         ``FaultConfig``).
     """
@@ -61,6 +66,7 @@ class DynamicsConfig:
     gradient_tracking: bool = False
     faults: FaultConfig | None = None
     ef_rebase_every: int = 8
+    ef_rebase_threshold: float = 0.0
     seed: int = 0
 
     def __post_init__(self):
@@ -72,6 +78,8 @@ class DynamicsConfig:
             raise ValueError("local_updates (H) must be >= 1")
         if self.ef_rebase_every < 0:
             raise ValueError("ef_rebase_every (B) must be >= 0")
+        if self.ef_rebase_threshold < 0:
+            raise ValueError("ef_rebase_threshold must be >= 0")
         if self.topology == "dropout" and not 0.0 <= self.drop_p < 1.0:
             raise ValueError("drop_p must be in [0, 1)")
         if self.drop_p > 0 and self.topology != "dropout":

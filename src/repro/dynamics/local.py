@@ -125,6 +125,16 @@ class LocalUpdateMixer(Mixer):
         b = self.inner.bytes_per_round(params)
         return 2 * b if self.gt else b
 
+    def wire_dtype_bytes(self, params):
+        inner = self.inner.wire_dtype_bytes(params)
+        if inner is None:
+            return None
+        # both lax.cond branches live in one program; the consensus branch
+        # carries the inner wire, plus the full-precision tracker exchange
+        # (mix_tree of an uncompressed inner: the same ops again) under GT
+        return ({dt: 2 * b for dt, b in inner.items()} if self.gt
+                else dict(inner))
+
     # -- the wrapper ----------------------------------------------------------
 
     def __call__(self, theta, state: CommState, *, round=None):

@@ -60,7 +60,9 @@ from repro.comm.compressors import CompressionConfig, fold_leaf, per_node_keys
 from repro.comm.mixers import (
     CompressedDenseMixer,
     CompressedGossipMixer,
+    _codec_wire_dtypes,
     _leaf_payload_bytes,
+    _merge_dtype_bytes,
     _send_mask,
 )
 from repro.comm.protocol import CommState, Mixer
@@ -211,7 +213,8 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
                 node_axis: AxisName = None, param_specs=None,
                 faults: FaultConfig | None = None,
                 quantized: CompressionConfig | None = None,
-                ef_rebase_every: int = 8):
+                ef_rebase_every: int = 8,
+                ef_rebase_threshold: float = 0.0):
         if (cls is DynamicGossipMixer and quantized is not None
                 and quantized.enabled and quantized.error_feedback):
             # EF wire: the sibling class owns the hat/hat_mix state and the
@@ -219,13 +222,20 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
             # class's __init__ entirely (Python data model).
             return DynamicCompressedGossipMixer(
                 schedule, mesh, node_axis, param_specs, quantized,
-                faults=faults, ef_rebase_every=ef_rebase_every)
+                faults=faults, ef_rebase_every=ef_rebase_every,
+                ef_rebase_threshold=ef_rebase_threshold)
         return super().__new__(cls)
 
     def __init__(self, schedule: TopologySchedule, mesh, node_axis: AxisName,
                  param_specs, faults: FaultConfig | None = None,
                  quantized: CompressionConfig | None = None,
-                 ef_rebase_every: int = 8):
+                 ef_rebase_every: int = 8,
+                 ef_rebase_threshold: float = 0.0):
+        if ef_rebase_threshold > 0:
+            raise ValueError(
+                "ef_rebase_threshold drives the adaptive hat_mix re-base, "
+                "which only exists on the error-feedback wire — pass an "
+                "error_feedback=True CompressionConfig")
         self._init_topology(schedule, faults)
         decomp = schedule.decomposition()
         axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
@@ -351,7 +361,9 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
                 key, sub = jax.random.split(state.key)
                 mixed = self._quantized_gossip(theta, self_w, match_ws,
                                                masks, sub)
-                per_node_bits = float(sum(
+                # shape-only host math (.size / .k are python ints): no
+                # tracer is materialized
+                per_node_bits = float(sum(  # repro: noqa[RPR002]
                     self._quant_leaf_bits(x.size // self.k)
                     for x in jax.tree.leaves(theta)))
         sends = sum(jnp.sum(m) for m in masks)
@@ -370,7 +382,8 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
         import math
 
         bits = math.ceil(math.log2(2 * self._qmax + 1))
-        return float(bits * d + 32 * self._compressor._n_blocks(d))
+        # d is a leaf .size — host int, see docstring
+        return float(bits * d + 32 * self._compressor._n_blocks(d))  # repro: noqa[RPR002]
 
     def bytes_per_round(self, params) -> int:
         """Fault-free static estimate: every matching edge active."""
@@ -380,6 +393,29 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
         per_node = sum(self._quant_leaf_bits(x.size // self.k)
                        for x in jax.tree.leaves(params)) / 8.0
         return round(sends * per_node)
+
+    def wire_dtype_bytes(self, params) -> dict[str, float]:
+        """Physical per-dtype collective-permute bytes per round.
+
+        The masked wire always moves the full union-support buffers (a
+        mask-consulting transport is a ROADMAP item), and the int4 rate
+        rides the int8 *container*: the s8 bytes here are per-entry
+        container bytes, deliberately larger than the effective-bit
+        ``bytes_per_round`` accounting."""
+        from repro.utils.hlo import hlo_dtype_name
+
+        sends = sum(len(pairs) for pairs in self.perms)
+        out: dict[str, float] = {}
+        for x in jax.tree.leaves(params):
+            d = x.size // self.k
+            if self.quantized is None:
+                dt = hlo_dtype_name(x.dtype)
+                out[dt] = out.get(dt, 0.0) + sends * d * x.dtype.itemsize
+            else:
+                out["s8"] = out.get("s8", 0.0) + sends * d
+                out["f32"] = out.get("f32", 0.0) \
+                    + sends * 4.0 * self._compressor._n_blocks(d)
+        return out
 
 
 class DynamicCompressedDenseMixer(CompressedDenseMixer, _DynamicTopology):
@@ -461,12 +497,26 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
     the frozen decomposition weights bit-for-bit and every mask is 1, so
     the delta rounds reproduce :class:`CompressedGossipMixer` exactly (the
     masked encode/accumulate paths are bit-identical at mask ≡ 1).
+
+    ``ef_rebase_threshold`` > 0 replaces the fixed clock with the *drift
+    proxy*: each round measures the cache staleness ‖s − W_r θ̂‖_F (exact —
+    a (K, K) einsum over the public copies) and re-bases the round it
+    exceeds the threshold, mirroring how the adaptive codec schedule keys
+    off ``res_norm``.  The measurement lands in ``CommState.ef_drift`` for
+    telemetry.  Under a static fault-free schedule the delta recursion
+    keeps s = Σ W θ̂ to numerical noise, so an adaptive run never re-bases
+    there (bit-identical trajectories to B = 0 up to the cond); under
+    dropout/faults the re-base frequency scales with how fast the topology
+    actually moves instead of a wall-clock B.  The sanitizer's CHOCO-drift
+    assertion (``repro.analysis.sanitize``) doubles as its correctness
+    oracle.
     """
 
     def __init__(self, schedule: TopologySchedule, mesh, node_axis: AxisName,
                  param_specs, compression: CompressionConfig,
                  faults: FaultConfig | None = None,
                  ef_rebase_every: int = 8,
+                 ef_rebase_threshold: float = 0.0,
                  replica_axis: str | None = None):
         if compression is None or not compression.enabled:
             raise ValueError("DynamicCompressedGossipMixer needs an enabled "
@@ -481,15 +531,19 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
         self._init_topology(schedule, faults)
         if ef_rebase_every < 0:
             raise ValueError("ef_rebase_every must be >= 0")
+        if ef_rebase_threshold < 0:
+            raise ValueError("ef_rebase_threshold must be >= 0")
+        self.adaptive = ef_rebase_threshold > 0
         time_varying = (not isinstance(schedule, StaticSchedule)
                         or self.faults is not None)
-        if ef_rebase_every == 0 and time_varying:
+        if ef_rebase_every == 0 and time_varying and not self.adaptive:
             raise ValueError(
                 "ef_rebase_every=0 (never re-base) keeps the incremental "
                 "hat_mix cache forever, which is only valid for a static "
                 "fault-free W; this schedule/fault config varies per round "
-                "— pass ef_rebase_every >= 1")
+                "— pass ef_rebase_every >= 1 or an ef_rebase_threshold")
         self.ef_rebase_every = int(ef_rebase_every)
+        self.ef_rebase_threshold = float(ef_rebase_threshold)
         self._perm_idx = [np.asarray(p, np.int64) for p in decomp.matchings]
 
     @property
@@ -499,13 +553,34 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
     # -- state ----------------------------------------------------------------
 
     def init_state(self, params) -> CommState:
-        return super().init_state(params)._replace(ef_rounds=jnp.int32(0))
+        state = super().init_state(params)._replace(ef_rounds=jnp.int32(0))
+        if self.adaptive:
+            state = state._replace(ef_drift=jnp.float32(0.0))
+        return state
 
     def state_specs(self, param_specs) -> CommState:
         rep = jax.sharding.PartitionSpec()
-        return super().state_specs(param_specs)._replace(ef_rounds=rep)
+        specs = super().state_specs(param_specs)._replace(ef_rounds=rep)
+        if self.adaptive:
+            specs = specs._replace(ef_drift=rep)
+        return specs
 
     # -- the round -------------------------------------------------------------
+
+    def _cache_drift(self, w, hat, hat_mix):
+        """‖s − W θ̂‖_F over all leaves: the exact staleness of the
+        incremental cache under the round's topology — the drift proxy the
+        adaptive re-base triggers on (mirroring how the codec schedule keys
+        off ``res_norm``).  A (K, K) einsum against the node-stacked public
+        copies; only computed in adaptive mode."""
+        total = jnp.float32(0.0)
+        for h, s in zip(jax.tree.leaves(hat), jax.tree.leaves(hat_mix)):
+            hf = h.reshape(self.k, -1)
+            sf = s.reshape(self.k, -1)
+            ws = jnp.einsum("kl,ld->kd", w, hf,
+                            precision=jax.lax.Precision.HIGHEST)
+            total = total + jnp.sum(jnp.square(sf - ws))
+        return jnp.sqrt(total)
 
     def __call__(self, theta, state: CommState, *, round=None):
         with jax.named_scope("obs:consensus/DynamicCompressedGossipMixer"):
@@ -522,14 +597,25 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
                 return self._rebase_round(t, st, self_w, match_ws, masks,
                                           senders)
 
-            b = self.ef_rebase_every
-            if b == 0:
-                t2, s2 = delta(theta, state)
-            elif b == 1:
-                t2, s2 = rebase(theta, state)
-            else:
-                t2, s2 = jax.lax.cond(state.ef_rounds % b == b - 1,
+            if self.adaptive:
+                # drift-triggered re-base: measure the cache staleness
+                # against THIS round's W before mixing and re-base this
+                # round when it exceeds the threshold.  Both modes live in
+                # one lax.cond program — the trigger is a traced operand,
+                # so a threshold sweep never recompiles.
+                drift = self._cache_drift(w, state.hat, state.hat_mix)
+                t2, s2 = jax.lax.cond(drift > self.ef_rebase_threshold,
                                       rebase, delta, theta, state)
+                s2 = s2._replace(ef_drift=drift)
+            else:
+                b = self.ef_rebase_every
+                if b == 0:
+                    t2, s2 = delta(theta, state)
+                elif b == 1:
+                    t2, s2 = rebase(theta, state)
+                else:
+                    t2, s2 = jax.lax.cond(state.ef_rounds % b == b - 1,
+                                          rebase, delta, theta, state)
         return t2, s2._replace(ef_rounds=state.ef_rounds + 1)
 
     def _rebase_round(self, theta, state: CommState, self_w, match_ws,
@@ -597,11 +683,11 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
         # full-precision wire: active links × per-node f32 payload
         full_bits = 32.0 * sum(x.size // self.k
                                for x in jax.tree.leaves(theta))
-        return t2, CommState(
+        # _replace so fields this round does not own thread through (RPR005)
+        return t2, state._replace(
             hat=h2, hat_mix=s2, key=key,
             res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=jnp.asarray(senders * full_bits, jnp.float32),
-            track=state.track, ef_rounds=state.ef_rounds)
+            wire_bits=jnp.asarray(senders * full_bits, jnp.float32))
 
     def bytes_per_round(self, params) -> int:
         """Fault-free amortized estimate over the FULL union support —
@@ -615,9 +701,32 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
         sends = sum(len(pairs) for pairs in self.perms)
         q = _leaf_payload_bytes(self.compressor, params, self.k)
         full = 4 * sum(x.size // self.k for x in jax.tree.leaves(params))
+        if self.adaptive:
+            # drift-triggered: the re-base cadence is data-dependent, so
+            # fall back to the clock-B amortization as the static estimate
+            # (the traced wire_bits is the authoritative figure)
+            b = max(self.ef_rebase_every, 1)
+            return round(sends * ((b - 1) * q + full) / b)
         b = self.ef_rebase_every
         if b == 0:
             return sends * q
         if b == 1:
             return sends * full
         return round(sends * ((b - 1) * q + full) / b)
+
+    def wire_dtype_bytes(self, params) -> dict[str, float]:
+        """Physical per-dtype collective-permute bytes of ONE compiled
+        round — both lax.cond modes when both are in the program (B ≥ 2 or
+        adaptive): the delta mode moves the quantized payload, the re-base
+        mode the full-precision public copies."""
+        sends = sum(len(pairs) for pairs in self.perms)
+        delta = _merge_dtype_bytes(*[
+            _codec_wire_dtypes(self.compressor, x.size // self.k)
+            for x in jax.tree.leaves(params)], scale=sends)
+        full = {"f32": 4.0 * sends * sum(x.size // self.k
+                                         for x in jax.tree.leaves(params))}
+        if self.adaptive or self.ef_rebase_every >= 2:
+            return _merge_dtype_bytes(delta, full)
+        if self.ef_rebase_every == 0:
+            return delta
+        return full

@@ -209,7 +209,8 @@ def _cost_entries(compiled) -> dict:
 
 def compile_and_measure(cfg, shape, mesh, mixer_kind, want_hlo=True,
                         graph_kind="ring", compression=None,
-                        topology="dropout", drop_p=0.2, ef_rebase_every=8):
+                        topology="dropout", drop_p=0.2, ef_rebase_every=8,
+                        audit=False):
     fn, args = build_fn(cfg, shape, mesh, mixer_kind, graph_kind, compression,
                         topology=topology, drop_p=drop_p,
                         ef_rebase_every=ef_rebase_every)
@@ -236,6 +237,23 @@ def compile_and_measure(cfg, shape, mesh, mixer_kind, want_hlo=True,
         txt = compiled.as_text()
         colls = parse_collectives(txt, world_size=mesh.devices.size)
         out["collectives"] = collective_summary(colls)
+    if audit:
+        # static-analysis pass over the program that just compiled: stray
+        # host callbacks (anything outside repro.obs) and scalar baked
+        # constants (recompile hazards) — repro.analysis.audit
+        from repro.analysis.audit import (
+            audit_baked_consts, audit_host_callbacks,
+        )
+
+        closed = jax.make_jaxpr(fn)(*args)
+        findings = (audit_host_callbacks(closed)
+                    + audit_baked_consts(closed))
+        out["audit"] = [str(f) for f in findings]
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            raise RuntimeError(
+                "audit errors in compiled program: "
+                + "; ".join(str(f) for f in errors))
     return out
 
 
@@ -295,7 +313,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
             keep_chunking: bool = False, variant: str = "",
             hier_nodes: int = 0, remat_policy: str = "",
             topology: str = "dropout", drop_p: float = 0.2,
-            ef_rebase_every: int = 8) -> dict | None:
+            ef_rebase_every: int = 8, audit: bool = False) -> dict | None:
     cfg = get_arch(arch)
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -352,7 +370,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mixer_kind: str,
                                   graph_kind=graph_kind,
                                   compression=compression,
                                   topology=topology, drop_p=drop_p,
-                                  ef_rebase_every=ef_rebase_every)
+                                  ef_rebase_every=ef_rebase_every,
+                                  audit=audit)
         fitted = fit_scan_correction(cfg, shape, mesh, mixer_kind,
                                      graph_kind=graph_kind,
                                      compression=compression,
@@ -423,6 +442,10 @@ def main():
     ap.add_argument("--hier-nodes", type=int, default=0,
                     help="hierarchical mode: K nodes x (chips/16K) FSDP x 16 TP")
     ap.add_argument("--remat-policy", default="", choices=["", "full", "dots"])
+    ap.add_argument("--audit", action="store_true",
+                    help="run the repro.analysis.audit static passes (host "
+                         "callbacks, baked scalar consts) over each compiled "
+                         "combination; errors fail the combination")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -448,7 +471,8 @@ def main():
                             hier_nodes=args.hier_nodes,
                             remat_policy=args.remat_policy,
                             topology=args.topology, drop_p=args.drop_p,
-                            ef_rebase_every=args.ef_rebase_every)
+                            ef_rebase_every=args.ef_rebase_every,
+                            audit=args.audit)
                 except Exception as e:  # a failure here is a sharding bug
                     failures.append((arch, shape, multi, repr(e)))
                     print(f"[FAIL] {arch} {shape} multi={multi}: {e!r}",

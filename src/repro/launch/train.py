@@ -34,6 +34,13 @@ sparsification with ``--compress-ratio``), all with error-feedback
 innovation gossip so convergence tracks the uncompressed mixer while the
 per-round ``comm_bytes`` metric drops 2-50x.
 
+Sanitizer (``repro.analysis``): ``--sanitize`` checkify-wraps the compiled
+step with runtime invariant checks — doubly-stochastic W each round, CHOCO
+error-feedback cache drift, finite post-dequant parameters, in-container
+codec rate.  A violation raises host-side at the next segment boundary; the
+trajectory is bit-exact with the flag off (see EXPERIMENTS.md
+§Static-analysis for the measured overhead).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
       --steps 20 --nodes 4 --batch-per-node 2 --seq-len 64
@@ -87,7 +94,8 @@ def train_lm(args, sink: MetricsSink):
         "meta", 0, arch=cfg.name, params=model.num_params(), nodes=k,
         rho=round(trainer.rho, 4), mu=args.mu, robust=spec.robust,
         compress=args.compress, topology=spec.topology,
-        local_updates=spec.local_updates, steps=args.steps)))
+        local_updates=spec.local_updates, steps=args.steps,
+        sanitize=spec.sanitize)))
     state = trainer.init(model.init(jax.random.PRNGKey(args.seed)))
     streams = make_node_token_streams(k, cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -155,7 +163,7 @@ def train_paper(args, sink: MetricsSink):
         "meta", 0, paper=args.paper, nodes=k, steps=steps, batch=bsz,
         lr=spec.lr, mu=args.mu, rho=round(trainer.rho, 4),
         compress=args.compress, topology=spec.topology,
-        local_updates=spec.local_updates)))
+        local_updates=spec.local_updates, sanitize=spec.sanitize)))
 
     def sample_batch(step):
         xb, yb = fed.sample_batch(rng, bsz)

@@ -30,6 +30,20 @@ _DTYPE_BYTES = {
     "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
 }
 
+_NP_TO_HLO = {
+    "float32": "f32", "bfloat16": "bf16", "float16": "f16", "float64": "f64",
+    "int8": "s8", "uint8": "u8", "int16": "s16", "uint16": "u16",
+    "int32": "s32", "uint32": "u32", "int64": "s64", "uint64": "u64",
+    "bool": "pred",
+}
+
+
+def hlo_dtype_name(dtype) -> str:
+    """The HLO shape-prefix name of a numpy/jax dtype (f32, s8, ...)."""
+    name = np.dtype(dtype).name
+    return _NP_TO_HLO.get(name, name)
+
+
 _COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
     "collective-permute",
@@ -47,19 +61,27 @@ class CollectiveOp:
     group_size: int
     wire_bytes: float       # per-device bytes on the interconnect
     line: str
+    # per-device result bytes split by element dtype, ((dtype, bytes), ...)
+    # — what the dtype-discipline audit (repro.analysis.audit) checks
+    bytes_by_dtype: tuple = ()
 
 
-def _result_bytes(lhs: str) -> int:
-    """Sum element bytes over all shapes on the LHS of the = (handles tuples)."""
-    total = 0
+def _result_bytes_by_dtype(lhs: str) -> dict[str, int]:
+    """Per-dtype element bytes over all shapes on the LHS of the = ."""
+    out: dict[str, int] = {}
     for dtype, dims in _SHAPE_RE.findall(lhs):
         if dtype not in _DTYPE_BYTES:
             continue
         n = 1
         if dims:
             n = int(np.prod([int(d) for d in dims.split(",") if d]))
-        total += n * _DTYPE_BYTES[dtype]
-    return total
+        out[dtype] = out.get(dtype, 0) + n * _DTYPE_BYTES[dtype]
+    return out
+
+
+def _result_bytes(lhs: str) -> int:
+    """Sum element bytes over all shapes on the LHS of the = (handles tuples)."""
+    return sum(_result_bytes_by_dtype(lhs).values())
 
 
 def _group_size(line: str, default: int) -> int:
@@ -104,7 +126,8 @@ def parse_collectives(hlo_text: str, world_size: int) -> list[CollectiveOp]:
             # (including async `-start` forms), not metadata mentions
             m = re.search(rf"^(.*?)\b{kind}(-start)?\(", rhs)
             if m:
-                rb = _result_bytes(m.group(1))
+                by_dtype = _result_bytes_by_dtype(m.group(1))
+                rb = sum(by_dtype.values())
                 n = _group_size(stripped, world_size)
                 ops.append(CollectiveOp(
                     kind=kind,
@@ -112,6 +135,7 @@ def parse_collectives(hlo_text: str, world_size: int) -> list[CollectiveOp]:
                     group_size=n,
                     wire_bytes=_wire_bytes(kind, rb, n),
                     line=stripped[:200],
+                    bytes_by_dtype=tuple(sorted(by_dtype.items())),
                 ))
                 break
     return ops

@@ -5,7 +5,6 @@ these tests cover the pure helpers on the single CPU device.)
 """
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -86,7 +85,7 @@ def test_batch1_cache_shards_sequence():
 
 
 def test_mesh_helpers():
-    from repro.launch.mesh import data_axes, node_axes
+    from repro.launch.mesh import node_axes
 
     class FakeMesh:
         axis_names = ("pod", "data", "model")

@@ -565,16 +565,17 @@ def test_dynamic_gossip_wire_matches_hlo_collective_permute():
     authoritative figure.  Cross-check the static estimate against the
     compiled-HLO collective-permute bytes for the plain, memoryless-int8,
     EF-delta (B=0) and EF-re-base (B=1) programs, and a B=4 program whose
-    HLO carries BOTH round modes."""
+    HLO carries BOTH round modes.  Each lowering also passes the
+    ``repro.analysis`` declared-vs-compiled wire audit clean."""
     script = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.analysis import audit_wire, wire_summary
 from repro.comm import CompressionConfig
 from repro.dynamics import (DynamicCompressedGossipMixer, DynamicGossipMixer,
                             DropoutSchedule, StaticSchedule)
 from repro.graphs import metropolis_weights, ring_graph
 from repro.utils.compat import make_auto_mesh
-from repro.utils.hlo import parse_collectives
 
 k = 8
 w = metropolis_weights(ring_graph(k))
@@ -583,46 +584,47 @@ specs = {"a": P("data", None), "b": P("data", None, None)}
 theta = {"a": jnp.zeros((k, 64), jnp.float32),
          "b": jnp.zeros((k, 3, 5), jnp.float32)}
 
-def cp_bytes(mixer):
-    st = mixer.init_state(theta)
-    compiled = jax.jit(mixer).lower(theta, st).compile()
-    ops = [o for o in parse_collectives(compiled.as_text(), world_size=k)
-           if o.kind == "collective-permute"]
-    assert ops, "no collective-permute in compiled program"
-    return sum(o.wire_bytes for o in ops) * k
+def wire(mixer):
+    findings = audit_wire(mixer, theta)
+    assert findings == [], findings
+    s = wire_summary(mixer, theta)
+    assert s["ops"], "no collective-permute in compiled program"
+    return s
 
 cc = CompressionConfig(kind="int8", seed=0)
 plain = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh, "data", specs)
-assert cp_bytes(plain) == plain.bytes_per_round(theta)
+assert wire(plain)["total"] == plain.bytes_per_round(theta)
 
 mem = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh, "data", specs,
     quantized=CompressionConfig(kind="int8", error_feedback=False))
-assert cp_bytes(mem) == mem.bytes_per_round(theta)
+s_mem = wire(mem)
+assert s_mem["total"] == mem.bytes_per_round(theta)
+assert s_mem["by_dtype"].get("s8", 0) > 0, "int8 payload not on the wire"
 
 # int4 rate rides the int8 container: the wire moves the same s8 buffers
 # (HLO bytes unchanged) while the effective-bit accounting halves the
 # entry bits — the scheduled-rate convention of repro.comm
 mem4 = DynamicGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh, "data",
     specs, quantized=CompressionConfig(kind="int4", error_feedback=False))
-assert cp_bytes(mem4) == cp_bytes(mem)
+assert wire(mem4)["total"] == s_mem["total"]
 assert mem4.bytes_per_round(theta) < mem.bytes_per_round(theta)
 
 delta = DynamicCompressedGossipMixer(StaticSchedule(w), mesh, "data", specs,
                                      cc, ef_rebase_every=0)
-d_bytes = cp_bytes(delta)
+d_bytes = wire(delta)["total"]
 assert d_bytes == delta.bytes_per_round(theta), (
     d_bytes, delta.bytes_per_round(theta))
 
 rebase = DynamicCompressedGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh,
                                       "data", specs, cc, ef_rebase_every=1)
-r_bytes = cp_bytes(rebase)
+r_bytes = wire(rebase)["total"]
 assert r_bytes == rebase.bytes_per_round(theta), (
     r_bytes, rebase.bytes_per_round(theta))
 
 # B >= 2: ONE program holds both round modes -> HLO carries both wires
 both = DynamicCompressedGossipMixer(DropoutSchedule(w, 0.2, seed=1), mesh,
                                     "data", specs, cc, ef_rebase_every=4)
-assert cp_bytes(both) == d_bytes + r_bytes
+assert wire(both)["total"] == d_bytes + r_bytes
 # amortized static estimate sits between the two modes
 assert d_bytes < both.bytes_per_round(theta) < r_bytes
 

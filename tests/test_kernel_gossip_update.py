@@ -6,8 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.graphs import metropolis_weights, permutation_decomposition, \
-    ring_graph
+from repro.graphs import metropolis_weights, ring_graph
 from repro.kernels.gossip_update.ops import gossip_update_flat, \
     gossip_update_tree
 from repro.kernels.gossip_update.ref import gossip_update_ref

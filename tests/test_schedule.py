@@ -340,13 +340,14 @@ def _run_subprocess(script, devices=8):
 def test_comm_bytes_matches_hlo_collective_permute():
     """ROADMAP satellite: the static per-round estimate must equal the byte
     count of the collective-permute ops in the compiled gossip program (and
-    the int8 path must put s8 tensors on the wire)."""
+    the int8 path must put s8 tensors on the wire).  Cross-checked through
+    the ``repro.analysis`` auditor API."""
     script = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.analysis import audit_wire, wire_summary
 from repro.core import CompressionConfig, make_gossip_mixer
 from repro.graphs import ring_graph, metropolis_weights, permutation_decomposition
-from repro.utils.hlo import parse_collectives
 k = 8
 w = metropolis_weights(ring_graph(k))
 d = permutation_decomposition(w)
@@ -356,16 +357,15 @@ theta = {"a": jnp.zeros((k, 256), jnp.float32),
 specs = {"a": P("data", None), "b": P("data", None)}
 gm = make_gossip_mixer(d, mesh, "data", specs,
                        compression=CompressionConfig(kind="int8"))
-st = gm.init_state(theta)
-compiled = jax.jit(gm).lower(theta, st).compile()
-ops = [o for o in parse_collectives(compiled.as_text(), world_size=k)
-       if o.kind == "collective-permute"]
-assert ops, "no collective-permute in compiled gossip program"
-assert any("s8[" in o.line for o in ops), "int8 payload not on the wire"
-# per-device cp bytes x K devices == the static all-senders estimate
-hlo_bytes = sum(o.wire_bytes for o in ops) * k
+# declared physical wire == compiled collective-permute bytes, per dtype
+findings = audit_wire(gm, theta)
+assert findings == [], findings
+summary = wire_summary(gm, theta)
+assert summary["ops"], "no collective-permute in compiled gossip program"
+assert summary["by_dtype"].get("s8", 0) > 0, "int8 payload not on the wire"
+# whole-graph cp bytes == the static all-senders estimate
 est = gm.bytes_per_round(theta)
-assert hlo_bytes == est, (hlo_bytes, est)
+assert summary["total"] == est, (summary["total"], est)
 print("OK")
 """
     _run_subprocess(script)

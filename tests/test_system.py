@@ -8,7 +8,6 @@ accuracy up, per-node accuracy variance down, average accuracy comparable.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import DecentralizedTrainer, RobustConfig
 from repro.data import make_fmnist_like, pathological_noniid_partition
