@@ -1,9 +1,17 @@
-"""Serving scenario: batched prefill + autoregressive decode with KV cache.
+"""Serving scenario: static-batch generation, then the continuous engine.
 
-Demonstrates the decode path the dry-run lowers at decode_32k / long_500k:
-prefill a prompt batch through `model.prefill` (builds the cache), then
-stream tokens through `model.decode_step`. Works for every assigned arch
-family, including the recurrent ones (RWKV6 state, Jamba mamba+KV hybrid).
+Two escalating demos of the decode path the dry-run lowers at decode_32k /
+long_500k:
+
+1. Static batch — ``repro.serve.greedy_generate``: one compiled prefill
+   for the prompt batch, then a fused sample+decode step per token (token
+   selection happens *inside* the jit; the host never sees logits).  Works
+   for every assigned arch family, including the recurrent ones (RWKV6
+   state, Jamba mamba+KV hybrid) and prefix frontends (teacher-forced
+   fallback).
+2. Continuous batching — ``repro.serve.ServeEngine``: requests of mixed
+   prompt/gen lengths arrive over time into a paged KV pool; one compiled
+   decode step serves all of it without recompiling (token frontends only).
 
 Run:  PYTHONPATH=src python examples/serve_decode.py --arch jamba_1_5_large_398b
       (smoke-width by default; arch family is what matters)
@@ -18,6 +26,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import TransformerLM
+from repro.serve import Request, ServeEngine, greedy_generate
 
 
 def main():
@@ -38,46 +47,34 @@ def main():
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
-    cache_len = args.prompt_len + args.gen_len
 
-    # prefill builds the cache in ONE compiled pass (full-sequence chunked
-    # attention); its per-layer caches are scattered into the decode cache.
-    # Prefix-frontend archs (pixtral/musicgen) need their embeddings fed to
-    # prefill, so they keep the teacher-forced decode loop.
-    from repro.launch.serve import merge_prefill_cache
-
-    decode = jax.jit(model.decode_step, donate_argnums=(3,))
+    # -- 1. static batch: compiled prefill + fused sample/decode steps --------
     t0 = time.time()
-    if cfg.frontend == "token":
-        logits, pf_caches = jax.jit(model.prefill)(params, {"tokens": prompt})
-        cache = merge_prefill_cache(model, pf_caches, args.batch, cache_len,
-                                    args.prompt_len)
-        jax.block_until_ready(logits)
-    else:
-        cache = model.init_cache(args.batch, cache_len)
-        logits = None
-        for t in range(args.prompt_len):
-            logits, cache = decode(params, prompt[:, t:t + 1], jnp.int32(t),
-                                   cache)
-    t_prefill = time.time() - t0
-
-    # ...then decode streams one token at a time against it
-    key = jax.random.PRNGKey(1)
-    out = []
-    t0 = time.time()
-    for t in range(args.gen_len):
-        key, sub = jax.random.split(key)
-        tok = jax.random.categorical(sub, logits / args.temperature, axis=-1)
-        out.append(np.asarray(tok))
-        logits, cache = decode(params, tok[:, None].astype(jnp.int32),
-                               jnp.int32(args.prompt_len + t), cache)
-    t_decode = time.time() - t0
-
-    gen = np.stack(out, axis=1)
-    print(f"prefill {args.prompt_len} tok x {args.batch} seqs: {t_prefill:.2f}s")
-    print(f"decode  {args.gen_len} tok x {args.batch} seqs: {t_decode:.2f}s "
-          f"({args.gen_len * args.batch / t_decode:.1f} tok/s)")
+    gen = np.asarray(greedy_generate(model, params, prompt, args.gen_len,
+                                     temperature=args.temperature, seed=1))
+    dt = time.time() - t0
+    print(f"static batch: ({args.batch}, {args.gen_len}) tokens in {dt:.2f}s "
+          f"(incl. compile)")
     print("sample tokens:", gen[0][:12])
+
+    # -- 2. continuous batching over a paged KV pool --------------------------
+    if cfg.frontend != "token":
+        print("engine demo skipped (prefix frontend)")
+        return
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, (s0,)).astype(np.int32),
+                max_new=n, arrival=float(arr))
+        for i, (s0, n, arr) in enumerate(
+            [(8, 6, 0), (16, 4, 0), (8, 8, 2), (1, 5, 4), (16, 6, 6)])
+    ]
+    engine = ServeEngine(model, params, max_batch=2, max_len=24, page_size=4)
+    report = engine.run(reqs, clock="steps")
+    print(f"engine: {report['completed']} requests through 2 slots in "
+          f"{report['steps']} steps, one decode program "
+          f"(programs={report['programs']['serve_decode_step']})")
+    for c in sorted(report["completions"], key=lambda c: c.rid):
+        print(f"  rid {c.rid}: s0={c.s0:2d} -> {c.n_tokens} tokens "
+              f"{np.asarray(c.tokens[:6])}")
 
 
 if __name__ == "__main__":

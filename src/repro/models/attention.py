@@ -156,6 +156,160 @@ def attention_forward(p, x, cfg: ArchConfig, *, kind: str, positions,
     return proj
 
 
+# -- paged KV cache (repro.serve) ---------------------------------------------
+#
+# A paged cache stores one layer's KV in a shared pool of fixed-size pages,
+# ``(num_pages, page_size, kvh, hd)``, addressed through a per-slot block
+# table ``(B, n_blocks) int32``: logical ring position ``s`` of slot ``i``
+# lives at ``pool[table[i, s // page_size], s % page_size]``.  Evicting a
+# request frees its pages back to the pool without reshaping anything; the
+# table is a *traced* operand, so admissions/evictions never recompile.
+#
+# Quantized pools keep the payload in int8 with per-(token, block) float32
+# scales — the same blockwise-absmax layout as the ``quant_gossip`` wire
+# kernels (``KV_SCALE_BLOCK`` = 128 keeps a scale per int8 tile lane group),
+# but with round-to-nearest (u = 0.5) instead of stochastic rounding: a KV
+# write must be deterministic so an A/B replay generates identical tokens.
+
+#: feature-dim block one float32 scale covers in a quantized pool (the 128
+#: lanes of the (32, 128) int8 TPU tile; rows = page slots)
+KV_SCALE_BLOCK = 128
+
+
+def paged_kv_len(cfg: ArchConfig, kind: str, max_len: int) -> int:
+    """Logical ring length of a paged layer (sliding window caps "swa")."""
+    t = max_len
+    if kind == "swa" and cfg.sliding_window is not None:
+        t = min(t, cfg.sliding_window)
+    return t
+
+
+def kv_scale_blocks(cfg: ArchConfig, scale_block: int = KV_SCALE_BLOCK) -> int:
+    """Scales per token a quantized pool stores (mirrors the kernel layout)."""
+    from repro.kernels.quant_gossip.kernel import num_blocks
+
+    return num_blocks(cfg.n_kv_heads * cfg.resolved_head_dim, scale_block)
+
+
+def init_paged_kv(cfg: ArchConfig, num_pages: int, page_size: int, *,
+                  quantized: bool, scale_block: int = KV_SCALE_BLOCK):
+    """Zeroed page pool for one attention layer (page 0 is the trash page)."""
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (num_pages, page_size, kvh, hd)
+    if not quantized:
+        return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                "v": jnp.zeros(shape, cfg.compute_dtype)}
+    s = kv_scale_blocks(cfg, scale_block)
+    return {"k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros((num_pages, page_size, s), jnp.float32),
+            "v_scale": jnp.zeros((num_pages, page_size, s), jnp.float32)}
+
+
+def quantize_kv_rows(x, *, scale_block: int = KV_SCALE_BLOCK):
+    """(N, D) -> (q int8 (N, D), scales f32 (N, S)), round-to-nearest.
+
+    Reuses the ``quant_gossip`` blockwise-quantize Pallas kernel (jnp oracle
+    off-TPU) with u = 0.5, i.e. ``round(x / scale)`` — the cache write path
+    is deterministic, unlike the stochastically-rounded gossip wire.
+    """
+    from repro.kernels.quant_gossip import ops as qops
+
+    x = x.astype(jnp.float32)
+    u = jnp.full(x.shape, 0.5, jnp.float32)
+    return qops.quantize_blockwise(x, u, qmax=127, block_d=scale_block)
+
+
+def _expand_kv_scales(scales, d: int):
+    """(..., S) per-block scales -> (..., D) per-element multipliers."""
+    return jnp.repeat(scales, d // scales.shape[-1], axis=-1)
+
+
+def paged_kv_write(pool, k, v, page_ids, offsets, *,
+                   scale_block: int = KV_SCALE_BLOCK):
+    """Scatter one new token per slot into the pool.
+
+    k, v: (B, kvh, hd); page_ids, offsets: (B,) int32 (inactive slots point
+    at the trash page, so their writes land nowhere that is ever read).
+    """
+    b, kvh, hd = k.shape
+    if "k_scale" not in pool:
+        return {"k": pool["k"].at[page_ids, offsets].set(
+                    k.astype(pool["k"].dtype)),
+                "v": pool["v"].at[page_ids, offsets].set(
+                    v.astype(pool["v"].dtype))}
+    qk, sk = quantize_kv_rows(k.reshape(b, kvh * hd), scale_block=scale_block)
+    qv, sv = quantize_kv_rows(v.reshape(b, kvh * hd), scale_block=scale_block)
+    return {
+        "k": pool["k"].at[page_ids, offsets].set(qk.reshape(b, kvh, hd)),
+        "v": pool["v"].at[page_ids, offsets].set(qv.reshape(b, kvh, hd)),
+        "k_scale": pool["k_scale"].at[page_ids, offsets].set(sk),
+        "v_scale": pool["v_scale"].at[page_ids, offsets].set(sv),
+    }
+
+
+def paged_kv_gather(pool, table, t: int, out_dtype):
+    """Read (k, v) (B, t, kvh, hd) through the block table, dequantizing.
+
+    ``table`` (B, n_blocks) int32 with n_blocks * page_size >= t.  Unwritten
+    logical slots come back as whatever the page holds — callers mask
+    validity by position exactly as the contiguous decode path does.
+    """
+    ps, kvh, hd = pool["k"].shape[1:]
+    d = kvh * hd
+
+    def one(name):
+        g = pool[name][table]                       # (B, NB, ps, kvh, hd)
+        b, nb = g.shape[:2]
+        g = g.reshape(b, nb * ps, kvh, hd)[:, :t]
+        if name + "_scale" not in pool:
+            return g.astype(out_dtype)
+        s = pool[name + "_scale"][table]            # (B, NB, ps, S)
+        s = s.reshape(b, nb * ps, -1)[:, :t]
+        full = g.astype(jnp.float32).reshape(b, t, d) * _expand_kv_scales(s, d)
+        return full.reshape(b, t, kvh, hd).astype(out_dtype)
+
+    return one("k"), one("v")
+
+
+def paged_attention_decode(p, x, cfg: ArchConfig, *, kind: str, pool, table,
+                           pos, max_len: int,
+                           scale_block: int = KV_SCALE_BLOCK):
+    """Single-token decode against a paged pool, per-slot positions.
+
+    x: (B, 1, D); pos: (B,) int32 (each serving slot at its own position);
+    pool: one layer's page pool; table: (B, n_blocks) int32.  Returns
+    (out (B, 1, D), new_pool).  Identical math to :func:`attention_decode` —
+    with an f32 pool and lockstep positions the logits are bit-equal.
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    t = paged_kv_len(cfg, kind, max_len)
+    ps = pool["k"].shape[1]
+    q, k, v = _project_qkv(p, x, cfg, pos[:, None])
+
+    slot = pos % t  # ring position, exactly as the contiguous cache
+    page_ids = jnp.take_along_axis(table, (slot // ps)[:, None], axis=1)[:, 0]
+    with jax.named_scope("obs:serve/kv_write"):
+        pool = paged_kv_write(pool, k[:, 0], v[:, 0], page_ids, slot % ps,
+                              scale_block=scale_block)
+    ck, cv = paged_kv_gather(pool, table, t, pool["k"].dtype
+                             if "k_scale" not in pool else cfg.compute_dtype)
+
+    idx = jnp.arange(t)
+    valid = (idx[None, :] <= pos[:, None]) | (pos[:, None] >= t)  # (B, t)
+    scale = 1.0 / (hd ** 0.5)
+    qh = q.reshape(b, 1, kvh, g, hd)
+    sc = _scores(qh, ck, scale, cfg.attn_softcap)             # (B,KV,G,1,T)
+    sc = jnp.where(valid[:, None, None, None, :], sc, -1e30)
+    att = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", att, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    return proj, pool
+
+
 def attention_decode(p, x, cfg: ArchConfig, *, kind: str, cache, pos):
     """Single-token decode. x: (B,1,D); pos: scalar int; cache: {k,v}.
 

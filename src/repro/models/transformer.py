@@ -35,6 +35,8 @@ from repro.models.attention import (
     attention_decode,
     attention_forward,
     init_kv_cache,
+    init_paged_kv,
+    paged_attention_decode,
 )
 from repro.models.config import ArchConfig, ShapeConfig
 from repro.models.layers import (
@@ -239,12 +241,21 @@ class TransformerLM:
                 aux = aux + moe_aux
         return x, aux, new_cache
 
-    def _apply_layer_decode(self, p, x, blk, ffn, pos, cache):
+    def _apply_layer_decode(self, p, x, blk, ffn, pos, cache, *,
+                            tables=None, max_len=None):
+        """One decode layer.  ``tables`` switches attn/swa layers onto the
+        paged read/write path (``pos`` is then per-slot (B,) instead of a
+        scalar); recurrent layers are per-slot rows either way."""
         cfg = self.cfg
         h = rmsnorm(p["norm1"], x, cfg.rmsnorm_eps)
         if blk in ("attn", "swa"):
-            out, new_cache = attention_decode(p["mix"], h, cfg, kind=blk,
-                                              cache=cache, pos=pos)
+            if tables is not None:
+                out, new_cache = paged_attention_decode(
+                    p["mix"], h, cfg, kind=blk, pool=cache,
+                    table=tables[blk], pos=pos, max_len=max_len)
+            else:
+                out, new_cache = attention_decode(p["mix"], h, cfg, kind=blk,
+                                                  cache=cache, pos=pos)
         elif blk == "mamba":
             out, new_cache = mamba_forward(p["mix"], h, cfg, cache)
         elif blk == "rwkv":
@@ -433,11 +444,54 @@ class TransformerLM:
         }
         return {"head": head, "groups": group}
 
+    def init_paged_cache(self, batch: int, num_pages: dict, page_size: int,
+                         *, quantized: bool):
+        """Paged decode cache: attn/swa layers become shared page pools
+        (``num_pages`` per layer, keyed by block kind), recurrent layers
+        stay per-slot (batch, ...) rows.  Structure mirrors
+        :meth:`init_cache` so the group scan carries it unchanged.
+        """
+        cfg = self.cfg
+
+        def layer_cache(blk):
+            if blk in ("attn", "swa"):
+                return init_paged_kv(cfg, num_pages[blk], page_size,
+                                     quantized=quantized)
+            if blk == "mamba":
+                return mamba_init_state(cfg, batch)
+            if blk == "rwkv":
+                return rwkv_init_state(cfg, batch)
+            raise ValueError(blk)
+
+        head = [layer_cache(blk) for blk, _ in cfg.head_layers()]
+        group = {
+            f"l{i}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.n_groups,) + x.shape),
+                layer_cache(blk))
+            for i, (blk, _) in enumerate(cfg.group_pattern())
+        }
+        return {"head": head, "groups": group}
+
     def decode_step(self, params, token, pos, cache):
         """One decode step. token: (B,1) int32; pos: scalar int32.
 
         Returns (logits (B, vocab), new_cache).
         """
+        return self._decode_common(params, token, pos, cache)
+
+    def paged_decode_step(self, params, token, pos, cache, tables, *,
+                          max_len: int):
+        """One decode step against a paged cache (:meth:`init_paged_cache`).
+
+        token: (B, 1) int32; pos: (B,) int32 per-slot positions; tables:
+        {kind: (B, n_blocks) int32} traced block tables.  ``max_len`` is the
+        logical ring length of full-attention layers (static).
+        """
+        return self._decode_common(params, token, pos, cache,
+                                   tables=tables, max_len=max_len)
+
+    def _decode_common(self, params, token, pos, cache, tables=None,
+                       max_len=None):
         cfg = self.cfg
         x = embed(params["embedding"], token, cfg.compute_dtype)
         pattern = cfg.group_pattern()
@@ -445,7 +499,7 @@ class TransformerLM:
         for i, (blk, ffn) in enumerate(cfg.head_layers()):
             x, c = self._apply_layer_decode(
                 params["head_layers"][f"h{i}"], x, blk, ffn, pos,
-                cache["head"][i])
+                cache["head"][i], tables=tables, max_len=max_len)
             new_head.append(c)
 
         def group_body(x, inp):
@@ -453,7 +507,8 @@ class TransformerLM:
             new_gc = {}
             for i, (blk, ffn) in enumerate(pattern):
                 x, c = self._apply_layer_decode(
-                    gp[f"l{i}"], x, blk, ffn, pos, gc[f"l{i}"])
+                    gp[f"l{i}"], x, blk, ffn, pos, gc[f"l{i}"],
+                    tables=tables, max_len=max_len)
                 new_gc[f"l{i}"] = c
             return x, new_gc
 

@@ -37,6 +37,7 @@ from repro.obs.sink import (
     format_meta,
     format_perf,
     format_record,
+    format_serve,
     format_train,
 )
 from repro.obs.watchdog import (
@@ -50,7 +51,7 @@ from repro.obs.watchdog import (
 __all__ = [
     "SCHEMA_VERSION", "validate_jsonl", "validate_record",
     "MetricsSink", "format_train", "format_eval", "format_perf",
-    "format_meta", "format_record",
+    "format_meta", "format_record", "format_serve",
     "PhaseTimer", "scope", "host_scope", "profile", "find_perfetto_trace",
     "RecompileWatchdog", "RecompileError", "CompileCounter",
     "expect_compiles", "jit_cache_size",

@@ -31,6 +31,13 @@ fields.  The kinds:
     One free-form record at the head of the stream describing the run
     configuration (arch, nodes, codec, topology, ...).
 
+``serve``
+    Periodic engine heartbeat of a :class:`repro.serve.ServeEngine` run
+    (``step`` is the decode-step index): batch occupancy (``active_slots``,
+    ``queued``) and KV-pool pressure (``kv_occupancy``, worst kind), plus
+    throughput/latency rollups (``decode_tok_s``, ``step_ms``) and lifetime
+    counters (``admitted``, ``completed``).
+
 Extra fields are always allowed (``aux_*`` losses, config keys); the
 validator checks the envelope, the kind-required fields, and field types.
 
@@ -72,6 +79,11 @@ REQUIRED_FIELDS: dict[str, dict[str, str]] = {
         "wall_s": "f",
     },
     "meta": {},
+    "serve": {
+        "active_slots": "i",
+        "queued": "i",
+        "kv_occupancy": "f",
+    },
 }
 
 #: kind -> {field: type} that MAY be present and is type-checked when it is
@@ -93,6 +105,15 @@ OPTIONAL_FIELDS: dict[str, dict[str, str]] = {
         "wire_bytes_per_s": "f",
     },
     "meta": {},
+    "serve": {
+        "admitted": "i",
+        "completed": "i",
+        "kv_pages_used": "i",
+        "kv_pages_total": "i",
+        "decode_tok_s": "f",
+        "prefill_tok_s": "f",
+        "step_ms": "f",
+    },
 }
 
 

@@ -216,10 +216,22 @@ def format_meta(rec: dict) -> str:
     return " ".join(f"{k}={rec[k]}" for k in rec if k not in skip)
 
 
+def format_serve(rec: dict) -> str:
+    line = (f"serve step {rec['step']:6d} active={rec['active_slots']:3d} "
+            f"queued={rec['queued']:3d} kv_occ={rec['kv_occupancy']:.2f}")
+    if "decode_tok_s" in rec:
+        line += f" decode_tok/s={rec['decode_tok_s']:.1f}"
+    if "step_ms" in rec:
+        line += f" step={rec['step_ms']:.2f}ms"
+    if "completed" in rec:
+        line += f" done={rec['completed']}/{rec.get('admitted', 0)}"
+    return line
+
+
 def format_record(rec: dict, **kw) -> str:
     """Render one telemetry record as the console line for its kind."""
     fmt = {"train": format_train, "eval": format_eval, "perf": format_perf,
-           "meta": format_meta}.get(rec.get("kind"))
+           "meta": format_meta, "serve": format_serve}.get(rec.get("kind"))
     if fmt is None:
         return json.dumps(rec)
     return fmt(rec, **kw) if rec.get("kind") == "train" else fmt(rec)

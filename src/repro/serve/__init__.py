@@ -1,0 +1,46 @@
+"""``repro.serve`` — continuous-batching inference over a paged KV pool.
+
+The serving counterpart of the training stack's traced-operand discipline:
+one compiled decode step (fixed ``max_batch`` slots, per-slot
+active/position/table operands) drains an entire open-loop trace of
+arrivals, completions and EOS without a single recompile, reading and
+writing KV through block tables into shared page pools (f32 or int8 with
+blockwise scales, the ``quant_gossip`` wire layout).
+
+Pieces:
+
+* :class:`ServeEngine` (:mod:`repro.serve.engine`) — the engine: jitted
+  decode+sample step, jitted per-prompt-length admission prefill, host
+  loop that only moves int32 tokens.
+* :class:`Scheduler` / :class:`PageAllocator`
+  (:mod:`repro.serve.scheduler`, :mod:`repro.serve.pool`) — host-side
+  slot/page admission control (FIFO, whole-reservation).
+* :mod:`repro.serve.prefill` — prompt ingestion into contiguous and paged
+  caches; the static-batch :func:`greedy_generate` reference loop.
+* :mod:`repro.serve.traffic` — open-loop Poisson traces over mixed
+  request classes.
+* :mod:`repro.serve.sampling` — in-jit token selection (traced per-slot
+  temperature).
+"""
+
+from repro.serve.engine import Completion, ServeEngine
+from repro.serve.pool import PageAllocator, TRASH_PAGE, pages_needed
+from repro.serve.prefill import (
+    clear_slot_state,
+    greedy_generate,
+    merge_prefill_cache,
+    place_paged_prefill,
+)
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import Admission, Request, Scheduler
+from repro.serve.traffic import SMOKE_CLASSES, TrafficClass, poisson_trace
+
+__all__ = [
+    "ServeEngine", "Completion",
+    "Scheduler", "Request", "Admission",
+    "PageAllocator", "TRASH_PAGE", "pages_needed",
+    "greedy_generate", "merge_prefill_cache", "place_paged_prefill",
+    "clear_slot_state",
+    "sample_tokens",
+    "TrafficClass", "SMOKE_CLASSES", "poisson_trace",
+]

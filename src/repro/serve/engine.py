@@ -1,0 +1,409 @@
+"""Continuous-batching decode engine over a paged (optionally int8) KV pool.
+
+One compiled decode step serves an entire open-loop trace.  The batch is a
+fixed shape of ``max_batch`` slots; everything that changes as requests
+arrive, finish, or hit EOS is a *traced operand* of that one program:
+
+  ====================  =========  ==============================================
+  operand               shape      role
+  ====================  =========  ==============================================
+  ``tok``               (B, 1)     each slot's last token (next input)
+  ``pos``               (B,)       per-slot decode position
+  ``active``            (B,)       slot occupancy mask (gates sampling + finish)
+  ``limit``             (B,)       last position a slot may decode (budget)
+  ``temperature``       (B,)       per-slot sampling temperature (0 = greedy)
+  ``tables[kind]``      (B, NB)    block tables into the shared page pools
+  ``step``              ()         fold_in index for the sampling PRNG stream
+  ====================  =========  ==============================================
+
+The carry (cache + all per-slot operands) lives on the device and the step
+advances it in-jit; the host loop's per-step traffic is exactly one (2, B)
+int32 readback (sampled tokens + next-active mask).  Slot state is written
+from the host only on the rare transitions — admission sets a slot's rows,
+eviction points its table row back at the trash page.  Admission runs one
+jitted prefill-and-scatter program per distinct prompt length (traffic
+classes have fixed prompt lengths, so the set is small and known); a
+:class:`repro.obs.RecompileWatchdog` asserts both budgets.
+
+Slot/page lifecycle: admission reserves the request's worst-case page count
+from the per-kind free lists and writes its block-table row; eviction (EOS
+or budget, decided *inside* the jit via the active mask) frees pages purely
+host-side — no device reshape, the freed pages are simply handed to the
+next admission, whose prefill overwrites them.  Inactive slots keep
+decoding into the trash page (page 0) — masked, never read — which is what
+keeps the program shape-stable at any occupancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import TransformerLM
+from repro.models.attention import paged_kv_len
+from repro.obs import MetricsSink, RecompileWatchdog
+from repro.serve.pool import TRASH_PAGE
+from repro.serve.prefill import clear_slot_state, place_paged_prefill
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import Admission, Request, Scheduler
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished request with its open-loop timing (seconds from run
+    start; ``arrival`` is in trace clock units — seconds or steps)."""
+
+    rid: int
+    cls: str
+    s0: int
+    max_new: int
+    tokens: np.ndarray
+    arrival: float
+    t_enqueue: float
+    t_admit: float
+    t_first: float
+    t_done: float
+    ttft: float                 # first token latency incl. queueing
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def per_token_s(self) -> float:
+        """Mean inter-token latency after the first token."""
+        if self.n_tokens <= 1:
+            return 0.0
+        return (self.t_done - self.t_first) / (self.n_tokens - 1)
+
+
+class ServeEngine:
+    """Fixed-shape continuous-batching engine around one TransformerLM.
+
+    Args:
+      max_batch: decode batch slots (the compiled program's batch).
+      max_len: logical context bound — every request must satisfy
+        ``s0 + max_new - 1 <= max_len`` when the arch has full-attention
+        layers (sliding-window/recurrent layers are rings/states and don't
+        bound request length).
+      page_size: tokens per KV page.
+      num_pages: pages per kind {"attn": n, "swa": n}; default sizes each
+        pool so ``max_batch`` full-length requests fit (never blocks).
+      quantized: int8 KV pool (blockwise scales) instead of f32.
+      eos: token id that terminates a slot (-1 = never).
+    """
+
+    def __init__(self, model: TransformerLM, params, *, max_batch: int,
+                 max_len: int, page_size: int = 8,
+                 num_pages: dict | None = None, quantized: bool = False,
+                 eos: int = -1, seed: int = 0,
+                 sink: MetricsSink | None = None,
+                 watchdog: RecompileWatchdog | None = None,
+                 log_every: int = 64):
+        cfg = model.cfg
+        if cfg.frontend != "token":
+            raise ValueError(
+                f"ServeEngine needs a token frontend (got {cfg.frontend!r}) "
+                "— prefix-frontend archs have no prompt-only prefill")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.page_size = page_size
+        self.quantized = quantized
+        self.eos = eos
+        self.sink = sink
+        self.log_every = log_every
+
+        blocks = {blk for blk, _ in cfg.head_layers()} | {
+            blk for blk, _ in cfg.group_pattern()}
+        self.kinds = sorted(blocks & {"attn", "swa"})
+        self.ring_len = {k: paged_kv_len(cfg, k, max_len) for k in self.kinds}
+        self.n_blocks = {k: -(-t // page_size)
+                         for k, t in self.ring_len.items()}
+        if num_pages is None:
+            num_pages = {k: 1 + max_batch * nb
+                         for k, nb in self.n_blocks.items()}
+        self.num_pages = {k: num_pages[k] for k in self.kinds}
+        self.sched = Scheduler(max_batch, page_size, self.num_pages,
+                               self.ring_len)
+
+        b = max_batch
+        # device-resident carry: the step advances it in-jit; the host only
+        # writes slot rows at admission
+        self._carry = {
+            "cache": model.init_paged_cache(b, self.num_pages, page_size,
+                                            quantized=quantized),
+            "tok": jnp.zeros((b, 1), jnp.int32),
+            "pos": jnp.zeros((b,), jnp.int32),
+            "active": jnp.zeros((b,), bool),
+            "limit": jnp.zeros((b,), jnp.int32),
+            "temp": jnp.zeros((b,), jnp.float32),
+            "key": jax.random.PRNGKey(seed),
+            "step": jnp.int32(0),
+        }
+        self._tables = {k: jnp.full((b, nb), TRASH_PAGE, jnp.int32)
+                        for k, nb in self.n_blocks.items()}
+        self._active_np = np.zeros((b,), bool)
+
+        self._slot_tokens: list[list[int]] = [[] for _ in range(b)]
+        self._slot_meta: list[dict | None] = [None] * b
+        self._steps = 0
+        self._admitted = 0
+        self._completed = 0
+        # compile/steady split: a program's first invocation is charged to
+        # the compile bucket, everything after is steady state
+        self._decode_compiled = False
+        self._decode_compile_s = 0.0
+        self._decode_steady_s = 0.0
+        self._steady_tokens = 0
+        self._steady_steps = 0
+        self._prefill_seen: set[int] = set()
+        self._prefill_compile_s = 0.0
+        self._prefill_steady_s = 0.0
+        self._prefill_tokens = 0
+
+        self._step_fn = jax.jit(self._make_step(), donate_argnums=(1,))
+        self._clear_fn = jax.jit(
+            lambda params, cache, slot: clear_slot_state(
+                self.model, cache, slot),
+            donate_argnums=(1,))
+        self._admit_fns: dict[int, object] = {}
+        self.watchdog = watchdog or RecompileWatchdog(label="serve engine")
+        self.watchdog.track("serve_decode_step", self._step_fn, allowed=1)
+        self.watchdog.track("serve_clear_slot", self._clear_fn, allowed=1)
+
+    # -- compiled programs ----------------------------------------------------
+
+    def _make_step(self):
+        model, max_len, eos = self.model, self.max_len, self.eos
+
+        def step(params, carry, tables):
+            pos, active = carry["pos"], carry["active"]
+            sub = jax.random.fold_in(carry["key"], carry["step"])
+            with jax.named_scope("obs:serve/decode"):
+                logits, cache = model.paged_decode_step(
+                    params, carry["tok"], pos, carry["cache"], tables,
+                    max_len=max_len)
+            with jax.named_scope("obs:serve/sample"):
+                nxt = sample_tokens(logits, sub, carry["temp"])
+            done = (nxt == eos) | (pos >= carry["limit"])
+            still = active & ~done
+            out = jnp.stack([jnp.where(active, nxt, -1),
+                             still.astype(jnp.int32)])
+            carry = dict(
+                carry, cache=cache, active=still,
+                tok=jnp.where(active, nxt, carry["tok"][:, 0])[:, None],
+                pos=jnp.where(active, pos + 1, pos),
+                step=carry["step"] + 1)
+            return carry, out
+
+        return step
+
+    def _admit_fn(self, s0: int):
+        fn = self._admit_fns.get(s0)
+        if fn is not None:
+            return fn
+        model, max_len = self.model, self.max_len
+
+        def admit(params, prompt, cache, rows, slot):
+            with jax.named_scope("obs:serve/prefill"):
+                _, pf = model.prefill(params, {"tokens": prompt})
+            return place_paged_prefill(model, pf, cache, rows, slot, s0,
+                                       max_len)
+
+        fn = jax.jit(admit, donate_argnums=(2,))
+        self._admit_fns[s0] = fn
+        self.watchdog.track(f"serve_admit_s{s0}", fn, allowed=1)
+        return fn
+
+    # -- admission ------------------------------------------------------------
+
+    def _admit(self, adm: Admission, now: float) -> None:
+        req, slot = adm.req, adm.slot
+        s0 = req.s0
+        rows = {}
+        for kind in self._tables:
+            row = np.full((self.n_blocks[kind],), TRASH_PAGE, np.int32)
+            pages = adm.pages[kind]
+            row[:len(pages)] = pages
+            rows[kind] = jnp.asarray(row)
+            self._tables[kind] = self._tables[kind].at[slot].set(rows[kind])
+        c = self._carry
+        t0 = time.monotonic()
+        if s0 == 1:
+            # nothing to prefill, but the slot's recurrent rows still hold
+            # the previous request's state
+            cache = self._clear_fn(self.params, c["cache"], jnp.int32(slot))
+        else:
+            fn = self._admit_fn(s0)
+            prompt = jnp.asarray(req.prompt[None, :s0 - 1])
+            cache = fn(self.params, prompt, c["cache"], rows, jnp.int32(slot))
+            jax.block_until_ready(jax.tree.leaves(cache)[0])
+        dt = time.monotonic() - t0
+        if s0 in self._prefill_seen or s0 == 1:
+            self._prefill_steady_s += dt
+            self._prefill_tokens += s0 - 1
+        else:
+            self._prefill_seen.add(s0)
+            self._prefill_compile_s += dt
+
+        # the shared decode step produces the request's FIRST token: its
+        # input is the last prompt token at position s0-1, so TTFT is the
+        # latency of the slot's first decode step
+        self._carry = dict(
+            c, cache=cache,
+            tok=c["tok"].at[slot, 0].set(int(req.prompt[s0 - 1])),
+            pos=c["pos"].at[slot].set(s0 - 1),
+            active=c["active"].at[slot].set(True),
+            limit=c["limit"].at[slot].set(s0 + req.max_new - 2),
+            temp=c["temp"].at[slot].set(req.temperature))
+        self._active_np[slot] = True
+        self._slot_tokens[slot] = []
+        meta = dict(req=req, t_admit=now, t_first=None)
+        self._slot_meta[slot] = meta
+        self._admitted += 1
+
+    # -- the decode step ------------------------------------------------------
+
+    def _decode_once(self, completions: list, t0: float, clock: str,
+                     enqueue_t: dict) -> None:
+        was_active = np.nonzero(self._active_np)[0]
+        ts = time.monotonic()
+        self._carry, out = self._step_fn(self.params, self._carry,
+                                         self._tables)
+        out = np.asarray(out)                       # the per-step host sync
+        dt = time.monotonic() - ts
+        now = time.monotonic() - t0
+        if self._decode_compiled:
+            self._decode_steady_s += dt
+            self._steady_tokens += len(was_active)
+            self._steady_steps += 1
+        else:
+            self._decode_compiled = True
+            self._decode_compile_s += dt
+
+        toks, still = out[0], out[1].astype(bool)
+        for slot in was_active:
+            self._slot_tokens[slot].append(int(toks[slot]))
+            meta = self._slot_meta[slot]
+            if meta["t_first"] is None:
+                meta["t_first"] = now
+            if not still[slot]:
+                self._active_np[slot] = False
+                self._tables_clear(slot)
+                req = self.sched.release(slot)
+                t_enq = enqueue_t[req.rid]
+                ref = req.arrival if clock == "wall" else t_enq
+                completions.append(Completion(
+                    rid=req.rid, cls=req.cls, s0=req.s0, max_new=req.max_new,
+                    tokens=np.asarray(self._slot_tokens[slot], np.int32),
+                    arrival=req.arrival, t_enqueue=t_enq,
+                    t_admit=meta["t_admit"], t_first=meta["t_first"],
+                    t_done=now, ttft=meta["t_first"] - ref))
+                self._slot_meta[slot] = None
+                self._completed += 1
+        self._steps += 1
+        if self.sink is not None and self._steps % self.log_every == 0:
+            self._log_serve(step_ms=dt * 1e3)
+
+    def _tables_clear(self, slot: int) -> None:
+        # a freed slot must write to the trash page again: its pages are
+        # about to be handed to the next admission
+        for kind in self._tables:
+            self._tables[kind] = self._tables[kind].at[slot].set(TRASH_PAGE)
+
+    # -- driving --------------------------------------------------------------
+
+    def run(self, trace: list[Request], *, clock: str = "wall",
+            max_steps: int | None = None) -> dict:
+        """Drain one open-loop trace; returns the run report.
+
+        ``clock="wall"``: arrivals are seconds of wall time from run start.
+        ``clock="steps"``: arrivals are decode-step indices — deterministic,
+        for tests and CI smoke runs.
+        """
+        if clock not in ("wall", "steps"):
+            raise ValueError(f"clock must be 'wall'|'steps', got {clock!r}")
+        order = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        completions: list[Completion] = []
+        enqueue_t: dict[int, float] = {}
+        t0 = time.monotonic()
+        i = 0
+        while True:
+            now = (time.monotonic() - t0) if clock == "wall" \
+                else float(self._steps)
+            while i < len(order) and order[i].arrival <= now:
+                self.sched.submit(order[i])
+                enqueue_t[order[i].rid] = time.monotonic() - t0
+                i += 1
+            while True:
+                adm = self.sched.next_admission()
+                if adm is None:
+                    break
+                self._admit(adm, time.monotonic() - t0)
+            if self.sched.active_slots == 0:
+                if i == len(order) and not self.sched.waiting:
+                    break
+                if clock == "wall":
+                    time.sleep(min(1e-3, max(0.0, order[i].arrival - now)))
+                else:
+                    self._steps += 1    # idle step advances virtual time
+                continue
+            self._decode_once(completions, t0, clock, enqueue_t)
+            if max_steps is not None and self._steps >= max_steps:
+                break
+        self.watchdog.check()
+        report = self.report(completions, time.monotonic() - t0)
+        if self.sink is not None:
+            self._log_serve(step_ms=None)
+        return report
+
+    # -- reporting ------------------------------------------------------------
+
+    def report(self, completions: list[Completion], wall_s: float) -> dict:
+        decode_tok_s = (self._steady_tokens / self._decode_steady_s
+                        if self._decode_steady_s > 0 else 0.0)
+        prefill_tok_s = (self._prefill_tokens / self._prefill_steady_s
+                         if self._prefill_steady_s > 0 else 0.0)
+        return {
+            "completions": completions,
+            "steps": self._steps,
+            "wall_s": wall_s,
+            "admitted": self._admitted,
+            "completed": self._completed,
+            "decode": {
+                "compile_s": self._decode_compile_s,
+                "steady_s": self._decode_steady_s,
+                "steady_steps": self._steady_steps,
+                "steady_tokens": self._steady_tokens,
+                "tok_s": decode_tok_s,
+            },
+            "prefill": {
+                "compile_s": self._prefill_compile_s,
+                "steady_s": self._prefill_steady_s,
+                "tokens": self._prefill_tokens,
+                "tok_s": prefill_tok_s,
+            },
+            "programs": self.watchdog.snapshot(),
+        }
+
+    def _log_serve(self, step_ms: float | None) -> None:
+        decode_tok_s = (self._steady_tokens / self._decode_steady_s
+                        if self._decode_steady_s > 0 else 0.0)
+        self.sink.log(
+            "serve", self._steps,
+            active_slots=self.sched.active_slots,
+            queued=self.sched.queued,
+            kv_occupancy=self.sched.occupancy(),
+            kv_pages_used=self.sched.pages_used(),
+            kv_pages_total=self.sched.pages_total(),
+            admitted=self._admitted,
+            completed=self._completed,
+            decode_tok_s=decode_tok_s,
+            step_ms=step_ms,
+        )

@@ -1,0 +1,247 @@
+"""Prompt ingestion: prefill-cache merging, paged placement, generation.
+
+Three jobs, all about getting a prompt's KV/recurrent state to where the
+decode step will look for it:
+
+* :func:`merge_prefill_cache` — scatter the ``model.prefill`` caches into a
+  *contiguous* decode cache (the static-batch ``greedy_generate`` path and
+  the A/B reference for everything paged).
+* :func:`place_paged_prefill` / :func:`clear_slot_state` — scatter ONE
+  request's prefill caches into the *shared paged* decode cache at a slot,
+  through the slot's block-table rows.  This is the engine's admission
+  primitive: the slot index and table rows are traced operands, so one
+  compiled program per distinct prompt length serves every admission.
+* :func:`greedy_generate` — the static-batch generation loop, with token
+  selection fused into the compiled step (:mod:`repro.serve.sampling`): the
+  host loop moves device arrays between calls but never materializes
+  logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import TransformerLM
+from repro.models.attention import paged_kv_len, quantize_kv_rows
+from repro.models.ssm import mamba_init_state, rwkv_init_state
+from repro.serve.sampling import sample_tokens
+
+
+# -- contiguous cache (static batch) ------------------------------------------
+
+def _place_layer(blk: str, dst, src, s0: int, grouped: bool):
+    """Scatter one layer's prefill cache into its allocated decode cache.
+
+    attn/swa KV leaves are (B, T, kvh, hd) (plus a leading group axis when
+    ``grouped``): a prompt shorter than the buffer lands at slots
+    ``0..s0-1``; a full sliding-window ring buffer (prefill keeps the last
+    ``window`` positions) is rolled so position p sits at slot ``p % window``
+    — exactly where ``attention_decode`` will read/write next.  Recurrent
+    states (mamba/rwkv) are already the post-prompt state and pass through.
+    """
+    if blk not in ("attn", "swa"):
+        return src
+
+    ax = 2 if grouped else 1  # the sequence axis of the KV leaves
+
+    def leaf(d, s):
+        s = s.astype(d.dtype)
+        t, sl = d.shape[ax], s.shape[ax]
+        if sl == t:
+            return jnp.roll(s, s0 % t, axis=ax)
+        return jax.lax.dynamic_update_slice(d, s, (0,) * d.ndim)
+
+    return jax.tree.map(leaf, dst, src)
+
+
+def merge_prefill_cache(model: TransformerLM, prefill_caches, batch: int,
+                        cache_len: int, s0: int):
+    """Build the decode cache for ``cache_len`` from ``model.prefill`` output.
+
+    ``prefill_caches`` is the ``(head_caches, group_caches)`` pair returned
+    by ``model.prefill``; the result has the ``model.init_cache`` structure
+    with the prompt's KV/state in place, ready for ``decode_step`` at
+    ``pos = s0``.
+    """
+    cfg = model.cfg
+    head_pf, group_pf = prefill_caches
+    cache = model.init_cache(batch, cache_len)
+    head = [
+        _place_layer(blk, cache["head"][i], head_pf[i], s0, grouped=False)
+        for i, (blk, _) in enumerate(cfg.head_layers())
+    ]
+    groups = {
+        f"l{i}": _place_layer(blk, cache["groups"][f"l{i}"],
+                              group_pf[f"l{i}"], s0, grouped=True)
+        for i, (blk, _) in enumerate(cfg.group_pattern())
+    }
+    return {"head": head, "groups": groups}
+
+
+# -- paged cache (one request into a shared pool) -----------------------------
+
+def _scatter_paged_kv(cfg, kind: str, pool, kv, table_row, s0: int,
+                      max_len: int, grouped: bool):
+    """Write one request's prefill KV (batch=1, length s0-1) into ``pool``.
+
+    Only the last ``min(L, t)`` prompt positions are written — position p
+    at ring slot ``p % t`` through ``table_row`` — so scatter indices are
+    duplicate-free even when the prompt overflows a sliding window.
+    """
+    t = paged_kv_len(cfg, kind, max_len)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    ax = 2 if grouped else 1  # sequence axis of the prefill KV leaves
+    ps = pool["k"].shape[ax]
+    length = kv["k"].shape[ax]
+    m = min(length, t)
+    if m == 0:
+        return pool
+    slots = ((s0 - 1 - m) + jnp.arange(m)) % t  # static: s0, m, t static
+    pages = table_row[slots // ps]
+    offs = slots % ps
+    quantized = "k_scale" in pool
+
+    out = dict(pool)
+    for name in ("k", "v"):
+        src = kv[name]
+        rows = src[:, 0, length - m:] if grouped else src[0, length - m:]
+        if not quantized:
+            if grouped:
+                out[name] = pool[name].at[:, pages, offs].set(
+                    rows.astype(pool[name].dtype))
+            else:
+                out[name] = pool[name].at[pages, offs].set(
+                    rows.astype(pool[name].dtype))
+            continue
+        q, s = quantize_kv_rows(rows.reshape(-1, kvh * hd))
+        if grouped:
+            g = rows.shape[0]
+            out[name] = pool[name].at[:, pages, offs].set(
+                q.reshape(g, m, kvh, hd))
+            out[name + "_scale"] = pool[name + "_scale"].at[
+                :, pages, offs].set(s.reshape(g, m, -1))
+        else:
+            out[name] = pool[name].at[pages, offs].set(q.reshape(m, kvh, hd))
+            out[name + "_scale"] = pool[name + "_scale"].at[pages, offs].set(
+                s.reshape(m, -1))
+    return out
+
+
+def _fresh_state(cfg, blk: str):
+    if blk == "mamba":
+        return mamba_init_state(cfg, 1)
+    return rwkv_init_state(cfg, 1)
+
+
+def _map_slot_cache(model, cache, place):
+    """Rebuild the cache tree applying ``place(blk, dst, grouped, i)``
+    (``i`` indexes into head layers / the group pattern respectively)."""
+    cfg = model.cfg
+    head = [place(blk, cache["head"][i], False, i)
+            for i, (blk, _) in enumerate(cfg.head_layers())]
+    groups = {
+        f"l{i}": place(blk, cache["groups"][f"l{i}"], True, i)
+        for i, (blk, _) in enumerate(cfg.group_pattern())
+    }
+    return {"head": head, "groups": groups}
+
+
+def place_paged_prefill(model: TransformerLM, prefill_caches, cache,
+                        table_rows, slot, s0: int, max_len: int):
+    """Admit one request: scatter its prefill caches into ``cache`` at slot.
+
+    ``prefill_caches`` comes from ``model.prefill`` on the (1, s0-1) prompt
+    prefix; ``table_rows`` is {kind: (n_blocks,) int32} (the slot's rows of
+    the block tables) and ``slot`` a traced int32 — both traced, so every
+    admission of a given prompt length reuses one compiled program.  KV goes
+    through the block table; recurrent states replace the slot's row.
+    """
+    head_pf, group_pf = prefill_caches
+    cfg = model.cfg
+
+    def place(blk, dst, grouped, i):
+        src = group_pf[f"l{i}"] if grouped else head_pf[i]
+        if blk in ("attn", "swa"):
+            return _scatter_paged_kv(cfg, blk, dst, src, table_rows[blk],
+                                     s0, max_len, grouped)
+        if grouped:
+            return jax.tree.map(
+                lambda d, s: d.at[:, slot].set(s[:, 0].astype(d.dtype)),
+                dst, src)
+        return jax.tree.map(
+            lambda d, s: d.at[slot].set(s[0].astype(d.dtype)), dst, src)
+
+    return _map_slot_cache(model, cache, place)
+
+
+def clear_slot_state(model: TransformerLM, cache, slot):
+    """Admit a length-1 prompt: no prefill to place, but the slot's
+    recurrent rows still hold the *previous* request's state — reset them.
+    (Paged KV needs no clearing: validity masking by position never reads a
+    slot the new request hasn't written.)"""
+    cfg = model.cfg
+
+    def place(blk, dst, grouped, i):
+        if blk in ("attn", "swa"):
+            return dst
+        init = _fresh_state(cfg, blk)
+        if grouped:
+            return jax.tree.map(
+                lambda d, s: d.at[:, slot].set(s[0].astype(d.dtype)),
+                dst, init)
+        return jax.tree.map(
+            lambda d, s: d.at[slot].set(s[0].astype(d.dtype)), dst, init)
+
+    return _map_slot_cache(model, cache, place)
+
+
+# -- static-batch generation (fused sampling) ---------------------------------
+
+def greedy_generate(model: TransformerLM, params, prompt, gen_len: int,
+                    temperature: float = 0.0, seed: int = 0,
+                    use_prefill: bool = True):
+    """prompt: (B, S0) int32. Returns (B, gen_len) generated tokens.
+
+    Token selection runs *inside* the compiled step (sample from the
+    previous logits, then decode) — the host loop passes device arrays
+    between calls and never pulls logits back, so a decode step costs one
+    dispatch and zero device→host syncs.  ``temperature`` is a traced (B,)
+    operand and the PRNG key is threaded through the carry: greedy and
+    sampled runs share the same compiled program.
+    """
+    cfg = model.cfg
+    b, s0 = prompt.shape
+    cache_len = s0 + gen_len
+    decode = jax.jit(model.decode_step, donate_argnums=(3,))
+
+    def sample_then_decode(params, logits, pos, cache, key, temp):
+        key, sub = jax.random.split(key)
+        tok = sample_tokens(logits, sub, temp)
+        logits, cache = model.decode_step(params, tok[:, None], pos, cache)
+        return tok, logits, cache, key
+
+    step = jax.jit(sample_then_decode, donate_argnums=(3,))
+
+    if use_prefill and cfg.frontend == "token":
+        # one compiled program for the whole prompt instead of S0 dispatches
+        logits, pf_caches = jax.jit(model.prefill)(params,
+                                                   {"tokens": prompt})
+        cache = merge_prefill_cache(model, pf_caches, b, cache_len, s0)
+    else:
+        # prefix-frontend archs (or --no-prefill): teacher-forced prefill
+        # via the decode path, one token at a time
+        cache = model.init_cache(b, cache_len)
+        logits = None
+        for t in range(s0):
+            logits, cache = decode(params, prompt[:, t:t + 1], jnp.int32(t),
+                                   cache)
+
+    key = jax.random.PRNGKey(seed)
+    temp = jnp.full((b,), temperature, jnp.float32)
+    outs = []
+    for t in range(gen_len):
+        tok, logits, cache, key = step(params, logits, jnp.int32(s0 + t),
+                                       cache, key, temp)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)

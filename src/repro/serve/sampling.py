@@ -1,0 +1,29 @@
+"""In-jit token selection for the decode step.
+
+The old serving loop pulled logits to the host every step to run
+``jnp.argmax`` / ``jax.random.categorical`` there — a device→host→device
+round trip per generated token.  Here selection is a pure function meant to
+be *fused into the compiled decode step*: per-slot ``temperature`` is a
+traced operand selected with ``jnp.where`` (never a python branch, RPR001),
+so greedy and sampled slots — and temperature changes between requests —
+all share one compiled program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, key, temperature):
+    """Select one token per batch row inside the compiled step.
+
+    logits: (B, V); key: PRNG key; temperature: (B,) f32 traced.  Rows with
+    ``temperature == 0`` take the argmax; rows with ``temperature > 0`` draw
+    from ``softmax(logits / temperature)``.  Returns (B,) int32.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    drawn = jax.random.categorical(key, logits.astype(jnp.float32) / t,
+                                   axis=-1)
+    return jnp.where(temperature > 0, drawn, greedy).astype(jnp.int32)
