@@ -24,6 +24,10 @@ batch keeps stepping — so the reported tok/s is *useful* tokens per second.
 Latency is per completed request: TTFT (arrival → first token, queueing
 included) and mean per-token latency, reported p50/p99 overall and per
 class — the serving analog of the paper's worst-distribution metrics.
+The numbers come straight out of the engine's run report
+(``report["latency"]``), which derives them from the ``finished`` trace
+records the engine emits — one accounting shared with ``launch/serve.py``
+and ``python -m repro.obs report`` (:mod:`repro.obs.report`).
 
 Run:  PYTHONPATH=src python benchmarks/bench_serve.py --smoke
       PYTHONPATH=src python benchmarks/bench_serve.py --arch qwen2_0_5b \
@@ -60,27 +64,6 @@ FULL_CLASSES = (
 )
 
 
-def _pct(xs, q):
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
-
-
-def _latency_summary(completions) -> dict:
-    def summarize(cs):
-        ttft = [c.ttft for c in cs]
-        ptl = [c.per_token_s for c in cs if c.n_tokens > 1]
-        return {
-            "requests": len(cs),
-            "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
-            "per_token_p50_s": _pct(ptl, 50), "per_token_p99_s": _pct(ptl, 99),
-        }
-
-    out = summarize(completions)
-    out["per_class"] = {
-        cls: summarize([c for c in completions if c.cls == cls])
-        for cls in sorted({c.cls for c in completions})}
-    return out
-
-
 def run_engine(model, params, trace, *, max_batch, max_len, page_size,
                quantized, clock, log_every) -> tuple[dict, dict]:
     """One engine pass; returns (json record, {rid: tokens})."""
@@ -103,7 +86,9 @@ def run_engine(model, params, trace, *, max_batch, max_len, page_size,
         "prefill_tok_s": report["prefill"]["tok_s"],
         "kv_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
         "kv_occupancy_max": float(np.max(occ)) if occ else 0.0,
-        "latency": _latency_summary(completions),
+        # the engine's own accounting, derived from its finished-request
+        # trace records — not recomputed here
+        "latency": report["latency"],
         "programs": report["programs"],
     }
     tokens = {c.rid: c.tokens for c in completions}

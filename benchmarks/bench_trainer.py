@@ -5,9 +5,16 @@ Runs the canonical fmnist MLP configuration twice with identical seeds and
 batch sequences — once bare, once with a :class:`repro.obs.MetricsSink`
 tapped into the compiled step — and records:
 
-* ``steps_per_s`` for both runs and ``sink_overhead_pct`` (the acceptance
-  budget is 3%: the tap is an async ``io_callback``, the device never waits
-  on the host),
+* ``steps_per_s`` for both runs and ``sink_overhead_pct`` — the acceptance
+  budget is 3% and the bench *asserts* it (``--overhead-budget``; the smoke
+  mode asserts a looser bound, its 24-step timing is noise-dominated).
+  The tap is a packed f32 payload riding the scan's stacked outputs —
+  zero host callbacks in the compiled step — drained per segment with the
+  vector payload (per-node losses / DR weights / in-jit histogram counts)
+  decimated to every ``vector_every``-th step.  The per-step
+  ``io_callback`` taps this replaced paid the callback's ~90 µs fixed
+  cost every optimizer step: ~12% overhead for the v1 many-operand tap,
+  still ~8% packed,
 * ``bit_exact``: sha256 digests of the final params must match — the tap
   only *reads* values the step already computes,
 * ``comm_bytes_per_round`` and per-phase wall-clock (``phase_s`` from the
@@ -21,9 +28,13 @@ tapped into the compiled step — and records:
   stay sha256-identical to the bare run.
 
 Timing protocol: each mode warms its scan program up on a throwaway state
-(compile excluded), then times ``steps`` through ``run_segments`` on a
-fresh state.  Writes ``BENCH_trainer.json`` (``--out``) for CI and
-regression tracking.
+(compile excluded), then the modes are timed INTERLEAVED — round-robin,
+one full ``steps``-through-``run_segments`` pass per mode per round, best
+of ``--repeats`` rounds per mode.  Interleaving matters: sequential
+per-mode timing on a shared/thermally-drifting machine aliases minutes of
+clock drift into the overhead ratio (observed swings of ±8% on an idle
+box, far above the 3% budget being asserted).  Writes
+``BENCH_trainer.json`` (``--out``) for CI and regression tracking.
 
 Usage:
   PYTHONPATH=src python benchmarks/bench_trainer.py --smoke
@@ -35,6 +46,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from typing import Any
 
 import jax
 import numpy as np
@@ -45,8 +57,8 @@ from repro.models.paper_nets import make_classifier_loss
 from repro.obs import MetricsSink, RecompileWatchdog
 
 
-def _bench_mode(steps: int, seg: int, seed: int, with_sink: bool,
-                sanitize: bool = False, repeats: int = 3) -> dict:
+def _make_mode(seed: int, with_sink: bool, sanitize: bool = False) -> dict:
+    """Build one benchmark mode: trainer (+ optional sink) and its watchdog."""
     fed, init_fn, apply_fn = make_task("fmnist", 10, seed)
     spec = TrainerSpec(num_nodes=10, graph="erdos_renyi",
                        graph_kwargs={"p": 0.3, "seed": seed},
@@ -56,61 +68,101 @@ def _bench_mode(steps: int, seg: int, seed: int, with_sink: bool,
     trainer = spec.build(make_classifier_loss(apply_fn), apply_fn, obs=sink)
     watch = RecompileWatchdog(
         label=f"bench_trainer[sink={with_sink},sanitize={sanitize}]")
-    watch.track("run", trainer._run, allowed=1 if steps % seg == 0 else 2)
+    return {"fed": fed, "init_fn": init_fn, "trainer": trainer,
+            "sink": sink, "watch": watch, "seed": seed}
 
-    def make_sampler():
-        rng = np.random.default_rng(seed)
 
-        def sample_batch(step):
-            return fed.sample_batch(rng, 32)
+def _sampler(mode):
+    rng = np.random.default_rng(mode["seed"])
 
-        return sample_batch
+    def sample_batch(step):
+        return mode["fed"].sample_batch(rng, 32)
 
-    # warmup: compile the scan program on a throwaway state (the timed run
-    # reuses it — RecompileWatchdog proves that below)
-    warm = trainer.init(init_fn(jax.random.PRNGKey(seed)))
-    run_segments(trainer, warm, make_sampler(), seg, seg)
+    return sample_batch
 
-    # best-of-N timing: identical state/batches every repeat (the compiled
-    # program is cached, so repeats only average out scheduler/cache noise)
-    wall = float("inf")
-    for _ in range(max(1, repeats)):
-        state = trainer.init(init_fn(jax.random.PRNGKey(seed)))
-        t0 = time.perf_counter()
-        state = run_segments(trainer, state, make_sampler(), steps, seg,
-                             obs=sink)
-        jax.block_until_ready(state.params)
-        if sink is not None:
-            sink.barrier()
-        wall = min(wall, time.perf_counter() - t0)
 
-    out = {
-        "steps": steps,
-        "wall_s": wall,
-        "steps_per_s": steps / wall,
-        "params_digest": params_digest(state.params),
-        "run_programs": watch.check()["run"],
-    }
+def _timed_pass(mode, steps: int, seg: int) -> tuple[float, Any]:
+    """One full run_segments pass on a fresh state; returns (wall, state)."""
+    trainer, sink = mode["trainer"], mode["sink"]
+    state = trainer.init(mode["init_fn"](jax.random.PRNGKey(mode["seed"])))
+    jax.block_until_ready(state.params)
+    t0 = time.perf_counter()
+    state = run_segments(trainer, state, _sampler(mode), steps, seg,
+                         obs=sink)
+    jax.block_until_ready(state.params)
     if sink is not None:
-        train_recs = sink.records("train")
-        perf_recs = sink.records("perf")
-        assert len(train_recs) >= min(steps, 4096), (
-            f"tap dropped records: {len(train_recs)} < {steps}")
-        out["comm_bytes_per_round"] = max(
-            r["comm_bytes"] for r in train_recs)
-        phase_s: dict[str, float] = {}
-        for r in perf_recs:
-            for k, v in r.get("phase_s", {}).items():
-                phase_s[k] = phase_s.get(k, 0.0) + v
-        out["phase_s"] = {k: round(v, 4) for k, v in phase_s.items()}
-        out["train_records"] = len(train_recs)
+        sink.barrier()
+    return time.perf_counter() - t0, state
+
+
+def _bench_modes(modes: dict, steps: int, seg: int,
+                 repeats: int = 3) -> dict:
+    """Time every mode interleaved; returns {name: result dict}."""
+    for mode in modes.values():
+        mode["watch"].track(
+            "run", mode["trainer"]._run,
+            allowed=1 if steps % seg == 0 else 2)
+        # warmup: compile the scan program on a throwaway state (the timed
+        # passes reuse it — RecompileWatchdog proves that below)
+        warm = mode["trainer"].init(
+            mode["init_fn"](jax.random.PRNGKey(mode["seed"])))
+        run_segments(mode["trainer"], warm, _sampler(mode), seg, seg)
+
+    # interleaved best-of-N: one pass per mode per round, identical
+    # state/batches every repeat (the compiled program is cached, so rounds
+    # only average out scheduler/cache noise — and interleaving keeps slow
+    # machine drift out of the cross-mode ratios)
+    wall = {name: float("inf") for name in modes}
+    state = {}
+    for _ in range(max(1, repeats)):
+        for name, mode in modes.items():
+            w, s = _timed_pass(mode, steps, seg)
+            wall[name] = min(wall[name], w)
+            state[name] = s
+
+    out = {}
+    for name, mode in modes.items():
+        sink = mode["sink"]
+        res = {
+            "steps": steps,
+            "wall_s": wall[name],
+            "steps_per_s": steps / wall[name],
+            "params_digest": params_digest(state[name].params),
+            "run_programs": mode["watch"].check()["run"],
+        }
+        if sink is not None:
+            train_recs = sink.records("train")
+            perf_recs = sink.records("perf")
+            assert len(train_recs) >= min(steps, 4096), (
+                f"tap dropped records: {len(train_recs)} < {steps}")
+            n_vec = sum(1 for r in train_recs if "loss_nodes" in r)
+            want_vec = sum(1 for r in train_recs
+                           if r["step"] % sink.vector_every == 0)
+            assert n_vec == want_vec, (
+                f"decimated vector payload wrong: {n_vec} records carry "
+                f"vectors, expected {want_vec} (every {sink.vector_every})")
+            res["vector_records"] = n_vec
+            res["comm_bytes_per_round"] = max(
+                r["comm_bytes"] for r in train_recs)
+            phase_s: dict[str, float] = {}
+            for r in perf_recs:
+                for k, v in r.get("phase_s", {}).items():
+                    phase_s[k] = phase_s.get(k, 0.0) + v
+            res["phase_s"] = {k: round(v, 4) for k, v in phase_s.items()}
+            res["train_records"] = len(train_recs)
+        out[name] = res
     return out
 
 
-def run(steps: int = 200, seg: int = 50, seed: int = 0) -> dict:
-    bare = _bench_mode(steps, seg, seed, with_sink=False)
-    tapped = _bench_mode(steps, seg, seed, with_sink=True)
-    checked = _bench_mode(steps, seg, seed, with_sink=False, sanitize=True)
+def run(steps: int = 200, seg: int = 50, seed: int = 0,
+        overhead_budget_pct: float = 3.0, repeats: int = 3) -> dict:
+    modes = _bench_modes(
+        {"bare": _make_mode(seed, with_sink=False),
+         "tapped": _make_mode(seed, with_sink=True),
+         "checked": _make_mode(seed, with_sink=False, sanitize=True)},
+        steps, seg, repeats=repeats)
+    bare, tapped, checked = (modes["bare"], modes["tapped"],
+                             modes["checked"])
     overhead = 100.0 * (1.0 - tapped["steps_per_s"] / bare["steps_per_s"])
     sani_overhead = 100.0 * (1.0 -
                              checked["steps_per_s"] / bare["steps_per_s"])
@@ -125,11 +177,17 @@ def run(steps: int = 200, seg: int = 50, seed: int = 0) -> dict:
         "sink_on": tapped,
         "sanitize_on": checked,
         "sink_overhead_pct": round(overhead, 3),
+        "sink_overhead_budget_pct": overhead_budget_pct,
         "sanitize_overhead_pct": round(sani_overhead, 3),
         "bit_exact": bare["params_digest"] == tapped["params_digest"],
         "sanitize_bit_exact":
             bare["params_digest"] == checked["params_digest"],
     }
+    assert overhead <= overhead_budget_pct, (
+        f"sink overhead {overhead:.2f}% exceeds the "
+        f"{overhead_budget_pct:g}% budget — the tap must stay a packed "
+        "payload on the scan's stacked outputs (no per-step host callback) "
+        "with vectors decimated at drain")
     assert record["bit_exact"], (
         "telemetry tap changed the numerics: final params differ between "
         f"sink-off ({bare['params_digest'][:12]}) and sink-on "
@@ -150,10 +208,22 @@ def main():
                     help="tiny CI configuration (plumbing + bit-exactness, "
                          "not stable timing)")
     ap.add_argument("--out", default="BENCH_trainer.json")
+    ap.add_argument("--overhead-budget", type=float, default=None,
+                    metavar="PCT",
+                    help="asserted sink-overhead ceiling "
+                         "(default: 3 full, 25 smoke)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="interleaved timing rounds per mode "
+                         "(default: 5 full, 2 smoke)")
     args = ap.parse_args()
     steps = 24 if args.smoke else args.steps
     seg = 12 if args.smoke else args.seg
-    record = run(steps=steps, seg=seg, seed=args.seed)
+    budget = args.overhead_budget if args.overhead_budget is not None \
+        else (25.0 if args.smoke else 3.0)
+    repeats = args.repeats if args.repeats is not None \
+        else (2 if args.smoke else 5)
+    record = run(steps=steps, seg=seg, seed=args.seed,
+                 overhead_budget_pct=budget, repeats=repeats)
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")

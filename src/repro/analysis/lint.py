@@ -26,6 +26,11 @@ checkpoints.  These rules encode the repo's own discipline:
           protocol module or inside ``init_state``/``state_specs`` hooks —
           everywhere else use ``state._replace(...)`` so adding a field
           cannot silently drop it.
+  RPR006  Host callback (``io_callback`` / ``pure_callback``) staged
+          outside ``repro.obs``.  The telemetry sink is the ONE sanctioned
+          host-callback path (packed payloads, measured overhead budget,
+          ``audit_host_callbacks`` allow-list); ad-hoc callbacks elsewhere
+          silently serialize the device stream and dodge the budget.
 
 Suppression: append ``# repro: noqa`` (all rules) or
 ``# repro: noqa[RPR002]`` (specific rules) to the flagged line, with a
@@ -408,6 +413,25 @@ def _lint_commstate_ctor(tree: ast.Module, path: str,
             "use state._replace(...) so new fields cannot be dropped"))
 
 
+_CALLBACK_CALLS = {"io_callback", "pure_callback"}
+
+
+def _lint_host_callbacks(tree: ast.Module, path: str,
+                         findings: list[LintFinding]) -> None:
+    """RPR006: io_callback/pure_callback staged outside repro.obs."""
+    norm = path.replace(os.sep, "/")
+    if "repro/obs/" in norm:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and _call_name(node) in _CALLBACK_CALLS:
+            findings.append(LintFinding(
+                path, node.lineno, "RPR006",
+                f"host callback {_call_name(node)}() outside repro.obs — "
+                "route host taps through the MetricsSink (the one "
+                "budgeted, audited callback path)"))
+
+
 def lint_source(source: str, path: str = "<string>") -> list[LintFinding]:
     """All single-file findings for one module's source text."""
     tree = ast.parse(source)
@@ -417,6 +441,7 @@ def lint_source(source: str, path: str = "<string>") -> list[LintFinding]:
     _lint_mixer_protocol(tree, path, findings)
     _lint_import_time_device(tree, path, findings)
     _lint_commstate_ctor(tree, path, findings)
+    _lint_host_callbacks(tree, path, findings)
     noqa = _noqa_map(source)
     kept = []
     for f in findings:
@@ -519,7 +544,7 @@ def main(argv=None) -> int:
 
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repo-discipline linter (rules RPR001-RPR005)")
+        description="repo-discipline linter (rules RPR001-RPR006)")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files/directories to lint (default: src/ or .)")
     args = ap.parse_args(argv)

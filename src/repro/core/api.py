@@ -287,7 +287,16 @@ class DecentralizedTrainer:
         return init_state(node_params, self.optimizer, mixer=self.mixer)
 
     def step(self, state: DecentralizedState, batch):
-        return self._train_step(state, batch)
+        state, metrics = self._train_step(state, batch)
+        return state, self._drain_tap(metrics)
+
+    def _drain_tap(self, metrics):
+        """Pop the batched-tap payload a segment returned and deliver its
+        records to the sink — keeps the metrics tree callers see identical
+        with the sink on or off (see ``MetricsSink.tap_drain``)."""
+        if self.obs is None:
+            return metrics
+        return self.obs.tap_drain(metrics)
 
     def run(self, state: DecentralizedState, batches, *, steps: int | None = None,
             epoch_steps: int | None = None, on_epoch=None):
@@ -330,6 +339,7 @@ class DecentralizedTrainer:
             batches = jax.tree.map(lambda x: x[:steps], batches)
         if on_epoch is None or epoch_steps is None or epoch_steps >= steps:
             state, metrics = self._run(state, batches)
+            metrics = self._drain_tap(metrics)
             if on_epoch is not None:
                 on_epoch(0, state, metrics)
             return state, metrics
@@ -338,6 +348,7 @@ class DecentralizedTrainer:
             seg = jax.tree.map(
                 lambda x: x[start:start + epoch_steps], batches)
             state, ms = self._run(state, seg)
+            ms = self._drain_tap(ms)
             on_epoch(e, state, ms)
             chunks.append(ms)
         metrics = jax.tree.map(lambda *xs: jnp.concatenate(xs), *chunks)

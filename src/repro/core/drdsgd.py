@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.comm import CompressionConfig
 from repro.comm.protocol import CommState, Mixer, trivial_comm_state
 from repro.core.robust import RobustConfig, mixture_weights, robust_objective, robust_scale
+from repro.obs.hist import TRAIN_HISTOGRAMS, HistSpec, hist_counts
 from repro.obs.profiler import scope
 from repro.optim.optimizers import Optimizer
 from repro.utils.tree import tree_node_disagreement
@@ -61,6 +62,11 @@ class TrainStepConfig:
                                           # with (repro.comm); recorded here
                                           # so the step can sanity-check the
                                           # mixer
+    histograms: tuple[HistSpec, ...] = TRAIN_HISTOGRAMS
+                                          # in-jit streaming histograms
+                                          # (repro.obs.hist) joining the
+                                          # tap's decimated vector payload;
+                                          # only computed when obs is given
 
 
 def init_state(node_params, optimizer: Optimizer,
@@ -106,11 +112,17 @@ def build_train_step(
     scalar (or (scalar, aux-dict) with ``loss_has_aux``).
 
     ``obs`` is an optional :class:`repro.obs.MetricsSink`: when given, every
-    step stages an ordered ``io_callback`` tap that streams the metrics dict
-    plus the per-node vectors (``loss_nodes``, ``dr_weights``) to the host —
-    schema-versioned JSONL without per-step host syncs.  The tap only reads
-    values the step computes anyway, so the returned metrics, the scan
-    carry's donation, and the trajectory stay bit-exact vs ``obs=None``.
+    step packs its record — the scalar metrics plus the per-node vectors
+    (``loss_nodes``, ``dr_weights``) and the in-jit histogram counts
+    (``cfg.histograms``, :mod:`repro.obs.hist`) — into flat f32 payload
+    leaves (``obs.tap_pack``) merged into the returned metrics dict, where
+    ``lax.scan`` stacks them for free: ZERO host callbacks in the compiled
+    program.  ``trainer.run`` drains the payload per segment
+    (``obs.tap_drain``), decimating the vector fields to every
+    ``obs.vector_every``-th record.  The tap only reads values the step
+    computes anyway and the payload leaves are popped before metrics reach
+    the caller, so the visible metrics tree, the scan carry's donation, and
+    the trajectory stay bit-exact vs ``obs=None``.
 
     ``sanitize`` stages the runtime invariant checks of
     ``repro.analysis.sanitize`` (doubly-stochastic W, CHOCO cache drift,
@@ -226,15 +238,37 @@ def build_train_step(
         for k, v in aux.items():
             metrics[f"aux_{k}"] = jnp.mean(v)
         if obs is not None:
-            # stream the step's record to the host sink.  The per-node
-            # vectors (the paper's trajectory axes) ride only on the tap,
-            # not in the returned metrics, so the scan-stacked metrics tree
-            # is identical with the sink on or off.
+            # pack the step's record for the host sink.  The per-node
+            # vectors (the paper's trajectory axes) and the in-jit histogram
+            # counts ride only on the tap payload — decimated to every
+            # obs.vector_every-th step at drain — not in the named metrics,
+            # so the visible metrics tree is identical with the sink on or
+            # off.  The payload leaves ride the scan's stacked outputs (no
+            # host callback); trainer.run drains them when a segment returns.
             with scope("obs:tap"):
                 rec = dict(metrics)
-                rec["loss_nodes"] = losses.astype(jnp.float32)
-                rec["dr_weights"] = lam
-                obs.tap(state.step, rec)
+                # EF wire bookkeeping for host-side event derivation
+                # (re-base firings / drift), when the mixer carries it
+                for name in ("ef_rounds", "ef_drift"):
+                    v = getattr(comm, name, ())
+                    if hasattr(v, "dtype"):
+                        rec[name] = v
+                vectors = {
+                    "loss_nodes": losses.astype(jnp.float32),
+                    "dr_weights": lam,
+                }
+                hist_sources = {
+                    "loss_nodes": losses,
+                    "dr_weights": lam,
+                    "ef_res": cm.res_norm,
+                }
+                for spec in cfg.histograms:
+                    src = hist_sources.get(spec.source)
+                    if src is not None:
+                        vectors[spec.field] = hist_counts(src, spec)
+                metrics = dict(metrics)
+                metrics.update(obs.tap_pack(state.step, rec,
+                                            vectors=vectors))
         return (
             DecentralizedState(mixed, opt_state, state.step + 1, comm),
             metrics,

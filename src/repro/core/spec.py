@@ -89,6 +89,11 @@ def add_obs_cli_args(ap) -> None:
                     help="wrap the run in jax.profiler.trace and dump a "
                          "perfetto trace under --log-dir (phases carry "
                          "obs:... scope names)")
+    ap.add_argument("--tap-vectors-every", type=int, default=8,
+                    help="decimation of the tap's vector payload: per-node "
+                         "losses / DR weights / histogram counts land on "
+                         "every N-th train record (scalars land every "
+                         "step; 1 = vectors every step)")
 
 
 def add_compression_cli_args(ap) -> None:

@@ -69,7 +69,7 @@ from repro.dynamics.config import (
     DynamicsConfig,
     build_dynamic_mixer,
 )
-from repro.dynamics.faults import FaultConfig, fault_keep_matrix
+from repro.dynamics.faults import FaultConfig, fault_keep_matrix, replay_fault_masks
 from repro.dynamics.local import LocalUpdateMixer
 from repro.dynamics.mixers import (
     DynamicCompressedDenseMixer,
@@ -89,7 +89,7 @@ from repro.dynamics.schedule import (
 
 __all__ = [
     "DynamicsConfig", "TOPOLOGY_KINDS", "build_dynamic_mixer",
-    "FaultConfig", "fault_keep_matrix",
+    "FaultConfig", "fault_keep_matrix", "replay_fault_masks",
     "LocalUpdateMixer",
     "DynamicDenseMixer", "DynamicGossipMixer", "DynamicCompressedDenseMixer",
     "DynamicCompressedGossipMixer", "gather_round_vectors",

@@ -96,3 +96,19 @@ def fault_keep_matrix(cfg: FaultConfig, rounds, k: int):
         up = up * (uo >= cfg.outage_p).astype(jnp.float32)
     keep = keep * up[:, None] * up[None, :]
     return keep, up
+
+
+def replay_fault_masks(cfg: FaultConfig, rounds, k: int):
+    """Replay the fault process for a whole array of round indices at once.
+
+    Because the process is a pure function of the round counter (no carried
+    key), any past run's masks reconstruct exactly from its config — this is
+    how :mod:`repro.obs.trace` surfaces per-round fault *events* from a
+    telemetry stream without any device-side logging.  Returns numpy
+    ``(keep (R, K, K), up (R, K))``.
+    """
+    import numpy as np
+
+    rounds = jnp.asarray(np.asarray(rounds, np.int32))
+    keep, up = jax.vmap(lambda r: fault_keep_matrix(cfg, r, k))(rounds)
+    return np.asarray(keep), np.asarray(up)

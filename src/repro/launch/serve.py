@@ -151,9 +151,22 @@ def _run_engine(args, model, params, cfg) -> None:
     print(f"decode: compile {dc['compile_s']:.2f}s, steady "
           f"{dc['steady_s']:.3f}s -> {dc['tok_s']:.1f} tok/s "
           f"({dc['steady_tokens']} tok)")
+    # latency comes from the engine's finished trace records — the same
+    # accounting bench_serve and `python -m repro.obs report` use
+    lat = report["latency"]
+    if lat["requests"]:
+        line = (f"latency: ttft p50 {lat['ttft_p50_s']:.3f}s "
+                f"p99 {lat['ttft_p99_s']:.3f}s")
+        if "per_token_p50_s" in lat:
+            line += (f", per-token p50 {lat['per_token_p50_s'] * 1e3:.1f}ms "
+                     f"p99 {lat['per_token_p99_s'] * 1e3:.1f}ms")
+        print(line)
+        for cls, d in lat["per_class"].items():
+            print(f"  class {cls}: {d['requests']} req, "
+                  f"ttft p50 {d['ttft_p50_s']:.3f}s p99 {d['ttft_p99_s']:.3f}s")
     print(f"programs: {report['programs']}")
-    if engine.sink is not None:
-        engine.sink.close()
+    engine.sink.close()
+    if engine.sink.path:
         print(f"telemetry: {engine.sink.path}")
 
 

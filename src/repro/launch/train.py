@@ -13,14 +13,18 @@ segment with the carried state donated, instead of a per-step Python
 dispatch loop.
 
 Telemetry (``repro.obs``): every run streams through a
-:class:`~repro.obs.MetricsSink` — an in-graph ``io_callback`` tap delivers
+:class:`~repro.obs.MetricsSink` — the in-graph tap payload delivers
 one ``train`` record per optimizer step (scalar metrics + per-node losses
 and DR weights), the eval hook writes the paper's fairness metrics as
 ``eval`` records, and ``run_segments`` rolls up wall-clock phase timings as
 ``perf`` records.  The console lines below are *formatters over those same
 records*; ``--log-dir`` additionally persists them as schema-versioned
-JSONL (``python -m repro.obs.schema`` validates), and ``--profile`` wraps
-the run in ``jax.profiler.trace`` (phases carry ``obs:...`` scopes).
+JSONL (``python -m repro.obs.schema`` validates; ``python -m repro.obs
+report <log-dir>`` renders the fairness/comm summary and derives the
+per-round fault / EF re-base / rate-switch trace events), and ``--profile``
+wraps the run in ``jax.profiler.trace`` (phases carry ``obs:...`` scopes).
+Per-node vectors and in-jit histogram counts ride the tap decimated
+(``--tap-vectors-every``); scalars land every step.
 
 Dynamic graphs (``repro.dynamics``): ``--topology dropout --drop-p 0.3``
 trains over per-round Bernoulli link failures (renormalized on device, one
@@ -79,6 +83,17 @@ from repro.obs import (
 )
 
 
+def _dynamics_meta(spec: TrainerSpec) -> dict:
+    """Fault/EF config fields of the meta record — what
+    ``python -m repro.obs report`` needs to replay the run's fault events
+    host-side (repro.obs.trace) without any device logging."""
+    return dict(
+        seed=spec.seed, drop_p=spec.drop_p, straggler_p=spec.straggler_p,
+        outage_p=spec.outage_p, outage_len=spec.outage_len,
+        ef_rebase_every=spec.ef_rebase_every,
+        ef_rebase_threshold=spec.ef_rebase_threshold)
+
+
 def train_lm(args, sink: MetricsSink):
     args.steps = args.steps or 50
     args.batch_per_node = args.batch_per_node or 2
@@ -95,7 +110,7 @@ def train_lm(args, sink: MetricsSink):
         rho=round(trainer.rho, 4), mu=args.mu, robust=spec.robust,
         compress=args.compress, topology=spec.topology,
         local_updates=spec.local_updates, steps=args.steps,
-        sanitize=spec.sanitize)))
+        sanitize=spec.sanitize, **_dynamics_meta(spec))))
     state = trainer.init(model.init(jax.random.PRNGKey(args.seed)))
     streams = make_node_token_streams(k, cfg.vocab, seed=args.seed)
     rng = np.random.default_rng(args.seed)
@@ -163,7 +178,8 @@ def train_paper(args, sink: MetricsSink):
         "meta", 0, paper=args.paper, nodes=k, steps=steps, batch=bsz,
         lr=spec.lr, mu=args.mu, rho=round(trainer.rho, 4),
         compress=args.compress, topology=spec.topology,
-        local_updates=spec.local_updates, sanitize=spec.sanitize)))
+        local_updates=spec.local_updates, sanitize=spec.sanitize,
+        **_dynamics_meta(spec))))
 
     def sample_batch(step):
         xb, yb = fed.sample_batch(rng, bsz)
@@ -174,7 +190,9 @@ def train_paper(args, sink: MetricsSink):
         # STDEV) into the telemetry stream, with the DR-weight snapshot of
         # the last train step riding along
         stats = trainer.eval_local_distributions(seg_state, x_nodes, y_nodes)
-        train_rec = sink.last("train")
+        # dr_weights is decimated (vector_every): take the newest record
+        # that actually carries it, not the newest record
+        train_rec = sink.last_with("train", "dr_weights")
         rec = sink.log(
             "eval", step,
             loss_mean=float(ms["loss_mean"][-1]),
@@ -206,7 +224,8 @@ def main():
     add_obs_cli_args(ap)
     TrainerSpec.add_cli_args(ap)
     args = ap.parse_args()
-    with MetricsSink(args.log_dir) as sink:
+    with MetricsSink(args.log_dir,
+                     vector_every=args.tap_vectors_every) as sink:
         if args.paper:
             train_paper(args, sink)
         elif args.arch:

@@ -1,0 +1,102 @@
+"""Fixed-bin streaming histograms computed *in-jit*, riding the obs tap.
+
+The paper's headline quantities are distributional (worst-node loss, the
+adversarial DR mixture, EF innovation energy), but scalar rollups only show
+their extremes.  :func:`hist_counts` buckets a traced array into a fixed
+``bins``-bin grid with one ``searchsorted`` + ``segment_sum`` — no extra
+host callbacks (the int32 count vector joins the decimated vector payload
+of the existing ``obs:tap``), no data-dependent shapes, donation and
+bit-exactness untouched (the counts only *read* values the step computes).
+
+Bin conventions (chosen to be bit-exact vs the ``np.histogram`` reference):
+
+* edges are ``linspace(lo, hi, bins + 1)`` in f32; bin *i* covers
+  ``[e_i, e_{i+1})`` and the last bin is closed at ``hi`` — exactly
+  ``np.histogram(x, bins=np.asarray(edges(spec)))``.
+* values outside ``[lo, hi]`` are dropped (so ``sum(counts) < K`` on a
+  record is the overflow signal, visible without a new field).
+* ``log10=True`` histograms ``log10(max(x, 1e-30))`` — the right grid for
+  the EF residual norm, which moves over decades.
+
+Counts are designed to be *summed across records*: each tapped step
+contributes its K-sample (or 1-sample, for scalar sources) histogram, and
+the report CLI aggregates them into per-segment / whole-run distributions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HistSpec:
+    """One streaming histogram: the source field and its fixed-bin grid.
+
+    Attributes:
+      source: name of the traced array to bucket (the train step maps
+        ``loss_nodes`` / ``dr_weights`` / ``ef_res``); the tap field is
+        ``hist_<source>``.
+      lo, hi: grid range (of ``log10(x)`` when ``log10`` is set).
+      bins: number of fixed bins.
+      log10: bucket ``log10(max(x, 1e-30))`` instead of ``x``.
+    """
+
+    source: str
+    lo: float
+    hi: float
+    bins: int = 16
+    log10: bool = False
+
+    def __post_init__(self):
+        if self.bins < 1:
+            raise ValueError("bins must be >= 1")
+        if not self.hi > self.lo:
+            raise ValueError(f"need hi > lo, got [{self.lo}, {self.hi}]")
+
+    @property
+    def field(self) -> str:
+        return f"hist_{self.source}"
+
+
+def edges(spec: HistSpec) -> jax.Array:
+    """The f32 bin-edge vector (``bins + 1``,) of a spec."""
+    return jnp.linspace(spec.lo, spec.hi, spec.bins + 1, dtype=jnp.float32)
+
+
+def transform(spec: HistSpec, x) -> jax.Array:
+    """The value actually bucketed (identity, or clamped log10)."""
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    if spec.log10:
+        x = jnp.log10(jnp.maximum(x, jnp.float32(1e-30)))
+    return x
+
+
+def hist_counts(x, spec: HistSpec) -> jax.Array:
+    """In-jit ``np.histogram``-exact int32 bin counts of ``x`` under ``spec``.
+
+    ``searchsorted(side="right") - 1`` puts a value equal to an interior
+    edge into the right bin and ``x == hi`` into the last (np.histogram's
+    half-open-except-last convention); out-of-range values are masked out
+    of the segment sum.
+    """
+    x = transform(spec, x)
+    e = edges(spec)
+    idx = jnp.searchsorted(e, x, side="right") - 1
+    idx = jnp.where(x == e[-1], spec.bins - 1, idx)
+    valid = (x >= e[0]) & (x <= e[-1])
+    idx = jnp.clip(idx, 0, spec.bins - 1)
+    return jax.ops.segment_sum(valid.astype(jnp.int32), idx,
+                               num_segments=spec.bins)
+
+
+#: the train step's default histograms (see repro.core.drdsgd): per-node
+#: minibatch loss, the DR mixture weights (a distribution over K nodes, so
+#: [0, 1] covers it), and the EF innovation norm on a log10 grid
+TRAIN_HISTOGRAMS: tuple[HistSpec, ...] = (
+    HistSpec("loss_nodes", lo=0.0, hi=8.0, bins=16),
+    HistSpec("dr_weights", lo=0.0, hi=1.0, bins=16),
+    HistSpec("ef_res", lo=-8.0, hi=2.0, bins=16, log10=True),
+)

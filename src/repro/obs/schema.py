@@ -6,14 +6,18 @@ three envelope fields — ``v`` (schema version), ``kind`` (record type) and
 fields.  The kinds:
 
 ``train``
-    One record per optimizer step, emitted from *inside* the compiled train
-    step via an ``io_callback`` tap (``build_train_step(..., obs=sink)``).
+    One record per optimizer step, packed *inside* the compiled train step
+    onto the scan's stacked outputs (``build_train_step(..., obs=sink)``)
+    and drained host-side per segment.
     Carries the scalar metrics of the step (``loss_mean``/``loss_worst``/
     ``loss_std``/``robust_objective``, the wire accounting ``comm_bytes``/
-    ``wire_bits``/``ef_residual_norm``, optionally ``disagreement``) and the
-    per-node vectors the paper's trajectories are made of: ``loss_nodes``
-    (per-device minibatch loss) and ``dr_weights`` (the implied adversarial
-    mixture λ*_i, Eq. 4-6 dual).
+    ``wire_bits``/``ef_residual_norm``, optionally ``disagreement``).
+    The per-node vectors the paper's trajectories are made of — ``loss_nodes``
+    (per-device minibatch loss), ``dr_weights`` (the implied adversarial
+    mixture λ*_i, Eq. 4-6 dual) and the in-jit ``hist_*`` bin counts
+    (:mod:`repro.obs.hist`) — are *decimated*: they ride the tap every
+    ``MetricsSink(vector_every=N)``-th step (schema v2; they were required
+    on every step in v1, which is the 12% sink overhead PR 9 removed).
 
 ``eval``
     Host-side record per evaluation: the paper's fairness metrics —
@@ -38,6 +42,17 @@ fields.  The kinds:
     throughput/latency rollups (``decode_tok_s``, ``step_ms``) and lifetime
     counters (``admitted``, ``completed``).
 
+``trace``
+    One structured span/event record (:mod:`repro.obs.trace`).  ``event``
+    names it; everything else is event-specific.  Serve lifecycle events
+    (``queued`` → ``admitted`` → ``prefill`` → ``first_token`` →
+    ``finished``) are emitted host-side by :class:`repro.serve.ServeEngine`
+    with ``rid``/``cls``/``slot``/``pages`` and run-relative timestamps
+    ``t_s`` (``step`` is the decode-step index).  Trainer round events
+    (``fault``/``ef_rebase``/``rate_switch``) are *derived* host-side from
+    the train records plus the seeded fault replay — zero extra device
+    callbacks.  All are exportable to Chrome/perfetto trace-event JSON.
+
 Extra fields are always allowed (``aux_*`` losses, config keys); the
 validator checks the envelope, the kind-required fields, and field types.
 
@@ -51,9 +66,10 @@ from __future__ import annotations
 import json
 import math
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
-# type tags: "f" float scalar, "i" int scalar, "s" string, "fv" float vector
+# type tags: "f" float scalar, "i" int scalar, "s" string,
+#            "fv" float vector, "iv" int vector
 _ENVELOPE = {"v": "i", "kind": "s", "step": "i"}
 
 #: kind -> {field: type} that MUST be present (beyond the envelope)
@@ -66,8 +82,6 @@ REQUIRED_FIELDS: dict[str, dict[str, str]] = {
         "comm_bytes": "f",
         "wire_bits": "f",
         "ef_residual_norm": "f",
-        "loss_nodes": "fv",
-        "dr_weights": "fv",
     },
     "eval": {
         "acc_avg": "f",
@@ -84,6 +98,9 @@ REQUIRED_FIELDS: dict[str, dict[str, str]] = {
         "queued": "i",
         "kv_occupancy": "f",
     },
+    "trace": {
+        "event": "s",
+    },
 }
 
 #: kind -> {field: type} that MAY be present and is type-checked when it is
@@ -93,6 +110,15 @@ OPTIONAL_FIELDS: dict[str, dict[str, str]] = {
         "scale_mean": "f",
         "scale_max": "f",
         "lambda_max": "f",
+        # decimated vector payload (every vector_every-th step, schema v2)
+        "loss_nodes": "fv",
+        "dr_weights": "fv",
+        "hist_loss_nodes": "iv",
+        "hist_dr_weights": "iv",
+        "hist_ef_res": "iv",
+        # EF wire bookkeeping surfaced for host-side event derivation
+        "ef_rounds": "i",
+        "ef_drift": "f",
     },
     "eval": {
         "acc_node_min": "f",
@@ -114,6 +140,29 @@ OPTIONAL_FIELDS: dict[str, dict[str, str]] = {
         "prefill_tok_s": "f",
         "step_ms": "f",
     },
+    "trace": {
+        # serve request lifecycle
+        "rid": "i",
+        "cls": "s",
+        "slot": "i",
+        "pages": "i",
+        "t_s": "f",
+        "dur_s": "f",
+        "tokens": "i",
+        "s0": "i",
+        "queued_s": "f",
+        "ttft_s": "f",
+        "per_token_s": "f",
+        # trainer round events (host-derived)
+        "round": "i",
+        "links_down": "i",
+        "nodes_down": "i",
+        "down_nodes": "iv",
+        "wire_bits_old": "f",
+        "wire_bits_new": "f",
+        "ef_rounds": "i",
+        "ef_drift": "f",
+    },
 }
 
 
@@ -128,6 +177,9 @@ def _type_ok(value, tag: str) -> bool:
         return isinstance(value, list) and all(
             isinstance(x, (int, float)) and not isinstance(x, bool)
             for x in value)
+    if tag == "iv":
+        return isinstance(value, list) and all(
+            isinstance(x, int) and not isinstance(x, bool) for x in value)
     raise ValueError(f"unknown type tag {tag!r}")
 
 

@@ -32,6 +32,17 @@ host-side — no device reshape, the freed pages are simply handed to the
 next admission, whose prefill overwrites them.  Inactive slots keep
 decoding into the trash page (page 0) — masked, never read — which is what
 keeps the program shape-stable at any occupancy.
+
+Observability: the engine always owns a :class:`repro.obs.MetricsSink`
+(in-memory unless one with a ``log_dir`` is passed) and emits the request
+lifecycle as ``trace`` records — ``queued`` → ``admitted`` → ``prefill`` →
+``first_token`` → ``finished`` — from these host-side transition paths,
+with slot ids, page reservations and run-relative timestamps.  The
+``finished`` record carries the request's full latency accounting
+(``queued_s``/``ttft_s``/``per_token_s``), making the engine the single
+source of latency truth: :func:`repro.obs.report.serve_latency_summary`
+derives the bench and CLI summaries from these records.  The compiled
+decode step is untouched — zero device callbacks.
 """
 
 from __future__ import annotations
@@ -116,7 +127,9 @@ class ServeEngine:
         self.page_size = page_size
         self.quantized = quantized
         self.eos = eos
-        self.sink = sink
+        # the engine always has a sink: lifecycle trace records are the
+        # canonical latency accounting even for in-memory runs
+        self.sink = sink if sink is not None else MetricsSink()
         self.log_every = log_every
 
         blocks = {blk for blk, _ in cfg.head_layers()} | {
@@ -264,9 +277,14 @@ class ServeEngine:
             temp=c["temp"].at[slot].set(req.temperature))
         self._active_np[slot] = True
         self._slot_tokens[slot] = []
-        meta = dict(req=req, t_admit=now, t_first=None)
+        pages_total = sum(len(p) for p in adm.pages.values())
+        meta = dict(req=req, t_admit=now, t_first=None, pages=pages_total)
         self._slot_meta[slot] = meta
         self._admitted += 1
+        self._trace("admitted", rid=req.rid, cls=req.cls, slot=slot,
+                    pages=pages_total, t_s=now)
+        self._trace("prefill", rid=req.rid, slot=slot, tokens=s0 - 1,
+                    dur_s=dt, t_s=now + dt)
 
     # -- the decode step ------------------------------------------------------
 
@@ -293,22 +311,34 @@ class ServeEngine:
             meta = self._slot_meta[slot]
             if meta["t_first"] is None:
                 meta["t_first"] = now
+                mreq = meta["req"]
+                ref = mreq.arrival if clock == "wall" \
+                    else enqueue_t[mreq.rid]
+                self._trace("first_token", rid=mreq.rid, cls=mreq.cls,
+                            slot=int(slot), t_s=now, ttft_s=now - ref)
             if not still[slot]:
                 self._active_np[slot] = False
                 self._tables_clear(slot)
                 req = self.sched.release(slot)
                 t_enq = enqueue_t[req.rid]
                 ref = req.arrival if clock == "wall" else t_enq
-                completions.append(Completion(
+                comp = Completion(
                     rid=req.rid, cls=req.cls, s0=req.s0, max_new=req.max_new,
                     tokens=np.asarray(self._slot_tokens[slot], np.int32),
                     arrival=req.arrival, t_enqueue=t_enq,
                     t_admit=meta["t_admit"], t_first=meta["t_first"],
-                    t_done=now, ttft=meta["t_first"] - ref))
+                    t_done=now, ttft=meta["t_first"] - ref)
+                completions.append(comp)
+                self._trace("finished", rid=req.rid, cls=req.cls,
+                            slot=int(slot), s0=req.s0, tokens=comp.n_tokens,
+                            pages=meta["pages"],
+                            queued_s=meta["t_admit"] - t_enq,
+                            ttft_s=comp.ttft, per_token_s=comp.per_token_s,
+                            t_s=now, dur_s=now - meta["t_admit"])
                 self._slot_meta[slot] = None
                 self._completed += 1
         self._steps += 1
-        if self.sink is not None and self._steps % self.log_every == 0:
+        if self._steps % self.log_every == 0:
             self._log_serve(step_ms=dt * 1e3)
 
     def _tables_clear(self, slot: int) -> None:
@@ -339,7 +369,10 @@ class ServeEngine:
                 else float(self._steps)
             while i < len(order) and order[i].arrival <= now:
                 self.sched.submit(order[i])
-                enqueue_t[order[i].rid] = time.monotonic() - t0
+                t_enq = time.monotonic() - t0
+                enqueue_t[order[i].rid] = t_enq
+                self._trace("queued", rid=order[i].rid, cls=order[i].cls,
+                            t_s=t_enq)
                 i += 1
             while True:
                 adm = self.sched.next_admission()
@@ -359,19 +392,21 @@ class ServeEngine:
                 break
         self.watchdog.check()
         report = self.report(completions, time.monotonic() - t0)
-        if self.sink is not None:
-            self._log_serve(step_ms=None)
+        self._log_serve(step_ms=None)
         return report
 
     # -- reporting ------------------------------------------------------------
 
     def report(self, completions: list[Completion], wall_s: float) -> dict:
+        from repro.obs.report import serve_latency_summary
+
         decode_tok_s = (self._steady_tokens / self._decode_steady_s
                         if self._decode_steady_s > 0 else 0.0)
         prefill_tok_s = (self._prefill_tokens / self._prefill_steady_s
                          if self._prefill_steady_s > 0 else 0.0)
         return {
             "completions": completions,
+            "latency": serve_latency_summary(self.sink.records("trace")),
             "steps": self._steps,
             "wall_s": wall_s,
             "admitted": self._admitted,
@@ -391,6 +426,10 @@ class ServeEngine:
             },
             "programs": self.watchdog.snapshot(),
         }
+
+    def _trace(self, event: str, **fields) -> None:
+        """One lifecycle trace record; ``step`` is the decode-step index."""
+        self.sink.log("trace", self._steps, event=event, **fields)
 
     def _log_serve(self, step_ms: float | None) -> None:
         decode_tok_s = (self._steady_tokens / self._decode_steady_s

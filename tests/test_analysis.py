@@ -169,6 +169,35 @@ def init_state(self, params):
     assert findings[0].line == 3
 
 
+def test_lint_rpr006_host_callback_outside_obs():
+    src = """
+from jax.experimental import io_callback
+import jax
+
+def step(x):
+    io_callback(print, None, x)
+    return jax.pure_callback(abs, x, x)
+"""
+    findings = lint_source(src, "src/repro/core/fix.py")
+    assert [f.code for f in findings] == ["RPR006", "RPR006"]
+    assert "MetricsSink" in findings[0].message
+
+
+def test_lint_rpr006_obs_modules_and_noqa_pass():
+    src = """
+from jax.experimental import io_callback
+
+def tap(x):
+    io_callback(print, None, x)
+"""
+    # the sink itself is the one sanctioned callback site
+    assert lint_source(src, "src/repro/obs/sink.py") == []
+    suppressed = src.replace(
+        "io_callback(print, None, x)",
+        "io_callback(print, None, x)  # repro: noqa[RPR006]")
+    assert lint_source(suppressed, "src/repro/core/fix.py") == []
+
+
 def test_repo_lints_clean():
     """The shipped tree passes its own linter (justified noqa only)."""
     findings = lint_paths([os.path.join(_REPO, "src")])

@@ -48,9 +48,12 @@ def _trainer(k=8, d=3, obs=None, **kw):
 # -- tap completeness & ordering under the donated scan ------------------------
 
 def test_tap_delivers_every_scanned_step_exactly_once_in_order():
-    """The core tentpole property: ordered io_callback taps inside
-    ``lax.scan`` with a donated carry deliver one record per step, in step
-    order, with no per-step host sync."""
+    """The core tentpole property: the batched tap (payload leaves riding
+    the scan's stacked outputs, drained by ``trainer.run``) delivers one
+    record per step, in step order, with zero host callbacks in the compiled
+    program.  Scalars land every step; the packed vector payload (per-node
+    losses, DR weights, histogram counts) is decimated to every
+    ``vector_every``-th step and merged into that step's record."""
     k, d, steps = 8, 3, 23
     sink = MetricsSink()
     trainer = _trainer(k, d, obs=sink)
@@ -61,10 +64,27 @@ def test_tap_delivers_every_scanned_step_exactly_once_in_order():
     for r in recs:
         assert r["v"] == SCHEMA_VERSION
         assert validate_record(r) == []
-        assert len(r["loss_nodes"]) == k
-        assert len(r["dr_weights"]) == k
-        # the DR weights are a distribution over nodes
-        assert abs(sum(r["dr_weights"]) - 1.0) < 1e-4
+        assert "loss_mean" in r      # scalars on every record
+        if r["step"] % sink.vector_every == 0:
+            assert len(r["loss_nodes"]) == k
+            assert len(r["dr_weights"]) == k
+            # the DR weights are a distribution over nodes
+            assert abs(sum(r["dr_weights"]) - 1.0) < 1e-4
+            assert sum(r["hist_loss_nodes"]) <= k    # out-of-range dropped
+        else:
+            assert "loss_nodes" not in r
+            assert "dr_weights" not in r
+
+
+def test_tap_vector_every_one_lands_vectors_on_every_step():
+    k, d, steps = 4, 2, 6
+    sink = MetricsSink(vector_every=1)
+    trainer = _trainer(k, d, obs=sink)
+    state = trainer.init({"w": jnp.zeros((d,))})
+    trainer.run(state, _stack_time((_targets(k, d),), steps))
+    recs = sink.records("train")
+    assert len(recs) == steps
+    assert all(len(r["loss_nodes"]) == k for r in recs)
 
 
 def test_tap_survives_segment_boundaries():
@@ -79,6 +99,36 @@ def test_tap_survives_segment_boundaries():
                          steps=17, seg=5, obs=sink)
     steps_seen = [r["step"] for r in sink.records("train")]
     assert steps_seen == list(range(17))
+
+
+def test_live_tap_streams_records_from_inside_a_scan():
+    """The io_callback variant (``sink.tap``) still works standalone: an
+    ordered per-step callback inside a jitted scan delivers every step's
+    record, with the lax.cond-gated vector payload merged on decimated
+    steps.  The trainer no longer uses it (the batched tap is cheaper), but
+    it remains the API for loops that must be observable mid-program."""
+    sink = MetricsSink(vector_every=4)
+    steps = 9
+
+    def body(carry, _):
+        x = carry + 1.0
+        sink.tap(carry.astype(jnp.int32), {"x": x},
+                 vectors={"xs": jnp.stack([x, 2 * x])})
+        return x, x
+
+    @jax.jit
+    def run(c):
+        return jax.lax.scan(body, c, None, length=steps)
+
+    run(jnp.float32(0.0))
+    recs = sink.records("train")
+    assert [r["step"] for r in recs] == list(range(steps))
+    for r in recs:
+        assert r["x"] == pytest.approx(r["step"] + 1.0)
+        if r["step"] % 4 == 0:
+            assert r["xs"] == pytest.approx([r["x"], 2 * r["x"]])
+        else:
+            assert "xs" not in r
 
 
 # -- bit-exactness with the sink enabled ---------------------------------------
@@ -119,7 +169,8 @@ def test_jsonl_stream_validates(tmp_path):
     def on_segment(step, seg_state, ms):
         sink.log("eval", step, acc_avg=0.5, acc_worst_dist=0.25,
                  acc_node_std=0.1,
-                 dr_weights=sink.last("train")["dr_weights"])
+                 dr_weights=(sink.last_with("train", "dr_weights")
+                             or {}).get("dr_weights"))
 
     run_segments(trainer, state,
                  lambda step: (np.asarray(_targets(k, d)),),

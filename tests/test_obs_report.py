@@ -1,0 +1,212 @@
+"""repro.obs.report: run summary + renderers golden-tested against the
+checked-in mini log (tests/data/mini_log), and the compare regression gate's
+directions, thresholds, overrides and CLI exit codes."""
+
+import json
+import os
+
+import pytest
+
+from repro.obs import (
+    load_records,
+    render_html,
+    render_text,
+    summarize_run,
+)
+from repro.obs.report import (
+    compare_metrics,
+    flatten_metrics,
+    load_metrics,
+    main as report_main,
+    metric_direction,
+    render_compare,
+)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "mini_log")
+
+
+# -- summarize_run golden on the checked-in mini log ---------------------------
+
+def test_summarize_run_golden():
+    recs = load_records(FIXTURE)
+    s = summarize_run(recs, target_acc=0.7)
+    assert s["meta"]["nodes"] == 4 and s["meta"]["task"] == "fmnist"
+    assert s["train"]["records"] == 8
+    assert (s["train"]["step_min"], s["train"]["step_max"]) == (0, 7)
+    assert s["train"]["final_loss_mean"] == pytest.approx(0.6)
+    assert s["train"]["cumulative_wire_bytes"] == pytest.approx(102400.0)
+    assert s["fairness"]["acc_avg"] == pytest.approx(0.8)
+    assert s["fairness"]["acc_spread"] == pytest.approx(0.08)
+    # target 0.7 is first met by the step-7 eval: all 8 rounds' bytes count
+    assert s["fairness"]["bytes_to_target"] == pytest.approx(102400.0)
+    assert s["dr_weights"]["step"] == 4
+    assert s["dr_weights"]["max"] == pytest.approx(0.3)
+    assert s["perf"]["steps_per_s"] == pytest.approx(100.0)
+    # histogram counts sum across the two vector-carrying records
+    assert sum(s["histograms"]["hist_loss_nodes"]) == 8
+    assert sum(s["histograms"]["hist_ef_res"]) == 2
+    # derived round events: ef_rounds hits 4 and 8 (B=4 from meta), and
+    # wire_bits halves at step 4 on this faultless static run
+    assert s["events"] == {"ef_rebase": 2, "rate_switch": 1}
+    assert "events_error" not in s
+    switch = [t for t in s["trace_records"] if t["event"] == "rate_switch"]
+    assert switch[0]["step"] == 4
+    assert switch[0]["wire_bits_old"] == pytest.approx(102400.0)
+
+
+def test_summarize_run_without_event_derivation():
+    s = summarize_run(load_records(FIXTURE), derive_events=False)
+    assert "events" not in s and "trace_records" not in s
+
+
+def test_bytes_to_target_unreached_is_absent():
+    s = summarize_run(load_records(FIXTURE), target_acc=0.99)
+    assert "bytes_to_target" not in s["fairness"]
+    assert s["fairness"]["target_acc"] == pytest.approx(0.99)
+
+
+# -- renderers -----------------------------------------------------------------
+
+def test_render_text_sections():
+    s = summarize_run(load_records(FIXTURE))
+    text = render_text(s)
+    for sec in ("== meta ==", "== train ==", "== fairness ==",
+                "== dr_weights ==", "== perf ==", "== histograms ==",
+                "== events =="):
+        assert sec in text
+    assert "hist_loss_nodes" in text and "log10" in text
+    assert "ef_rebase = 2" in text and "rate_switch = 1" in text
+
+
+def test_render_html_is_self_contained():
+    recs = load_records(FIXTURE)
+    html = render_html(summarize_run(recs), recs)
+    assert html.startswith("<!doctype html>")
+    assert "<svg" in html                      # loss sparklines inlined
+    assert "loss_mean" in html and "ef_rebase" in html
+    assert "http" not in html                  # no external resources
+
+
+# -- flatten / directions / compare --------------------------------------------
+
+def test_flatten_metrics_keeps_numeric_leaves_only():
+    flat = flatten_metrics({"a": {"b": 1, "c": [1, 2], "s": "x"},
+                            "d": True, "e": 2.5})
+    assert flat == {"a.b": 1.0, "e": 2.5}
+
+
+def test_metric_direction_conventions():
+    assert metric_direction("perf.steps_per_s") == 1
+    assert metric_direction("engine_f32.decode_tok_s") == 1
+    assert metric_direction("fairness.acc_avg") == 1
+    # dispersion fairness metrics are lower-better despite the acc prefix
+    assert metric_direction("fairness.acc_node_std") == -1
+    assert metric_direction("fairness.acc_spread") == -1
+    assert metric_direction("latency.ttft_p99_s") == -1
+    assert metric_direction("train.cumulative_wire_bytes") == -1
+    assert metric_direction("sink_overhead_pct") == -1
+    # run config and unitless counters are not gateable
+    assert metric_direction("meta.straggler_p") == 0
+    assert metric_direction("dr_weights.step") == 0
+    # the bench's asserted ceiling is config too, not a measurement
+    assert metric_direction("sink_overhead_budget_pct") == 0
+
+
+def test_compare_detects_only_bad_direction_moves():
+    base = {"perf.steps_per_s": 100.0, "fairness.acc_avg": 0.8,
+            "train.final_loss_mean": 0.6, "meta.seed": 3.0}
+    assert compare_metrics(base, dict(base),
+                           max_regression_pct=5.0)["regressions"] == []
+    # a big move in the GOOD direction never trips the gate
+    better = dict(base, **{"train.final_loss_mean": 0.1,
+                           "perf.steps_per_s": 500.0})
+    assert compare_metrics(base, better,
+                           max_regression_pct=5.0)["regressions"] == []
+    worse = dict(base, **{"fairness.acc_avg": 0.4, "meta.seed": 99.0})
+    res = compare_metrics(base, worse, max_regression_pct=5.0)
+    # meta.* moved more but is ungated; acc_avg regressed 50% > 5%
+    assert [r["metric"] for r in res["regressions"]] == ["fairness.acc_avg"]
+    assert res["regressions"][0]["regression_pct"] == pytest.approx(50.0)
+    assert "REGRESSION" in render_compare(res)
+    # within threshold passes
+    assert compare_metrics(base, worse,
+                           max_regression_pct=60.0)["regressions"] == []
+
+
+def test_compare_overrides_gate_only_listed_paths():
+    base = {"perf.steps_per_s": 100.0, "fairness.acc_avg": 0.8}
+    worse = {"perf.steps_per_s": 100.0, "fairness.acc_avg": 0.4}
+    res = compare_metrics(base, worse, max_regression_pct=5.0,
+                          overrides={"perf.steps_per_s": 5.0})
+    assert res["regressions"] == []            # acc_avg is informational now
+    res = compare_metrics(base, worse, max_regression_pct=5.0,
+                          overrides={"fairness.acc_avg": 60.0})
+    assert res["regressions"] == []            # its own looser threshold
+    res = compare_metrics(base, worse, max_regression_pct=5.0,
+                          overrides={"fairness.acc_avg": 10.0})
+    assert [r["metric"] for r in res["regressions"]] == ["fairness.acc_avg"]
+
+
+def test_compare_reports_asymmetric_metric_sets():
+    res = compare_metrics({"a.x": 1.0, "b.y": 2.0}, {"a.x": 1.0, "c.z": 3.0},
+                          max_regression_pct=5.0)
+    assert res["only_base"] == ["b.y"] and res["only_cand"] == ["c.z"]
+
+
+def test_load_metrics_flattens_bench_json(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps({"sink_overhead_pct": 2.0, "bit_exact": True,
+                             "sink_on": {"steps_per_s": 50.0}}))
+    assert load_metrics(str(p)) == {"sink_overhead_pct": 2.0,
+                                    "sink_on.steps_per_s": 50.0}
+
+
+# -- the CLI: report renders, compare gates ------------------------------------
+
+def test_cli_report_renders_html_and_trace(tmp_path, capsys):
+    html = tmp_path / "report.html"
+    trace = tmp_path / "trace.json"
+    assert report_main(["report", FIXTURE, "--target-acc", "0.7",
+                        "--html", str(html),
+                        "--export-trace", str(trace)]) == 0
+    out = capsys.readouterr().out
+    assert "== fairness ==" in out and "bytes_to_target" in out
+    assert html.exists() and "<svg" in html.read_text()
+    evs = json.loads(trace.read_text())["traceEvents"]
+    assert {e["name"] for e in evs} == {"ef_rebase", "rate_switch"}
+
+
+def test_cli_report_json_mode(capsys):
+    assert report_main(["report", FIXTURE, "--json"]) == 0
+    summary = json.loads(capsys.readouterr().out)
+    assert summary["events"] == {"ef_rebase": 2, "rate_switch": 1}
+
+
+def _doctor(tmp_path, scale_acc):
+    """A copy of the fixture with every eval accuracy scaled — the injected
+    regression of the acceptance criteria."""
+    out = tmp_path / "doctored.jsonl"
+    with open(os.path.join(FIXTURE, "telemetry.jsonl")) as f:
+        recs = [json.loads(line) for line in f]
+    for r in recs:
+        if r["kind"] == "eval":
+            r["acc_avg"] *= scale_acc
+    out.write_text("".join(json.dumps(r) + "\n" for r in recs))
+    return str(out)
+
+
+def test_cli_compare_exit_codes(tmp_path, capsys):
+    # identical runs: exit 0
+    assert report_main(["compare", FIXTURE, FIXTURE]) == 0
+    assert "no regressions" in capsys.readouterr().out
+    # injected >threshold regression: exit 1 (what CI asserts with `!`)
+    doctored = _doctor(tmp_path, scale_acc=0.5)
+    assert report_main(["compare", FIXTURE, doctored,
+                        "--max-regression", "10"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    # gating a path the regression didn't touch: exit 0
+    assert report_main(["compare", FIXTURE, doctored,
+                        "--metric", "train.final_loss_mean:10"]) == 0
+    # a per-metric threshold wide enough to absorb it: exit 0
+    assert report_main(["compare", FIXTURE, doctored,
+                        "--metric", "fairness.acc_avg:60"]) == 0
