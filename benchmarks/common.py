@@ -101,6 +101,50 @@ def _gossip_mixer(graph, kwargs, num_nodes, topology, drop_p, seed,
     return make, put_state
 
 
+def _hierarchical_mixer(graph, kwargs, num_nodes, replicas, seed):
+    """Build the hierarchical psum-then-gossip lowering: ``num_nodes`` ×
+    ``replicas`` mesh, params node-stacked over ``node`` and replicated over
+    ``replica`` (the FSDP-inside / gossip-across shape — K ≪ world size, so
+    the consensus wire scales with K, not the device count).
+
+    Returns ``(make, put_state)`` with the same contract as
+    :func:`_gossip_mixer`.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import make_hierarchical_mixer
+    from repro.graphs import (
+        build_graph,
+        metropolis_weights,
+        permutation_decomposition,
+    )
+    from repro.utils.compat import make_auto_mesh
+
+    if jax.device_count() < num_nodes * replicas:
+        raise RuntimeError(
+            f"the hierarchical lowering needs >= {num_nodes * replicas} "
+            f"devices (got {jax.device_count()})")
+    mesh = make_auto_mesh((num_nodes, replicas), ("node", "replica"))
+    w = metropolis_weights(build_graph(graph, num_nodes, **kwargs))
+    decomp = permutation_decomposition(w)
+
+    def make(params_tree):
+        param_specs = jax.tree.map(lambda _: P("node"), params_tree)
+        return make_hierarchical_mixer(decomp, mesh, "node", "replica",
+                                       param_specs)
+
+    def put_state(state):
+        def _put(x):
+            if hasattr(x, "shape") and getattr(x, "ndim", 0) >= 1 \
+                    and x.shape[0] == num_nodes:
+                return jax.device_put(x, NamedSharding(mesh, P("node")))
+            return jax.device_put(x, NamedSharding(mesh, P()))
+        return jax.tree.map(_put, state)
+
+    return make, put_state
+
+
 def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       num_nodes: int = 10, steps: int = 150, batch: int = 32,
                       graph: str = "erdos_renyi", p: float = 0.3,
@@ -115,6 +159,7 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
                       straggler_p: float = 0.0,
                       outage_p: float = 0.0,
                       lowering: str = "dense",
+                      replicas: int = 2,
                       ef_rebase_every: int = 8,
                       ef_rebase_threshold: float = 0.0,
                       sanitize: bool = False,
@@ -172,6 +217,21 @@ def run_decentralized(dataset: str, *, robust: bool, mu: float = 6.0,
         make_mixer, put_state = _gossip_mixer(
             graph, kwargs, num_nodes, topology, drop_p, seed, compression,
             ef_rebase_every, ef_rebase_threshold)
+        mixer = make_mixer(node_params)
+    elif lowering == "hierarchical":
+        if (local_updates != 1 or gradient_tracking or straggler_p
+                or outage_p or compression is not None
+                or topology != "static"):
+            raise ValueError("the hierarchical lowering runs the static "
+                             "psum-then-gossip stack; compose dynamics on "
+                             "the dense lowering")
+        params0 = init_fn(jax.random.PRNGKey(seed))
+        node_params = jax.tree.map(
+            lambda x: np.broadcast_to(np.asarray(x)[None],
+                                      (num_nodes,) + np.asarray(x).shape),
+            params0)
+        make_mixer, put_state = _hierarchical_mixer(
+            graph, kwargs, num_nodes, replicas, seed)
         mixer = make_mixer(node_params)
     spec = TrainerSpec(
         num_nodes=num_nodes,

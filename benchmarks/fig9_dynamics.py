@@ -13,6 +13,10 @@ sweeps the axes the ``repro.dynamics`` subsystem opens:
 * **local-update period H ∈ {1, 2, 4}** (at a fixed dropout), with and
   without gradient tracking — trading consensus rounds (wire) against drift
   under the pathological non-IID split.
+* **CIFAR/CNN scale** — one dropout row (p = 0.2) at conv-model scale on
+  the ``erdos_renyi`` base graph, in every run including ``--smoke``:
+  catches shape/donation regressions in the dynamics path that the
+  MLP-scale rows cannot see.
 * **compressed gossip wire at p = 0.2** — the ppermute lowering with
   int8/int4 wires: the memoryless ablation (fresh C(θ) every round, stalls
   at the quantization noise floor) vs error-feedback innovation gossip
@@ -159,6 +163,22 @@ def run(steps: int = 400, eval_every: int = 50, seed: int = 0,
                 "memoryless consensus-error stall floor: "
                 f"{r['label']} {r['disagreement_final']:.3e} vs memoryless "
                 f"{mem4['disagreement_final']:.3e}")
+
+    # -- CIFAR/CNN scale on the erdos_renyi base graph -------------------------
+    # one dropout row at CNN scale: the dynamics path (per-round Bernoulli
+    # link failure, renormalized on device) composed with the conv model —
+    # catches shape/donation regressions the MLP rows can't see.  Runs on
+    # the dense-graph base (redundant paths) where dropout is survivable.
+    # The CNN step is ~100x the MLP step on CPU (see fig7), so the smoke
+    # row trims to a plumbing-scale config like fig7's cifar smoke.
+    cifar_kw = (dict(steps=6, eval_every=3, batch=8) if smoke
+                else dict(steps=steps, eval_every=eval_every, batch=32))
+    r = run_decentralized(
+        "cifar", robust=True, mu=3.0, num_nodes=8, lr=0.18,
+        graph="erdos_renyi", seed=seed, lr_compensate=False,
+        topology="dropout", drop_p=0.2, **cifar_kw)
+    r["label"] = "fig9_cifar_erdos_renyi_drop0.2"
+    runs.append(r)
 
     # rounds-to-target: the weakest final worst-dist accuracy every run hit
     target = min(r["acc_worst_dist"] for r in runs)

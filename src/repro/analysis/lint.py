@@ -31,17 +31,27 @@ checkpoints.  These rules encode the repo's own discipline:
           host-callback path (packed payloads, measured overhead budget,
           ``audit_host_callbacks`` allow-list); ad-hoc callbacks elsewhere
           silently serialize the device stream and dodge the budget.
+  RPR007  Wire-layer state discipline (the Topology × Transport × Wire
+          stack): a ``*Wire`` class whose ``init_fields`` populates a
+          non-trivial ``CommState`` field without a ``spec_fields`` (own
+          or inherited in-module) declaring its partitioning — the layer
+          twin of RPR003 (``ComposedMixer`` splices the wire's dicts into
+          the state, so a missing spec falls back to the trivial one
+          under pjit).
 
 Suppression: append ``# repro: noqa`` (all rules) or
 ``# repro: noqa[RPR002]`` (specific rules) to the flagged line, with a
 justification nearby.
 
 Traced regions are found statically: ``__call__``/``_mix``/``mix_tree``
-methods of Mixer classes, functions named ``train_step``/``eval_step``,
-functions passed by name to ``jit``/``scan``/``cond``/``while_loop``/
-``vmap``/``pmap``/``shard_map``/``checkify``, nested ``def``s inside those,
-and (one fixed point) any same-module function or ``self.`` method they
-call.
+methods of Mixer classes, the traced layer methods of ``*Topology`` /
+``*Transport`` / ``*Wire`` classes (``round_w``; ``apply_w``/``apply``/
+``node_index``; ``encode_leaf``/``compress_block``/``rate``/
+``next_sched_state``/``round_wire_bits``/``gamma_for``), functions named
+``train_step``/``eval_step``, functions passed by name to ``jit``/``scan``/
+``cond``/``while_loop``/``vmap``/``pmap``/``shard_map``/``checkify``,
+nested ``def``s inside those, and (one fixed point) any same-module
+function or ``self.`` method they call.
 
 Run it: ``python -m repro.analysis [paths...]`` (exits 1 on findings).
 """
@@ -55,6 +65,14 @@ import re
 
 _TRACED_SEED_METHODS = {"__call__", "_mix", "mix_tree"}
 _TRACED_SEED_NAMES = {"train_step", "eval_step"}
+# consensus-layer classes (matched by name suffix) and the methods of each
+# that run under tracing — ComposedMixer calls them from its round bodies
+_LAYER_TRACED_METHODS = {
+    "Topology": {"round_w"},
+    "Transport": {"apply_w", "apply", "node_index"},
+    "Wire": {"encode_leaf", "compress_block", "rate", "next_sched_state",
+             "round_wire_bits", "gamma_for"},
+}
 _TRACING_CALLS = {"jit", "scan", "cond", "while_loop", "fori_loop", "vmap",
                   "pmap", "shard_map", "checkify", "value_and_grad", "grad",
                   "switch", "remat", "checkpoint"}
@@ -191,6 +209,11 @@ def _find_traced_functions(tree: ast.Module):
             for m in _TRACED_SEED_METHODS:
                 if m in methods:
                     traced.add(methods[m])
+        for suffix, layer_methods in _LAYER_TRACED_METHODS.items():
+            if cls_name.endswith(suffix):
+                for m in layer_methods:
+                    if m in methods:
+                        traced.add(methods[m])
     for name, fn in module_fns.items():
         if name in _TRACED_SEED_NAMES:
             traced.add(fn)
@@ -363,6 +386,60 @@ def _lint_mixer_protocol(tree: ast.Module, path: str,
                 "hierarchy declares their partitioning"))
 
 
+def _dict_string_keys(fn) -> set[str]:
+    """String keys a function populates into dict literals or via
+    ``fields["name"] = ...`` subscript assignment."""
+    keys: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            keys |= {k.value for k in node.keys
+                     if isinstance(k, ast.Constant)
+                     and isinstance(k.value, str)}
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Subscript)
+                        and isinstance(tgt.slice, ast.Constant)
+                        and isinstance(tgt.slice.value, str)):
+                    keys.add(tgt.slice.value)
+    return keys
+
+
+def _lint_wire_state_discipline(tree: ast.Module, path: str,
+                                findings: list[LintFinding]) -> None:
+    """RPR007: a wire's init_fields owns a non-trivial CommState field that
+    no spec_fields in its (in-module) hierarchy declares."""
+    _, classes = _function_index(tree)
+
+    def spec_keys(cls_name: str, seen: set[str]) -> set[str]:
+        if cls_name not in classes or cls_name in seen:
+            return set()
+        seen.add(cls_name)
+        cls, methods = classes[cls_name]
+        out: set[str] = set()
+        if "spec_fields" in methods:
+            out |= _dict_string_keys(methods["spec_fields"])
+        for base in cls.bases:
+            chain = _attr_chain(base)
+            if chain:
+                out |= spec_keys(chain[-1], seen)
+        return out
+
+    for cls_name, (cls, methods) in classes.items():
+        if not cls_name.endswith("Wire") or "init_fields" not in methods:
+            continue
+        interesting = (_dict_string_keys(methods["init_fields"])
+                       - _TRIVIAL_SPEC_FIELDS)
+        if not interesting:
+            continue
+        missing = interesting - spec_keys(cls_name, set())
+        if missing:
+            findings.append(LintFinding(
+                path, methods["init_fields"].lineno, "RPR007",
+                f"{cls_name}.init_fields populates CommState field(s) "
+                f"{sorted(missing)} but no spec_fields in its (in-module) "
+                "hierarchy declares their partitioning"))
+
+
 def _lint_import_time_device(tree: ast.Module, path: str,
                              findings: list[LintFinding]) -> None:
     """RPR004: jnp/jax.random/device_put calls at module import time."""
@@ -439,6 +516,7 @@ def lint_source(source: str, path: str = "<string>") -> list[LintFinding]:
     for fn in _find_traced_functions(tree):
         _lint_traced_fn(fn, path, findings)
     _lint_mixer_protocol(tree, path, findings)
+    _lint_wire_state_discipline(tree, path, findings)
     _lint_import_time_device(tree, path, findings)
     _lint_commstate_ctor(tree, path, findings)
     _lint_host_callbacks(tree, path, findings)
@@ -544,7 +622,7 @@ def main(argv=None) -> int:
 
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repo-discipline linter (rules RPR001-RPR006)")
+        description="repo-discipline linter (rules RPR001-RPR007)")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files/directories to lint (default: src/ or .)")
     args = ap.parse_args(argv)

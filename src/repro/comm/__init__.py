@@ -9,15 +9,29 @@ compressors.py — wire codecs (bf16 / int8 / int4 stochastic rounding /
 schedule.py    — :class:`CompressionSchedule`: anneal the codec rate
                  (int8→int4, topk ratio) during training, driven by the
                  round counter or the error-feedback innovation norm.
-mixers.py      — CHOCO-style stateful consensus operators with error
-                 feedback: dense (einsum simulation) and gossip (shard_map +
-                 compressed-payload ppermute) lowerings.
+
+The consensus stack itself is three composable layers behind one operator:
+
+topology.py    — WHO talks to whom this round: ``round_w(rounds)``
+                 providers (static graph / schedule ∘ fault replay / star).
+transport.py   — HOW payloads move: dense einsum, shard_map + ppermute
+                 gossip (± hierarchical replica psum), hub/star mean.
+wire.py        — WHAT crosses each link: identity, memoryless codec,
+                 CHOCO error feedback (± delta/re-base clock), masked
+                 int8/int4 Pallas — each owning its ``CommState`` fields.
+composed.py    — :class:`ComposedMixer`: one consensus operator over a
+                 (topology, transport, wire) stack; all legacy mixer
+                 classes are constructor shims over it.
+mixers.py      — those shims for the compressed stacks
+                 (:class:`CompressedDenseMixer`,
+                 :class:`CompressedGossipMixer`).
 
 The fused Pallas quantize/dequantize-accumulate kernel lives in
 ``repro.kernels.quant_gossip`` and plugs in via
 ``CompressionConfig(use_kernel=True)``.
 """
 
+from repro.comm.composed import ComposedMixer
 from repro.comm.compressors import (
     BF16Compressor,
     CompressionConfig,
@@ -45,6 +59,27 @@ from repro.comm.protocol import (
     trivial_state_specs,
 )
 from repro.comm.schedule import CompressionSchedule, ScheduleConfig
+from repro.comm.topology import (
+    ScheduledTopology,
+    StarTopology,
+    StaticTopology,
+    Topology,
+)
+from repro.comm.transport import (
+    DenseTransport,
+    GossipTransport,
+    StarTransport,
+    Transport,
+)
+from repro.comm.wire import (
+    ChocoWire,
+    CodecWire,
+    IdentityWire,
+    MaskedQuantWire,
+    RebaseClock,
+    Wire,
+    make_codec_wire,
+)
 
 __all__ = [
     "CompressionConfig", "Compressor", "make_compressor",
@@ -55,4 +90,10 @@ __all__ = [
     "CompressedDenseMixer", "CompressedGossipMixer",
     "ef_residual", "per_node_keys", "fold_leaf", "quant_bits",
     "ScheduleConfig", "CompressionSchedule",
+    # layer API
+    "ComposedMixer",
+    "Topology", "StaticTopology", "ScheduledTopology", "StarTopology",
+    "Transport", "DenseTransport", "GossipTransport", "StarTransport",
+    "Wire", "IdentityWire", "CodecWire", "ChocoWire", "MaskedQuantWire",
+    "RebaseClock", "make_codec_wire",
 ]

@@ -1,4 +1,4 @@
-"""Compressed consensus operators with error feedback.
+"""Compressed consensus operators with error feedback (layer-stack shims).
 
 Plain mixing sends full-precision parameters; quantizing them naively stalls
 consensus at the quantization noise floor, because the message magnitude
@@ -13,319 +13,63 @@ the public copies:
 
 The *error-feedback residual* of this scheme is e_i = θ_i − θ̂_i: exactly the
 mass compression dropped so far, re-offered to the compressor every round
-(see :func:`ef_residual`).  Keeping it implicit in θ̂ rather than as a second
-accumulator is deliberate — an explicit accumulator *on top of* θ̂ double
-counts the unsent mass (the next message becomes Δθ + 2e) and diverges for
-biased compressors.  Because W is doubly stochastic the node *average* is
-preserved exactly no matter how lossy C is, and since the transmitted
-innovation shrinks with the disagreement, the relative compression error per
-round stays constant and consensus contracts geometrically (Koloskova et
-al., 2019).  γ = ``CompressionConfig.resolved_gamma`` damps the correction
-for the low-fidelity sparsifiers, which destabilize the loop at γ = 1.
+(see :func:`repro.comm.wire.ef_residual`).  Because W is doubly stochastic
+the node *average* is preserved exactly no matter how lossy C is, and since
+the transmitted innovation shrinks with the disagreement, the relative
+compression error per round stays constant and consensus contracts
+geometrically (Koloskova et al., 2019).  ``error_feedback=False`` is the
+naive memoryless scheme — kept as the ablation baseline that stalls at the
+quantization noise floor.
 
-``error_feedback=False`` is the naive memoryless scheme — nodes exchange
-C(θ) directly, θ_i ← θ_i + γ·(Σ_j W_ij C(θ_j) − C(θ_i)) — kept as the
-ablation baseline: it stalls at the quantization noise floor instead of
-tracking the uncompressed mixer.
+Since the Topology × Transport × Wire refactor the machinery lives in the
+layer modules and both classes here are thin constructor shims over
+:class:`repro.comm.composed.ComposedMixer`:
 
-Both mixers track schedule/accounting state in :class:`CommState` each round:
-the innovation norm ‖θ − θ̂‖ actually offered to the codec (``res_norm``, the
-signal that drives adaptive :mod:`repro.comm.schedule` rates), the latched
-post-warmup reference norm (``res_ref``), a round counter, and the traced
-wire bits the round injected (``wire_bits`` — rate-aware, so scheduled runs
-report honest per-round bytes to ``build_train_step``).
-
-PRNG: every round splits ``CommState.key`` and derives one key per
-(node, leaf) as ``fold_in(fold_in(round_key, global_node_index), leaf_idx)``
-in *both* lowerings, so dense and gossip produce bit-identical stochastic
-rounding at a fixed seed regardless of sharding.
-
-Two lowerings, mirroring ``repro.core.consensus``:
-
-* :class:`CompressedDenseMixer`  — einsum over the public copies; the wire
-  payload is only *accounted* (simulation / CPU), math is identical.
-* :class:`CompressedGossipMixer` — shard_map; each matching ppermutes the
-  actual compressed payload (int8 values + scales, or topk values+indices),
-  and the receiver dequantize-accumulates into its running mix buffer
+* :class:`CompressedDenseMixer`  = Static topology × Dense transport ×
+  codec wire (einsum over the public copies; the payload is *accounted*,
+  math is identical — the simulation lowering).
+* :class:`CompressedGossipMixer` = frozen decomposition × Gossip transport
+  × codec wire: each matching ppermutes the actual compressed payload and
+  the receiver dequantize-accumulates into its running mix cache
   s_i = Σ_j W_ij θ̂_j.  A full-precision wire buffer is never materialized.
-  The per-leaf encode/EF-update/combine path (``_encode_leaf`` +
-  ``_gossip_round``) is shared with the time-varying lowering
-  (``repro.dynamics.DynamicCompressedGossipMixer``), which passes traced
-  per-round weight/mask vectors gathered from W_r and periodically re-bases
-  the cache — with no overrides the static path is the frozen original,
-  bit-for-bit.
 
-Both follow the uniform :class:`repro.comm.protocol.Mixer` protocol —
-``mix(theta, CommState, *, round) -> (theta, CommState)`` — so
-``build_train_step`` threads the state through ``DecentralizedState.comm``
-exactly as it does for uncompressed mixers.
+The wire split (``repro.comm.wire``): ``error_feedback=True`` →
+:class:`~repro.comm.wire.ChocoWire` (owns ``hat``/``hat_mix``), False →
+:class:`~repro.comm.wire.CodecWire` (memoryless).  PRNG, schedules and
+wire-bit accounting are wire-owned; both lowerings derive one key per
+(node, leaf) as ``fold_in(fold_in(round_key, global_node_index), leaf_idx)``
+so dense and gossip produce bit-identical stochastic rounding at a fixed
+seed regardless of sharding (anchored by ``tests/data/mixer_anchors.json``).
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.compressors import (
-    CompressionConfig,
-    fold_leaf,
-    make_compressor,
-    per_node_keys,
+from repro.comm.composed import ComposedMixer
+from repro.comm.compressors import CompressionConfig
+from repro.comm.topology import StaticTopology
+from repro.comm.transport import DenseTransport, GossipTransport
+from repro.comm.wire import (  # noqa: F401  (legacy import surface)
+    _codec_wire_dtypes,
+    _f32_zeros_like,
+    _leaf_payload_bytes,
+    _merge_dtype_bytes,
+    _send_mask,
+    ef_residual,
+    make_codec_wire,
 )
-from repro.comm.protocol import CommState, Mixer
-from repro.comm.schedule import CompressionSchedule
-from repro.utils.compat import shard_map_unchecked
 
 
-def ef_residual(theta, state: CommState):
-    """The error-feedback residual e = θ − θ̂ (what compression still owes)."""
-    if state.hat == ():
-        raise ValueError("memoryless mixer (error_feedback=False) "
-                         "keeps no residual")
-    return jax.tree.map(
-        lambda x, h: x.astype(jnp.float32) - h, theta, state.hat)
-
-
-def _f32_zeros_like(tree):
-    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
-
-
-def _send_mask(masks):
-    """Per-node "any live outgoing link this round" vector: ∨ over the
-    per-matching link masks.  A node with every incident link down emits a
-    zero payload and its θ̂ stays frozen (nobody could apply the delta)."""
-    send = masks[0]
-    for m in masks[1:]:
-        send = jnp.maximum(send, m)
-    return send
-
-
-def _codec_wire_dtypes(compressor, d: int) -> dict[str, int]:
-    """Physical per-node wire bytes of one encoded leaf, split by HLO dtype.
-
-    The payload a gossip round ppermutes: the quantized values ride as
-    ``s8`` (nibble-packed into half the bytes on the static int4 path),
-    scales as ``f32``; topk/randk move (f32 values, s32 indices); bf16
-    moves the cast tensor.  This is the per-dtype truth the HLO auditor
-    checks collective-permute ops against (``Mixer.wire_dtype_bytes``).
-    """
-    total = compressor.payload_bytes(d)
-    name = getattr(compressor, "name", "")
-    if name.startswith("int"):  # int8 / int4 / int8-kernel
-        q = d if not compressor._pack() else (d + 1) // 2
-        return {"s8": q, "f32": total - q}
-    if name in ("topk", "randk"):
-        return {"f32": total // 2, "s32": total // 2}
-    if name == "bf16":
-        return {"bf16": total}
-    return {"f32": total}
-
-
-def _merge_dtype_bytes(*dicts, scale: float = 1.0) -> dict[str, float]:
-    out: dict[str, float] = {}
-    for d in dicts:
-        for dt, b in d.items():
-            out[dt] = out.get(dt, 0.0) + scale * b
-    return out
-
-
-def _leaf_payload_bytes(compressor, params, k: int) -> int:
-    """Per-round payload bytes one node injects (sum over leaves).
-
-    ``params`` must be the *global* node-stacked view; the per-node leaf
-    size is ``x.size // k`` with ``k`` the mixer's node count, not the
-    leaf's own leading dim — a leaf sharded over extra mesh axes (tensor
-    parallel, fsdp) or a multi-axis node dimension would otherwise make the
-    divisor whatever the local leading extent happens to be and silently
-    skew the fig7/fig8 bytes axes.
-    """
-    total = 0
-    for x in jax.tree.leaves(params):
-        total += compressor.payload_bytes(x.size // k)
-    return total
-
-
-class _CompressedMixerBase(Mixer):
-    def __init__(self, compression: CompressionConfig):
-        self.compression = compression
-        self.compressor = make_compressor(compression)
-        self.gamma = compression.resolved_gamma
-        self.ef = compression.error_feedback
-        self.schedule = (
-            CompressionSchedule(compression.schedule, compression.kind,
-                                compression.ratio)
-            if compression.schedule is not None else None)
-
-    @property
-    def traced_wire(self) -> bool:
-        return self.schedule is not None
-
-    # -- state ----------------------------------------------------------------
-
-    def init_state(self, params) -> CommState:
-        return CommState(
-            hat=_f32_zeros_like(params) if self.ef else (),
-            hat_mix=self._init_hat_mix(params),
-            key=jax.random.PRNGKey(self.compression.seed),
-            res_norm=jnp.float32(0.0),
-            res_ref=jnp.float32(0.0),
-            rounds=jnp.int32(0),
-            wire_bits=jnp.float32(0.0),
-        )
-
-    def _init_hat_mix(self, params):
-        return ()
-
-    def state_specs(self, param_specs) -> CommState:
-        """PartitionSpecs matching :meth:`init_state` (for pjit shardings)."""
-        rep = jax.sharding.PartitionSpec()
-        return CommState(
-            hat=param_specs if self.ef else (),
-            hat_mix=param_specs if self._uses_hat_mix() else (),
-            key=rep, res_norm=rep, res_ref=rep, rounds=rep, wire_bits=rep,
-        )
-
-    def _uses_hat_mix(self) -> bool:
-        return False
-
-    # -- schedule / accounting -------------------------------------------------
-
-    def _rate(self, state: CommState):
-        """Traced codec rate for the round about to run (None = static)."""
-        if self.schedule is None:
-            return None
-        return self.schedule.rate(state.rounds, state.res_norm, state.res_ref)
-
-    def _next_sched_state(self, state: CommState, res_norm):
-        """(res_norm', res_ref', rounds') after a round observing res_norm."""
-        res_ref = (self.schedule.update_ref(state.rounds, res_norm,
-                                            state.res_ref)
-                   if self.schedule is not None else state.res_ref)
-        return res_norm, res_ref, state.rounds + 1
-
-    def _round_wire_bits(self, params, rate, senders: int):
-        """Traced wire bits one round injects: senders × per-node payload."""
-        per_node = 0.0
-        for x in jax.tree.leaves(params):
-            per_node = per_node + self.compressor.payload_bits(
-                x.size // self.k, rate)
-        return jnp.asarray(senders * per_node, jnp.float32)
-
-    # -- shared per-leaf codec step -------------------------------------------
-
-    def _compress(self, x, keys, rate, send_mask=None):
-        """Encode one (K_local, d) block, optionally sender-masked.
-
-        ``send_mask`` (K_local,) in {0, 1} is the dynamic lowering's
-        per-round "this node has at least one live link" vector: masked rows
-        emit a zero payload (nothing crosses the wire, their θ̂ stays
-        frozen).  The kernel quantizer serves it with the fused masked
-        Pallas kernel; other codecs mask the input block, which encodes to
-        an all-zero payload.  ``send_mask=None`` (static lowerings) and an
-        all-ones mask are bit-identical to the unmasked encode.
-        """
-        if send_mask is None:
-            return self.compressor.compress(x, keys, rate)
-        masked = getattr(self.compressor, "compress_masked", None)
-        if masked is not None:
-            return masked(x, keys, send_mask, rate)
-        return self.compressor.compress(x * send_mask[:, None], keys, rate)
-
-    def _encode_leaf(self, x, hat, keys, rate, send_mask=None):
-        """Compress one flattened leaf.
-
-        Returns (payload, public', hat') where ``public'`` is this node's
-        new publicly-reconstructible value (θ̂' in EF mode, C(θ) memoryless)
-        and ``hat'`` is the state to carry (θ̂' or ()).  ``keys`` is one PRNG
-        key per node row; ``rate`` the traced schedule rate (or None);
-        ``send_mask`` the dynamic lowerings' sender mask (see
-        :meth:`_compress`).
-        """
-        with jax.named_scope("obs:codec/encode"):
-            if self.ef:
-                payload = self._compress(x - hat, keys, rate, send_mask)
-                qhat = self.compressor.decompress(payload, x.shape[1])
-                new_hat = hat + qhat
-                return payload, new_hat, new_hat
-            payload = self._compress(x, keys, rate, send_mask)
-            public = self.compressor.decompress(payload, x.shape[1])
-            return payload, public, ()
-
-
-class CompressedDenseMixer(_CompressedMixerBase):
+class CompressedDenseMixer(ComposedMixer):
     """Compressed consensus via einsum over the public copies (simulation)."""
 
     def __init__(self, w: np.ndarray, compression: CompressionConfig):
-        super().__init__(compression)
-        self.w = jnp.asarray(np.asarray(w), jnp.float32)
-        self.k = int(np.asarray(w).shape[0])
-
-    def _round_w(self, state: CommState):
-        """The mixing matrix of the round about to run.
-
-        Static here; ``repro.dynamics`` subclasses return a traced per-round
-        W (time-varying topology / fault-masked), which composes with error
-        feedback exactly because this lowering re-mixes the full public-copy
-        matrix every round (no incremental Σ W θ̂ cache to invalidate).
-        """
-        return self.w
-
-    def _senders(self, w):
-        """Accounting count multiplied by the per-node payload: every node
-        sends once (static dense broadcast model); dynamics subclasses count
-        active directed links instead (traced)."""
-        return self.k
-
-    def __call__(self, theta, state: CommState, *, round=None):
-        with jax.named_scope(f"obs:consensus/{type(self).__name__}"):
-            return self._dense_round(theta, state)
-
-    def _dense_round(self, theta, state: CommState):
-        w = self._round_w(state)
-        key, sub = jax.random.split(state.key)
-        rate = self._rate(state)
-        node_ks = per_node_keys(sub, jnp.arange(self.k))
-        leaves, treedef = jax.tree.flatten(theta)
-        hats = (treedef.flatten_up_to(state.hat) if self.ef
-                else [() for _ in leaves])
-        out_theta, out_hat = [], []
-        res_sq = jnp.float32(0.0)
-        for i, (x, h) in enumerate(zip(leaves, hats)):
-            k = x.shape[0]
-            xf = x.reshape(k, -1).astype(jnp.float32)
-            hf = h.reshape(k, -1) if self.ef else None
-            if self.ef:
-                res_sq = res_sq + jnp.sum(jnp.square(xf - hf))
-            _, public, new_hat = self._encode_leaf(
-                xf, hf, fold_leaf(node_ks, i), rate)
-            mixed = jnp.einsum(
-                "kl,ld->kd", w, public,
-                precision=jax.lax.Precision.HIGHEST)
-            out = xf + self.gamma * (mixed - public)
-            out_theta.append(out.reshape(x.shape).astype(x.dtype))
-            if self.ef:
-                out_hat.append(new_hat.reshape(x.shape))
-        res_norm, res_ref, rounds = self._next_sched_state(
-            state, jnp.sqrt(res_sq))
-        unflat = treedef.unflatten
-        # _replace, not CommState(...): fields this round does not own
-        # (track, ef_rounds, ef_drift, ...) must thread through untouched —
-        # an explicit construction silently resets any field added later
-        # (the PR-4/PR-5 bug class; repro.analysis lint RPR005 enforces it)
-        return unflat(out_theta), state._replace(
-            hat=unflat(out_hat) if self.ef else (), key=key,
-            res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=self._round_wire_bits(theta, rate,
-                                            senders=self._senders(w)))
-
-    def bytes_per_round(self, params) -> int:
-        """Total payload bytes injected per round (every node sends once),
-        at the static full rate (scheduled runs report traced wire_bits)."""
-        return self.k * _leaf_payload_bytes(self.compressor, params, self.k)
+        super().__init__(StaticTopology(w), DenseTransport(),
+                         make_codec_wire(compression))
 
 
-class CompressedGossipMixer(_CompressedMixerBase):
+class CompressedGossipMixer(ComposedMixer):
     """Compressed consensus lowered to per-matching ppermutes of the payload.
 
     Requires K == prod(mesh node axes) (one node per shard), like the
@@ -335,174 +79,10 @@ class CompressedGossipMixer(_CompressedMixerBase):
     """
 
     def __init__(self, decomp, mesh, node_axis, param_specs,
-                 compression: CompressionConfig, replica_axis: str | None = None):
-        super().__init__(compression)
-        axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
-        k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
-        k = decomp.self_weights.shape[0]
-        if k != k_mesh:
-            raise ValueError(
-                f"gossip mixer needs K == mesh node size: K={k}, "
-                f"mesh {axes}={k_mesh}")
-        self.k = k
-        self.mesh = mesh
-        self.axis = node_axis if isinstance(node_axis, str) else tuple(node_axis)
-        self.param_specs = param_specs
-        self.replica_axis = replica_axis
-        self.decomp = decomp
-        self.self_w = jnp.asarray(decomp.self_weights, jnp.float32)
-        self.match_ws = [jnp.asarray(w, jnp.float32)
-                         for w in decomp.matching_weights]
-        self.perms = decomp.ppermute_pairs()
-
-    def __call__(self, theta, state: CommState, *, round=None):
-        with jax.named_scope(f"obs:consensus/{type(self).__name__}"):
-            return self._gossip_round(theta, state)
-
-    def _init_hat_mix(self, params):
-        return _f32_zeros_like(params) if self.ef else ()
-
-    def _uses_hat_mix(self) -> bool:
-        return self.ef
-
-    def _node_index(self):
-        if isinstance(self.axis, str):
-            return jax.lax.axis_index(self.axis)
-        idx = jax.lax.axis_index(self.axis[0])
-        for a in self.axis[1:]:
-            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
-        return idx
-
-    def _gossip_round(self, theta, state: CommState, *, self_w=None,
-                      match_ws=None, masks=None, senders=None):
-        """One compressed gossip round over the matching decomposition.
-
-        The static mixer calls this with no overrides (frozen decomposition
-        weights, every matching link active).  The dynamic lowering
-        (``repro.dynamics.DynamicCompressedGossipMixer``) passes the
-        *traced* per-round vectors gathered from W_r: ``self_w`` (K,),
-        ``match_ws``/``masks`` per matching, and the traced active-link
-        count ``senders`` for wire accounting.  With all-ones masks the
-        masked paths are bit-identical to the unmasked ones, which is what
-        makes the static-schedule anchor exact.
-        """
-        key, sub = jax.random.split(state.key)
-        rate = self._rate(state)
-        p_node = jax.sharding.PartitionSpec(self.axis)
-        p_rep = jax.sharding.PartitionSpec()
-        specs = self.param_specs
-        ef = self.ef
-        have_rate = rate is not None
-        have_masks = masks is not None
-        if self_w is None:
-            self_w = self.self_w
-        match_ws = list(self.match_ws) if match_ws is None else list(match_ws)
-        mask_args = list(masks) if have_masks else []
-
-        def body(t, hat, s, self_w, match_ws, mks, k0, rate_op):
-            r_op = rate_op if have_rate else None
-            send = _send_mask(mks) if have_masks else None
-            leaves, treedef = jax.tree.flatten(t)
-            k_local = leaves[0].shape[0] if leaves else 1
-            # global node ids of the local rows -> dense-identical keys
-            rows = self._node_index() * k_local + jnp.arange(k_local)
-            node_ks = per_node_keys(k0, rows)
-            hats = (treedef.flatten_up_to(hat) if ef
-                    else [() for _ in leaves])
-            mixes = (treedef.flatten_up_to(s) if ef
-                     else [() for _ in leaves])
-            o_t, o_h, o_s = [], [], []
-            res_sq = jnp.float32(0.0)
-            for i, (x, h, sm) in enumerate(zip(leaves, hats, mixes)):
-                k_local = x.shape[0]
-                d = x.size // k_local
-                xf = x.reshape(k_local, d).astype(jnp.float32)
-                if self.replica_axis is not None:
-                    r = self.mesh.shape[self.replica_axis]
-                    xf = jax.lax.psum(xf, self.replica_axis) / r
-                if ef:
-                    res_sq = res_sq + jnp.sum(
-                        jnp.square(xf - h.reshape(k_local, d)))
-                payload, public, new_hat = self._encode_leaf(
-                    xf, h.reshape(k_local, d) if ef else None,
-                    fold_leaf(node_ks, i), r_op, send_mask=send)
-                # EF: s_i += W_ii q_i + Σ_m W_i,perm(i)·dequant(recv) keeps
-                # s_i = Σ_j W_ij θ̂_j current; memoryless: same combine of the
-                # fresh C(θ) messages.  Only the payload crosses the wire.
-                base = sm.reshape(k_local, d) if ef else jnp.zeros_like(xf)
-                delta_or_msg = (public - h.reshape(k_local, d)) if ef else public
-                acc = base + self_w[:, None] * delta_or_msg
-                for m, (pw, perm) in enumerate(zip(match_ws, self.perms)):
-                    recv = jax.tree.map(
-                        lambda leaf: jax.lax.ppermute(leaf, self.axis, perm),
-                        payload)
-                    acc = self._accumulate(acc, recv, pw[:, None], d,
-                                           mask=mks[m] if have_masks else None)
-                out = xf + self.gamma * (acc - public)
-                o_t.append(out.reshape(x.shape).astype(x.dtype))
-                if ef:
-                    o_h.append(new_hat.reshape(x.shape))
-                    o_s.append(acc.reshape(x.shape))
-            res_sq = jax.lax.psum(res_sq, self.axis)
-            u = treedef.unflatten
-            return (u(o_t), u(o_h) if ef else (), u(o_s) if ef else (),
-                    res_sq)
-
-        in_hat = (specs if ef else (), specs if ef else ())
-        shard = shard_map_unchecked(
-            body,
-            mesh=self.mesh,
-            in_specs=(specs, in_hat[0], in_hat[1], p_node,
-                      [p_node] * len(match_ws), [p_node] * len(mask_args),
-                      p_rep, p_rep),
-            out_specs=(specs, in_hat[0], in_hat[1], p_rep),
-        )
-        rate_op = rate if have_rate else jnp.float32(0.0)
-        t2, h2, s2, res_sq = shard(theta, state.hat, state.hat_mix,
-                                   self_w, match_ws, mask_args, sub,
-                                   rate_op)
-        res_norm, res_ref, rounds = self._next_sched_state(
-            state, jnp.sqrt(res_sq))
-        if senders is None:
-            senders = sum(len(pairs) for pairs in self.perms)
-        # _replace so fields this round does not own thread through (RPR005)
-        return t2, state._replace(
-            hat=h2, hat_mix=s2, key=key,
-            res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=self._round_wire_bits(theta, rate, senders=senders))
-
-    def _accumulate(self, acc, payload, weight, d, mask=None):
-        """acc + weight·dequant(payload), with an optional traced link mask.
-
-        ``mask`` (K_local,) in {0, 1}: masked links must contribute exactly
-        acc — the dynamic lowerings gather per-round weights out of W_r, so
-        a dropped link already has weight 0, and the mask makes the
-        passthrough bitwise (and lets a mask-consulting transport skip the
-        payload entirely).  ``mask=None``/all-ones are bit-identical.
-        """
-        if mask is None:
-            fused = getattr(self.compressor, "accumulate", None)
-            if fused is not None:
-                return fused(acc, payload, weight)
-            return acc + weight * self.compressor.decompress(payload, d)
-        fused = getattr(self.compressor, "accumulate_masked", None)
-        if fused is not None:
-            return fused(acc, payload, weight, mask)
-        return acc + (weight * mask[:, None]) * self.compressor.decompress(
-            payload, d)
-
-    def bytes_per_round(self, params) -> int:
-        """Payload bytes per round: active senders per matching × payload,
-        at the static full rate (scheduled runs report traced wire_bits)."""
-        per_node = _leaf_payload_bytes(self.compressor, params, self.k)
-        sends = sum(len(pairs) for pairs in self.perms)
-        return sends * per_node
-
-    def wire_dtype_bytes(self, params) -> dict[str, float]:
-        """Physical collective-permute bytes per round, split by dtype:
-        every matching link moves each leaf's encoded payload."""
-        sends = sum(len(pairs) for pairs in self.perms)
-        per_node = _merge_dtype_bytes(*[
-            _codec_wire_dtypes(self.compressor, x.size // self.k)
-            for x in jax.tree.leaves(params)])
-        return _merge_dtype_bytes(per_node, scale=sends)
+                 compression: CompressionConfig,
+                 replica_axis: str | None = None):
+        super().__init__(
+            None,
+            GossipTransport(decomp, mesh, node_axis, param_specs,
+                            replica_axis=replica_axis),
+            make_codec_wire(compression))

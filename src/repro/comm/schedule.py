@@ -65,6 +65,15 @@ class ScheduleConfig:
       warmup_rounds: adaptive only — rounds run at ``rate_hi`` before the
         reference norm is latched (round 0 compresses the whole of θ against
         θ̂ = 0, so the very first norms are not representative).
+      damp_gamma: sparsifiers only — damp the CHOCO consensus step size in
+        lockstep with the annealed kept fraction: γ_r = min(γ, 2·rate).
+        The stable γ scales with the compression quality δ ≈ kept fraction
+        (Koloskova et al. 2019, Thm. 2), so a ratio annealed to hi/8 with
+        the config-resolved γ = min(1, 2·hi) runs 8× past the theory bound
+        and the error-feedback innovation loop can diverge at the
+        aggressive end.  False keeps γ a static Python float (bit-exact
+        with the unscheduled path at kind="constant").  Quantizer
+        schedules ignore it (γ = 1 is stable at every qmax).
     """
 
     kind: str = "adaptive"
@@ -73,6 +82,7 @@ class ScheduleConfig:
     anneal_rounds: int = 300
     threshold: float = 0.5
     warmup_rounds: int = 10
+    damp_gamma: bool = False
 
     def __post_init__(self):
         if self.kind not in ("constant", "linear", "adaptive"):
@@ -93,10 +103,11 @@ class CompressionSchedule:
 
     def __init__(self, cfg: ScheduleConfig, compression_kind: str,
                  ratio: float):
+        self.sparsifier = compression_kind in ("topk", "randk")
         if compression_kind in ("int8", "int4"):
             hi = _QMAX8 if compression_kind == "int8" else _QMAX4
             lo = _QMAX4
-        elif compression_kind in ("topk", "randk"):
+        elif self.sparsifier:
             hi = ratio
             lo = ratio / 8.0
         else:
@@ -138,15 +149,39 @@ class CompressionSchedule:
             t = jnp.clip(rounds.astype(jnp.float32) / cfg.anneal_rounds,
                          0.0, 1.0)
             return hi + (lo - hi) * t
-        # adaptive: constant-resolution rule.  The quantization step is
-        # scale = absmax/qmax, so rate ∝ innovation norm keeps the *absolute*
-        # codec resolution pinned at its reference level while the bits per
-        # entry fall like log2 of the norm decay (one bit per halving).
-        # ``threshold`` is the decay fraction at which annealing starts.
+        # adaptive: constant-resolution rule.  ``threshold`` is the decay
+        # fraction at which annealing starts.
         frac = res_norm / jnp.maximum(res_ref, jnp.float32(1e-20))
-        r = jnp.clip(hi * frac / cfg.threshold, lo, hi)
+        if self.sparsifier:
+            # sparsifier form: the codec's absolute error is the dropped
+            # mass ≈ (1 − rate)·‖innovation‖, so holding it at its
+            # threshold-level budget (1 − hi)·threshold·ref gives
+            # rate = 1 − (1 − hi)·threshold/frac — the kept fraction falls
+            # as the innovation shrinks, pinned at [lo, hi].
+            r = 1.0 - (1.0 - hi) * jnp.float32(cfg.threshold) \
+                / jnp.maximum(frac, jnp.float32(1e-20))
+        else:
+            # quantizer form: the quantization step is scale = absmax/qmax,
+            # so rate ∝ innovation norm keeps the *absolute* codec
+            # resolution pinned at its reference level while the bits per
+            # entry fall like log2 of the norm decay (one bit per halving).
+            r = hi * frac / cfg.threshold
+        r = jnp.clip(r, lo, hi)
         return jnp.where((rounds >= cfg.warmup_rounds) & (res_ref > 0),
                          r, hi)
+
+    def gamma_for(self, gamma: float, rate):
+        """Consensus step size γ_r for the round's traced ``rate``.
+
+        The static config-resolved γ (a Python float — keeps the
+        unscheduled arithmetic bit-exact) unless ``damp_gamma`` is set on a
+        sparsifier schedule: then γ_r = min(γ, 2·rate), the traced form of
+        ``CompressionConfig.resolved_gamma``'s min(1, 2·ratio) rule, so γ
+        tracks the annealed kept fraction instead of the static maximum.
+        """
+        if not (self.cfg.damp_gamma and self.sparsifier) or rate is None:
+            return gamma
+        return jnp.minimum(jnp.float32(gamma), 2.0 * rate)
 
     def update_ref(self, rounds: jax.Array, res_norm: jax.Array,
                    res_ref: jax.Array) -> jax.Array:

@@ -1,4 +1,4 @@
-"""Consensus (mixing) operators: θ ← θ·W lowered three ways for TPU.
+"""Consensus (mixing) operators: θ ← θ·W lowered four ways for TPU.
 
 All operators act on *node-stacked* pytrees: every leaf has a leading axis K
 (the decentralized node count).  Numerically they all implement the same
@@ -9,13 +9,25 @@ doubly-stochastic mixing; they differ in the collectives XLA emits:
   all-gather of O(K·P) bytes over the node mesh axis. Paper-faithful baseline.
 * ``make_gossip_mixer``  — shard_map + one ``lax.ppermute`` per matching of
   the edge-colored graph. O(deg·P) bytes; matchings of a ring/torus map to
-  the physical neighbor links of the TPU interconnect. Requires
-  K == prod(mesh node axes). This is the communication-efficient lowering
-  that realizes the paper's decentralization benefit on real hardware.
+  the physical neighbor links of the TPU interconnect. This is the
+  communication-efficient lowering that realizes the paper's
+  decentralization benefit on real hardware.
 * ``make_hierarchical_mixer`` — beyond-paper: psum-mean over an inner
   ``replica`` mesh axis (data-parallel replicas inside each node) composed
   with gossip over the outer node axis. Lets K ≪ data-parallel world size so
   that per-chip parameter memory stays bounded for multi-100B models.
+* ``make_hub_mixer``     — the federated lowering: every consensus round is
+  the exact server average (W = 11ᵀ/K, the ρ=0 endpoint of the mixing-rate
+  axis).  Stacked under ``LocalUpdateMixer`` this is FedAvg; with
+  ``gradient_tracking=True`` the tracker correction is exactly SCAFFOLD's
+  control variate (c_i = global window progress − local window progress).
+
+Since the Topology × Transport × Wire refactor every class here is a thin
+constructor shim assembling a layer stack behind
+:class:`repro.comm.composed.ComposedMixer` (see that module for the layer
+contract); the shims keep the historical names, signatures,
+``obs:consensus/<name>`` scopes and bit-exact trajectories
+(``tests/data/mixer_anchors.json``).
 
 Protocol v2: every factory returns a :class:`repro.comm.protocol.Mixer`
 with ONE calling convention, compressed or not::
@@ -35,17 +47,22 @@ state.
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import CompressedDenseMixer, CompressedGossipMixer, CompressionConfig
+from repro.comm.composed import ComposedMixer
 from repro.comm.protocol import Mixer
+from repro.comm.topology import StarTopology, StaticTopology
+from repro.comm.transport import (  # noqa: F401  (legacy import surface)
+    DenseTransport,
+    GossipTransport,
+    StarTransport,
+    _bcast,
+    gossip_mix_local,
+)
+from repro.comm.wire import IdentityWire
 from repro.graphs.mixing import MixingDecomposition
-from repro.utils.compat import shard_map
-from repro.utils.tree import tree_bytes
 
 AxisName = str | tuple[str, ...]
 
@@ -54,26 +71,12 @@ def _compression_enabled(compression: CompressionConfig | None) -> bool:
     return compression is not None and compression.enabled
 
 
-class DenseMixer(Mixer):
+class DenseMixer(ComposedMixer):
     """θ_i ← Σ_j W_ij θ_j via einsum along the leading node axis."""
 
     def __init__(self, w: np.ndarray, compute_dtype=jnp.float32):
-        self.w = jnp.asarray(np.asarray(w), dtype=compute_dtype)
-        self.compute_dtype = compute_dtype
-
-    def _mix(self, theta):
-        def leaf(x):
-            out = jnp.einsum(
-                "kl,l...->k...", self.w, x.astype(self.compute_dtype),
-                precision=jax.lax.Precision.HIGHEST,
-            )
-            return out.astype(x.dtype)
-
-        return jax.tree.map(leaf, theta)
-
-    def bytes_per_round(self, params) -> int:
-        # uncompressed round: every node injects its full param block once
-        return tree_bytes(params)
+        super().__init__(StaticTopology(w), DenseTransport(compute_dtype),
+                         IdentityWire())
 
 
 def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32,
@@ -84,37 +87,7 @@ def make_dense_mixer(w: np.ndarray, compute_dtype=jnp.float32,
     return DenseMixer(w, compute_dtype)
 
 
-def _bcast(v: jax.Array, like: jax.Array) -> jax.Array:
-    """Reshape a (k_local,) weight vector to broadcast over a (k_local, ...) leaf."""
-    return v.reshape(v.shape + (1,) * (like.ndim - 1))
-
-
-def gossip_mix_local(theta_local, self_w, match_ws, perms, axis: AxisName):
-    """The per-shard body of the gossip mixer (must run inside shard_map).
-
-    Args:
-      theta_local: pytree of (k_local, ...) local node blocks.
-      self_w: (k_local,) diagonal weights for the local nodes.
-      match_ws: list of (k_local,) per-matching edge weights.
-      perms: list of ppermute (src, dst) pair lists (static python).
-      axis: mesh axis name(s) carrying the node dimension.
-
-    Wire compression is not an ad-hoc dtype cast here anymore: compressed
-    gossip (bf16 / int8 / int4 / topk / randk + error feedback) lives in
-    ``repro.comm.mixers.CompressedGossipMixer``.
-    """
-
-    def leaf(x):
-        acc = x.astype(jnp.float32) * _bcast(self_w, x)
-        for pw, perm in zip(match_ws, perms):
-            recv = jax.lax.ppermute(x, axis, perm)
-            acc = acc + recv.astype(jnp.float32) * _bcast(pw, x)
-        return acc.astype(x.dtype)
-
-    return jax.tree.map(leaf, theta_local)
-
-
-class GossipMixer(Mixer):
+class GossipMixer(ComposedMixer):
     """Sparse gossip mixing: one collective-permute per graph matching.
 
     ``param_specs`` is a pytree of PartitionSpecs matching the *node-stacked*
@@ -122,57 +95,16 @@ class GossipMixer(Mixer):
     shard_map in/out specs so tensor-parallel dims stay sharded.
     """
 
-    def __init__(self, decomp: MixingDecomposition, mesh: jax.sharding.Mesh,
+    def __init__(self, decomp: MixingDecomposition, mesh,
                  node_axis: AxisName, param_specs):
-        axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
-        k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
-        k = decomp.self_weights.shape[0]
-        if k != k_mesh:
-            raise ValueError(
-                f"gossip mixer needs K == mesh node size: K={k}, "
-                f"mesh {axes}={k_mesh}")
-        self.k = k
-        self.mesh = mesh
-        self.axis: AxisName = (node_axis if isinstance(node_axis, str)
-                               else tuple(node_axis))
-        self.param_specs = param_specs
-        self.self_w = jnp.asarray(decomp.self_weights, jnp.float32)
-        self.match_ws = [jnp.asarray(w, jnp.float32)
-                         for w in decomp.matching_weights]
-        self.perms = decomp.ppermute_pairs()
-        self._p_node = jax.sharding.PartitionSpec(self.axis)
-
-    def _mix(self, theta):
-        body = partial(gossip_mix_local, axis=self.axis, perms=self.perms)
-        return shard_map(
-            lambda t, sw, mws: body(t, sw, mws),
-            mesh=self.mesh,
-            in_specs=(self.param_specs, self._p_node,
-                      [self._p_node] * len(self.match_ws)),
-            out_specs=self.param_specs,
-        )(theta, self.self_w, list(self.match_ws))
-
-    def bytes_per_round(self, params) -> int:
-        sends = sum(len(pairs) for pairs in self.perms)
-        return sends * tree_bytes(params) // self.k
-
-    def wire_dtype_bytes(self, params) -> dict[str, float]:
-        """Physical collective-permute bytes per round by dtype: every
-        matching link moves each leaf shard at its own precision."""
-        from repro.utils.hlo import hlo_dtype_name
-
-        sends = sum(len(pairs) for pairs in self.perms)
-        out: dict[str, float] = {}
-        for x in jax.tree.leaves(params):
-            dt = hlo_dtype_name(x.dtype)
-            out[dt] = out.get(dt, 0.0) \
-                + sends * (x.size // self.k) * x.dtype.itemsize
-        return out
+        super().__init__(
+            None, GossipTransport(decomp, mesh, node_axis, param_specs),
+            IdentityWire())
 
 
 def make_gossip_mixer(
     decomp: MixingDecomposition,
-    mesh: jax.sharding.Mesh,
+    mesh,
     node_axis: AxisName,
     param_specs,
     compression: CompressionConfig | None = None,
@@ -194,30 +126,17 @@ class HierarchicalMixer(GossipMixer):
 
     def __init__(self, decomp, mesh, node_axis, replica_axis: str,
                  param_specs):
-        super().__init__(decomp, mesh, node_axis, param_specs)
-        self.replica_axis = replica_axis
+        ComposedMixer.__init__(
+            self, None,
+            GossipTransport(decomp, mesh, node_axis, param_specs,
+                            replica_axis=replica_axis),
+            IdentityWire())
         self._r_size = mesh.shape[replica_axis]
-
-    def _mix(self, theta):
-        def body(t, sw, mws):
-            # average the within-node replicas (plain DP all-reduce over ICI)
-            t = jax.tree.map(
-                lambda x: jax.lax.psum(x, self.replica_axis) / self._r_size, t
-            )
-            return gossip_mix_local(t, sw, mws, self.perms, self.axis)
-
-        return shard_map(
-            body,
-            mesh=self.mesh,
-            in_specs=(self.param_specs, self._p_node,
-                      [self._p_node] * len(self.match_ws)),
-            out_specs=self.param_specs,
-        )(theta, self.self_w, list(self.match_ws))
 
 
 def make_hierarchical_mixer(
     decomp: MixingDecomposition,
-    mesh: jax.sharding.Mesh,
+    mesh,
     node_axis: AxisName,
     replica_axis: str,
     param_specs,
@@ -230,18 +149,42 @@ def make_hierarchical_mixer(
     return HierarchicalMixer(decomp, mesh, node_axis, replica_axis, param_specs)
 
 
-class IdentityMixer(Mixer):
+class IdentityMixer(ComposedMixer):
     """No communication — for ablations (pure local SGD)."""
 
-    def _mix(self, theta):
-        return theta
-
-    def bytes_per_round(self, params) -> int:
-        return 0
+    def __init__(self):
+        super().__init__(None, None, IdentityWire())
 
 
 def make_identity_mixer() -> Mixer:
     return IdentityMixer()
+
+
+class HubMixer(ComposedMixer):
+    """Hub-and-spoke (federated) consensus: the exact global average.
+
+    Star topology × star transport: each round every node uploads its block
+    and downloads the mean — one round reaches consensus exactly (ρ = 0).
+    ``LocalUpdateMixer(HubMixer(k), H)`` is FedAvg with H local steps;
+    adding ``gradient_tracking=True`` yields the SCAFFOLD control variate
+    (the tracker update (Δ̄ − Δ_i)/H under W = 11ᵀ/K is exactly c_i).
+    """
+
+    def __init__(self, k: int):
+        super().__init__(StarTopology(k), StarTransport(k), IdentityWire())
+
+
+def make_hub_mixer(k: int,
+                   compression: CompressionConfig | None = None) -> Mixer:
+    """Federated server averaging (or its compressed counterpart).
+
+    The compressed hub rides the dense transport with the star W — the
+    codec round re-mixes the full public-copy matrix, which with W = 11ᵀ/K
+    is exactly "server averages the reconstructed client innovations".
+    """
+    if _compression_enabled(compression):
+        return CompressedDenseMixer(np.full((k, k), 1.0 / k), compression)
+    return HubMixer(k)
 
 
 class RepeatMixer(Mixer):

@@ -153,6 +153,19 @@ def build_train_step(
     # wrong for them: report the mixer's traced per-round wire_bits instead
     # (and skip computing the dead static estimate entirely)
     traced_wire = mixer.traced_wire
+    # straggler-skips-compute: replay the mixer's node-up vector to zero the
+    # robust gradient scale of down nodes (FaultConfig.straggler_skips_compute;
+    # the fault process is a pure function of CommState.rounds, so the mask
+    # matches the consensus round's link failures exactly).  Unwrap stacking
+    # wrappers (LocalUpdateMixer/RepeatMixer) to find the faulted mixer.
+    _m, step_faults = mixer, None
+    while _m is not None and step_faults is None:
+        step_faults = getattr(_m, "faults", None)
+        _m = getattr(_m, "inner", None)
+    if not (step_faults is not None and step_faults.enabled
+            and step_faults.straggler_skips_compute
+            and (step_faults.straggler_p > 0 or step_faults.outage_p > 0)):
+        step_faults = None
 
     def per_node(params_i, batch_i):
         if loss_has_aux:
@@ -179,6 +192,14 @@ def build_train_step(
         with scope("obs:dr_weighting"):
             scale = robust_scale(losses, cfg.robust)  # (K,)
             lam = mixture_weights(losses, cfg.robust)  # (K,) adversarial λ*
+            if step_faults is not None:
+                from repro.dynamics.faults import fault_keep_matrix
+
+                # pre-increment clock: the same round index the mixer's
+                # fault replay will consume this step
+                _, up = fault_keep_matrix(
+                    step_faults, state.comm.rounds, losses.shape[0])
+                scale = scale * up
             scaled_grads = jax.tree.map(
                 lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype),
                 grads,

@@ -41,8 +41,10 @@ def add_dynamics_cli_args(ap) -> None:
     (``repro.dynamics``) on an argparse parser."""
     ap.add_argument("--topology", default="static", choices=_TOPOLOGY_CHOICES,
                     help="per-round topology process: static graph, "
-                         "round-robin matchings, Bernoulli link dropout, or "
-                         "per-round geometric re-draws (repro.dynamics)")
+                         "round-robin matchings, Bernoulli link dropout, "
+                         "per-round geometric re-draws (repro.dynamics), or "
+                         "hub — federated server averaging (FedAvg with "
+                         "--local-updates; SCAFFOLD with --gradient-tracking)")
     ap.add_argument("--drop-p", type=float, default=0.0,
                     help="link dropout probability for --topology dropout")
     ap.add_argument("--radius", type=float, default=0.5,
@@ -72,6 +74,11 @@ def add_dynamics_cli_args(ap) -> None:
                          "outage window (correlated faults)")
     ap.add_argument("--outage-len", type=int, default=10,
                     help="rounds per outage window")
+    ap.add_argument("--straggler-skips-compute", action="store_true",
+                    help="down nodes (stragglers/outages) lose their "
+                         "gradient too: the robust per-node scale is masked "
+                         "with the round's up vector, modeling preempted "
+                         "compute instead of slow links")
 
 
 def add_obs_cli_args(ap) -> None:
@@ -181,6 +188,7 @@ class TrainerSpec:
     straggler_p: float = 0.0              # per-round node comm skips
     outage_p: float = 0.0                 # correlated node outages
     outage_len: int = 10
+    straggler_skips_compute: bool = False  # down nodes lose their gradient too
     seed: int = 0
     jit: bool = True
     sanitize: bool = False                # checkify invariant checks in-step
@@ -199,7 +207,8 @@ class TrainerSpec:
         if self.straggler_p > 0 or self.outage_p > 0:
             faults = FaultConfig(
                 straggler_p=self.straggler_p, outage_p=self.outage_p,
-                outage_len=self.outage_len, seed=self.seed)
+                outage_len=self.outage_len, seed=self.seed,
+                straggler_skips_compute=self.straggler_skips_compute)
         cfg = DynamicsConfig(
             topology=self.topology, drop_p=self.drop_p, radius=self.radius,
             local_updates=self.local_updates,
@@ -321,6 +330,8 @@ class TrainerSpec:
             straggler_p=getattr(args, "straggler_p", 0.0),
             outage_p=getattr(args, "outage_p", 0.0),
             outage_len=getattr(args, "outage_len", 10),
+            straggler_skips_compute=getattr(
+                args, "straggler_skips_compute", False),
             seed=args.seed,
             sanitize=getattr(args, "sanitize", False),
         )

@@ -35,6 +35,11 @@ local.py    — :class:`LocalUpdateMixer`: H local steps per consensus round
 config.py   — :class:`DynamicsConfig` + :func:`build_dynamic_mixer`: the
               declarative entry point used by ``TrainerSpec``
               (``--topology/--drop-p/--local-updates/...`` CLI flags).
+              ``--topology hub`` selects the federated lowering
+              (:class:`repro.core.consensus.HubMixer` — exact server
+              average; FedAvg under ``--local-updates H``, SCAFFOLD with
+              ``--gradient-tracking``); hub has no fault model yet, so
+              hub + faults raises at config build.
 
 Conventions — how H, dropout p and the EF step size γ interact:
 

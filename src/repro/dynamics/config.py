@@ -23,7 +23,7 @@ from repro.dynamics.local import LocalUpdateMixer
 from repro.dynamics.mixers import DynamicCompressedDenseMixer, DynamicDenseMixer
 from repro.dynamics.schedule import make_schedule
 
-TOPOLOGY_KINDS = ("static", "round_robin", "dropout", "geometric")
+TOPOLOGY_KINDS = ("static", "round_robin", "dropout", "geometric", "hub")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,7 +32,12 @@ class DynamicsConfig:
 
     Attributes:
       topology: "static" | "round_robin" | "dropout" | "geometric" —
-        the per-round topology process (``repro.dynamics.schedule``).
+        the per-round topology process (``repro.dynamics.schedule``) —
+        or "hub": the federated hub-and-spoke lowering (every consensus
+        round is the exact server average, W = 11ᵀ/K; with
+        ``local_updates`` H > 1 this is FedAvg, and adding
+        ``gradient_tracking`` yields the SCAFFOLD control variate).
+        "hub" has no fault/schedule model yet, so it rejects ``faults``.
       drop_p: link dropout probability for topology="dropout".
       radius: connection radius for topology="geometric" re-draws.
       local_updates: H — optimizer steps per consensus round (H > 1 = local
@@ -82,6 +87,13 @@ class DynamicsConfig:
             raise ValueError("ef_rebase_threshold must be >= 0")
         if self.topology == "dropout" and not 0.0 <= self.drop_p < 1.0:
             raise ValueError("drop_p must be in [0, 1)")
+        if (self.topology == "hub" and self.faults is not None
+                and self.faults.enabled):
+            raise ValueError(
+                "topology='hub' (federated server averaging) has no "
+                "fault/schedule model yet — the star topology is static "
+                "(ROADMAP: federated faults); drop faults or pick a "
+                "decentralized topology")
         if self.drop_p > 0 and self.topology != "dropout":
             # a sweep over --drop-p without --topology dropout must fail
             # loudly, not silently train p identical static baselines
@@ -107,8 +119,19 @@ def build_dynamic_mixer(cfg: DynamicsConfig, w: np.ndarray,
 
     ``w`` is the base doubly-stochastic matrix (e.g. Metropolis weights of
     the configured graph); topology="geometric" ignores its weights and
-    keeps only K.
+    keeps only K, and topology="hub" (federated) keeps only K as well —
+    the star W = 11ᵀ/K replaces the graph entirely.
     """
+    if cfg.topology == "hub":
+        from repro.core.consensus import make_hub_mixer
+
+        mixer = make_hub_mixer(int(np.asarray(w).shape[0]), compression)
+        if cfg.local_updates > 1 or cfg.gradient_tracking:
+            # FedAvg; with gradient_tracking the tracker correction under
+            # W = 11^T/K is exactly SCAFFOLD's control variate
+            mixer = LocalUpdateMixer(mixer, cfg.local_updates,
+                                     gradient_tracking=cfg.gradient_tracking)
+        return mixer
     schedule = make_schedule(
         cfg.topology, w=w, k=int(np.asarray(w).shape[0]),
         drop_p=cfg.drop_p, radius=cfg.radius, seed=cfg.seed)

@@ -49,6 +49,15 @@ class FaultConfig:
         ``outage_len`` rounds (correlated failures).
       outage_len: rounds per outage window.
       seed: PRNG seed of the fault process (independent of codec noise).
+      straggler_skips_compute: when True a down node (straggler or outage)
+        loses its *gradient* too, not just its links: the train step masks
+        the robust per-node scale with the round's ``up`` vector, so the
+        node's parameters pass through the optimizer unchanged that round.
+        This models dead compute (preempted worker) instead of the default
+        slow-link semantics; the DR weighting then cannot lean on a node
+        that produced no work.  The mask replays the same
+        ``fold_in(seed, round)`` process the mixer uses, so compute and
+        communication fail in lockstep.
     """
 
     link_drop_p: float = 0.0
@@ -56,6 +65,7 @@ class FaultConfig:
     outage_p: float = 0.0
     outage_len: int = 10
     seed: int = 0
+    straggler_skips_compute: bool = False
 
     def __post_init__(self):
         for name in ("link_drop_p", "straggler_p", "outage_p"):

@@ -1,4 +1,4 @@
-"""Consensus mixers over time-varying graphs, faults, and local-update rounds.
+"""Consensus mixers over time-varying graphs and faults (layer-stack shims).
 
 Every mixer here follows the uniform v2 protocol
 (``mix(theta, CommState, *, round)``) and keeps the round's topology a
@@ -7,27 +7,29 @@ Every mixer here follows the uniform v2 protocol
 step as data, so a whole dropout/straggler/local-update sweep compiles ONE
 program per configuration (asserted by ``benchmarks/fig9_dynamics.py``).
 
-* :class:`DynamicDenseMixer`   — einsum with the traced per-round W; runs
-  any schedule including moving-support ones (geometric re-draws).
-* :class:`DynamicGossipMixer`  — shard_map gossip over the *static* edge
-  coloring of the union support with traced per-matching weights/masks;
-  with an ``error_feedback=False`` int8 config, the memoryless masked
-  Pallas wire (the stall ablation); with an EF config it constructs a
-  :class:`DynamicCompressedGossipMixer`.
-* :class:`DynamicCompressedDenseMixer` — error-feedback compressed
-  consensus (any ``repro.comm`` codec) under a dynamic topology.  EF
-  composes with faults *exactly* on this lowering because the dense mixer
-  re-mixes the full public-copy matrix every round.
-* :class:`DynamicCompressedGossipMixer` — EF on the ppermute lowering: the
-  incremental ``hat_mix`` cache (s_i = Σ_j W_ij θ̂_j) advances by θ̂-delta
-  gossip weighted with the *current* traced W_r (average-preserving under
-  any doubly-stochastic sequence) and is re-based from full-precision
-  public copies every ``ef_rebase_every`` rounds, clocked by
-  ``CommState.ef_rounds``.
-* :class:`LocalUpdateMixer`    — wraps ANY v2 mixer: H−1 local rounds
-  between consensus rounds, with an optional gradient-tracking correction
-  (carried in ``CommState.track``) that steers each local step by the gap
-  between globally-mixed and local window progress.
+Since the Topology × Transport × Wire refactor the classes here are thin
+constructor shims over :class:`repro.comm.composed.ComposedMixer`, all
+sharing :class:`repro.comm.topology.ScheduledTopology` (schedule ∘ fault
+replay) as the topology layer:
+
+* :class:`DynamicDenseMixer`   = Scheduled × Dense × Identity — einsum with
+  the traced per-round W; runs any schedule including moving-support ones.
+* :class:`DynamicGossipMixer`  = Scheduled × Gossip × Identity (or the
+  memoryless masked int8/int4 Pallas wire with an ``error_feedback=False``
+  ``quantized`` config); with an EF config it constructs a
+  :class:`DynamicCompressedGossipMixer` instead.
+* :class:`DynamicCompressedDenseMixer` = Scheduled × Dense × codec wire —
+  EF composes with faults *exactly* on this lowering because the dense
+  round re-mixes the full public-copy matrix every round.
+* :class:`DynamicCompressedGossipMixer` = Scheduled × Gossip ×
+  (ChocoWire + RebaseClock) — EF on the ppermute lowering: the incremental
+  ``hat_mix`` cache (s_i = Σ_j W_ij θ̂_j) advances by θ̂-delta gossip
+  weighted with the *current* traced W_r and is re-based from
+  full-precision public copies every ``ef_rebase_every`` rounds, clocked
+  by ``CommState.ef_rounds``.
+* :class:`repro.dynamics.local.LocalUpdateMixer` — wraps ANY v2 mixer:
+  H−1 local rounds between consensus rounds, with an optional
+  gradient-tracking correction carried in ``CommState.track``.
 
 Wire accounting: the dynamic mixers count *active directed links* × the
 per-node payload each round (traced ``wire_bits``), so a straggler/outage
@@ -50,139 +52,53 @@ Conventions (H / dropout / γ — see also the package docstring):
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.compressors import CompressionConfig, fold_leaf, per_node_keys
-from repro.comm.mixers import (
-    CompressedDenseMixer,
-    CompressedGossipMixer,
-    _codec_wire_dtypes,
-    _leaf_payload_bytes,
-    _merge_dtype_bytes,
-    _send_mask,
+from repro.comm.composed import ComposedMixer
+from repro.comm.compressors import CompressionConfig
+from repro.comm.mixers import CompressedDenseMixer, CompressedGossipMixer
+from repro.comm.topology import (
+    ScheduledTopology,
+    active_links as _active_links,  # noqa: F401  (legacy import surface)
+    active_sends as _active_sends,  # noqa: F401
+    gather_round_vectors,
 )
-from repro.comm.protocol import CommState, Mixer
-from repro.dynamics.faults import FaultConfig, fault_keep_matrix
+from repro.comm.transport import DenseTransport, GossipTransport
+from repro.comm.wire import (
+    ChocoWire,
+    IdentityWire,
+    MaskedQuantWire,
+    RebaseClock,
+    make_codec_wire,
+)
+from repro.dynamics.faults import FaultConfig
 from repro.dynamics.schedule import StaticSchedule, TopologySchedule
-from repro.graphs.mixing import renormalize_masked_weights
-from repro.utils.compat import shard_map, shard_map_unchecked
-from repro.utils.tree import tree_bytes
 
 AxisName = str | tuple[str, ...]
 
-
-def _active_links(w) -> jax.Array:
-    """Traced count of directed links with nonzero weight this round."""
-    k = w.shape[0]
-    off = 1.0 - jnp.eye(k, dtype=jnp.float32)
-    return jnp.sum((w > 0).astype(jnp.float32) * off)
-
-
-def gather_round_vectors(w, perm_idx):
-    """(self_w, [match_w], [mask]) gathered from a traced round matrix W_r.
-
-    ``perm_idx`` is the static edge coloring of the union support (one (K,)
-    involution per matching); the per-matching edge weights and {0, 1} link
-    masks are gathered out of W_r, so a dropped/faulted link carries weight
-    0 and mask 0 without the ppermute structure ever changing.  Shared by
-    the plain/memoryless and error-feedback dynamic gossip lowerings — the
-    single source of per-round wire truth.
-    """
-    k = w.shape[0]
-    arange = np.arange(k)
-    self_w = jnp.diagonal(w)
-    match_ws, masks = [], []
-    for pidx in perm_idx:
-        active = pidx != arange
-        pw = jnp.where(active, w[arange, pidx], 0.0)
-        match_ws.append(pw)
-        masks.append((pw > 0).astype(jnp.float32))
-    return self_w, match_ws, masks
+__all__ = [
+    "DynamicDenseMixer", "DynamicGossipMixer",
+    "DynamicCompressedDenseMixer", "DynamicCompressedGossipMixer",
+    "gather_round_vectors",
+]
 
 
-def _active_sends(masks) -> jax.Array:
-    """Traced count of active directed matching links (wire accounting)."""
-    sends = jnp.float32(0.0)
-    for m in masks:
-        sends = sends + jnp.sum(m)
-    return sends
-
-
-class _DynamicTopology:
-    """Shared per-round weight derivation: schedule ∘ faults."""
-
-    def _init_topology(self, schedule: TopologySchedule,
-                       faults: FaultConfig | None):
-        # "topology", not "schedule": the compressed base class already owns
-        # a .schedule (the codec-rate schedule) and both compose here
-        self.topology = schedule
-        self.faults = (faults if faults is not None and faults.enabled
-                       else None)
-        self.k = schedule.k
-
-    def _round_topology_w(self, rounds) -> jax.Array:
-        w = self.topology.round_weights(rounds)
-        if self.faults is not None:
-            keep, _ = fault_keep_matrix(self.faults, rounds, self.k)
-            w = renormalize_masked_weights(w, keep)
-        return w
-
-
-class DynamicDenseMixer(Mixer, _DynamicTopology):
+class DynamicDenseMixer(ComposedMixer):
     """θ ← W_r·θ with a traced per-round W_r (einsum lowering).
 
     Bit-identical to :class:`repro.core.consensus.DenseMixer` under a
     :class:`~repro.dynamics.schedule.StaticSchedule` with no faults.
     """
 
-    traced_wire = True
-
     def __init__(self, schedule: TopologySchedule,
                  faults: FaultConfig | None = None,
                  compute_dtype=jnp.float32):
-        self._init_topology(schedule, faults)
-        self.compute_dtype = compute_dtype
-
-    def _apply(self, w, theta):
-        def leaf(x):
-            out = jnp.einsum(
-                "kl,l...->k...", w, x.astype(self.compute_dtype),
-                precision=jax.lax.Precision.HIGHEST,
-            )
-            return out.astype(x.dtype)
-
-        return jax.tree.map(leaf, theta)
-
-    def mix_tree(self, tree, state: CommState):
-        """Pure consensus application with this round's topology (no state
-        advance) — the tracker exchange of gradient tracking."""
-        return self._apply(self._round_topology_w(state.rounds), tree)
-
-    def __call__(self, theta, state: CommState, *, round=None):
-        with jax.named_scope("obs:consensus/DynamicDenseMixer"):
-            w = self._round_topology_w(state.rounds)
-            mixed = self._apply(w, theta)
-        per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
-        return mixed, state._replace(
-            rounds=state.rounds + 1,
-            wire_bits=_active_links(w) * per_node_bits,
-        )
-
-    def bytes_per_round(self, params) -> int:
-        """Fault-free static estimate over the base support (per-link)."""
-        try:
-            base = np.asarray(self.topology.base_weights())
-            sends = int(np.count_nonzero(base) - self.k)
-        except ValueError:  # moving support: assume complete
-            sends = self.k * (self.k - 1)
-        return sends * tree_bytes(params) // self.k
+        super().__init__(ScheduledTopology(schedule, faults),
+                         DenseTransport(compute_dtype), IdentityWire())
 
 
-class DynamicGossipMixer(Mixer, _DynamicTopology):
+class DynamicGossipMixer(ComposedMixer):
     """Gossip over the static union-support matchings with traced weights.
 
     The edge coloring (and thus the ppermute structure) is frozen at build
@@ -200,14 +116,13 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
       is re-based from full public copies every ``ef_rebase_every`` rounds
       (see that class).  Before PR 5 an EF config here silently downgraded
       to the memoryless wire — the exact ablation documented to stall.
-    * ``error_feedback=False`` — the memoryless ablation wire (int8 only):
-      each matching runs the fused masked Pallas kernels, quantize(mask) →
+    * ``error_feedback=False`` — the memoryless ablation wire
+      (:class:`repro.comm.wire.MaskedQuantWire`, int8/int4 only): each
+      matching runs the fused masked Pallas kernels, quantize(mask) →
       ppermute(int8 payload + scales) → masked dequantize-accumulate, with
       a fresh C(θ) every round.  ``ef_rebase_every`` is ignored (there is
       no cache to re-base).
     """
-
-    traced_wire = True
 
     def __new__(cls, schedule: TopologySchedule = None, mesh=None,
                 node_axis: AxisName = None, param_specs=None,
@@ -236,233 +151,46 @@ class DynamicGossipMixer(Mixer, _DynamicTopology):
                 "ef_rebase_threshold drives the adaptive hat_mix re-base, "
                 "which only exists on the error-feedback wire — pass an "
                 "error_feedback=True CompressionConfig")
-        self._init_topology(schedule, faults)
-        decomp = schedule.decomposition()
-        axes = (node_axis,) if isinstance(node_axis, str) else tuple(node_axis)
-        k_mesh = int(np.prod([mesh.shape[a] for a in axes]))
-        if self.k != k_mesh:
-            raise ValueError(
-                f"gossip mixer needs K == mesh node size: K={self.k}, "
-                f"mesh {axes}={k_mesh}")
-        self.mesh = mesh
-        self.axis: AxisName = (node_axis if isinstance(node_axis, str)
-                               else tuple(node_axis))
-        self.param_specs = param_specs
-        self.perms = decomp.ppermute_pairs()
-        self._perm_idx = [np.asarray(p, np.int64) for p in decomp.matchings]
+        topo = ScheduledTopology(schedule, faults)
+        transport = GossipTransport(schedule.decomposition(), mesh,
+                                    node_axis, param_specs)
+        wire = (MaskedQuantWire(quantized)
+                if quantized is not None and quantized.enabled
+                else IdentityWire())
+        super().__init__(topo, transport, wire)
+        if not hasattr(self, "quantized"):
+            self.quantized = None
         self._arange = np.arange(self.k)
-        self._p_node = jax.sharding.PartitionSpec(self.axis)
-        self.quantized = None
-        if quantized is not None and quantized.enabled:
-            if quantized.kind not in ("int8", "int4"):
-                raise ValueError(
-                    "the masked quant_gossip wire serves kind='int8' or "
-                    "'int4' (the traced-qmax rate in the int8 container)")
-            if quantized.schedule is not None:
-                raise ValueError(
-                    "rate schedules are not supported on the masked wire")
-            self.quantized = quantized
-            # int4 rides the int8 container at qmax=7 (the masked kernel's
-            # traced rate); payload accounting bills the effective bits,
-            # like the scheduled-rate static path
-            self._qmax = 127 if quantized.kind == "int8" else 7
-            from repro.comm.compressors import KernelInt8Quantizer
-
-            self._compressor = KernelInt8Quantizer(
-                quantized.block_d, quantized.interpret)
-
-    @property
-    def compression(self):
-        return self.quantized
-
-    def init_state(self, params) -> CommState:
-        state = super().init_state(params)
-        if self.quantized is not None:
-            state = state._replace(
-                key=jax.random.PRNGKey(self.quantized.seed))
-        return state
-
-    def _round_vectors(self, w):
-        """(self_w, [match_w], [mask]) gathered from the traced W_r."""
-        return gather_round_vectors(w, self._perm_idx)
-
-    def _node_index(self):
-        if isinstance(self.axis, str):
-            return jax.lax.axis_index(self.axis)
-        idx = jax.lax.axis_index(self.axis[0])
-        for a in self.axis[1:]:
-            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
-        return idx
-
-    def mix_tree(self, tree, state: CommState):
-        """Full-precision gossip of an arbitrary pytree with this round's
-        weights (gradient-tracking tracker exchange)."""
-        w = self._round_topology_w(state.rounds)
-        self_w, match_ws, _ = self._round_vectors(w)
-        return self._plain_gossip(tree, self_w, match_ws)
-
-    def _plain_gossip(self, theta, self_w, match_ws):
-        from repro.core.consensus import gossip_mix_local
-
-        body = partial(gossip_mix_local, axis=self.axis, perms=self.perms)
-        return shard_map(
-            lambda t, sw, mws: body(t, sw, mws),
-            mesh=self.mesh,
-            in_specs=(self.param_specs, self._p_node,
-                      [self._p_node] * len(self.perms)),
-            out_specs=self.param_specs,
-        )(theta, self_w, list(match_ws))
-
-    def _quantized_gossip(self, theta, self_w, match_ws, masks, key):
-        from repro.kernels.quant_gossip.ops import masked_quant_gossip_round
-
-        cfg = self.quantized
-        interpret = cfg.interpret or jax.default_backend() != "tpu"
-
-        def body(t, sw, mws, mks, k0):
-            leaves, treedef = jax.tree.flatten(t)
-            out = []
-            for i, x in enumerate(leaves):
-                k_local = x.shape[0]
-                d = x.size // k_local
-                xf = x.reshape(k_local, d).astype(jnp.float32)
-                acc = xf * sw[:, None]
-                lk = jax.random.fold_in(
-                    jax.random.fold_in(k0, i), self._node_index())
-                for m, (pw, mk, perm) in enumerate(
-                        zip(mws, mks, self.perms)):
-                    acc = masked_quant_gossip_round(
-                        xf, acc, pw, mk, self.axis, perm,
-                        jax.random.fold_in(lk, m), qmax=self._qmax,
-                        block_d=cfg.block_d, interpret=interpret,
-                        use_kernel=cfg.use_kernel)
-                out.append(acc.reshape(x.shape).astype(x.dtype))
-            return treedef.unflatten(out)
-
-        p_rep = jax.sharding.PartitionSpec()
-        n = len(self.perms)
-        return shard_map_unchecked(
-            body,
-            mesh=self.mesh,
-            in_specs=(self.param_specs, self._p_node,
-                      [self._p_node] * n, [self._p_node] * n, p_rep),
-            out_specs=self.param_specs,
-        )(theta, self_w, list(match_ws), list(masks), key)
-
-    def __call__(self, theta, state: CommState, *, round=None):
-        with jax.named_scope("obs:consensus/DynamicGossipMixer"):
-            w = self._round_topology_w(state.rounds)
-            self_w, match_ws, masks = self._round_vectors(w)
-            key = state.key
-            if self.quantized is None:
-                mixed = self._plain_gossip(theta, self_w, match_ws)
-                per_node_bits = 8.0 * (tree_bytes(theta) // self.k)
-            else:
-                key, sub = jax.random.split(state.key)
-                mixed = self._quantized_gossip(theta, self_w, match_ws,
-                                               masks, sub)
-                # shape-only host math (.size / .k are python ints): no
-                # tracer is materialized
-                per_node_bits = float(sum(  # repro: noqa[RPR002]
-                    self._quant_leaf_bits(x.size // self.k)
-                    for x in jax.tree.leaves(theta)))
-        sends = sum(jnp.sum(m) for m in masks)
-        return mixed, state._replace(
-            key=key,
-            rounds=state.rounds + 1,
-            wire_bits=jnp.asarray(sends * per_node_bits, jnp.float32),
-        )
-
-    def _quant_leaf_bits(self, d: int) -> float:
-        """Effective wire bits per node for one leaf: ceil(log2(2qmax+1))
-        per entry — 8 for int8, 4 for the int4 rate riding the int8
-        container (what a bit-packing transport moves) — plus the
-        per-(node, block) f32 scales.  Pure python (this is called from a
-        traced context; staging a constant would leak a tracer)."""
-        import math
-
-        bits = math.ceil(math.log2(2 * self._qmax + 1))
-        # d is a leaf .size — host int, see docstring
-        return float(bits * d + 32 * self._compressor._n_blocks(d))  # repro: noqa[RPR002]
-
-    def bytes_per_round(self, params) -> int:
-        """Fault-free static estimate: every matching edge active."""
-        sends = sum(len(pairs) for pairs in self.perms)
-        if self.quantized is None:
-            return sends * tree_bytes(params) // self.k
-        per_node = sum(self._quant_leaf_bits(x.size // self.k)
-                       for x in jax.tree.leaves(params)) / 8.0
-        return round(sends * per_node)
-
-    def wire_dtype_bytes(self, params) -> dict[str, float]:
-        """Physical per-dtype collective-permute bytes per round.
-
-        The masked wire always moves the full union-support buffers (a
-        mask-consulting transport is a ROADMAP item), and the int4 rate
-        rides the int8 *container*: the s8 bytes here are per-entry
-        container bytes, deliberately larger than the effective-bit
-        ``bytes_per_round`` accounting."""
-        from repro.utils.hlo import hlo_dtype_name
-
-        sends = sum(len(pairs) for pairs in self.perms)
-        out: dict[str, float] = {}
-        for x in jax.tree.leaves(params):
-            d = x.size // self.k
-            if self.quantized is None:
-                dt = hlo_dtype_name(x.dtype)
-                out[dt] = out.get(dt, 0.0) + sends * d * x.dtype.itemsize
-            else:
-                out["s8"] = out.get("s8", 0.0) + sends * d
-                out["f32"] = out.get("f32", 0.0) \
-                    + sends * 4.0 * self._compressor._n_blocks(d)
-        return out
 
 
-class DynamicCompressedDenseMixer(CompressedDenseMixer, _DynamicTopology):
+class DynamicCompressedDenseMixer(CompressedDenseMixer):
     """Error-feedback compressed consensus over a dynamic topology.
 
-    Inherits the whole EF machinery (public copies, innovation codec,
-    schedules) from :class:`~repro.comm.mixers.CompressedDenseMixer` and
-    swaps the static W for the schedule's traced per-round matrix — exact,
-    because this lowering re-mixes the full public-copy matrix every round.
-    A node with no live links this round mixes with W row e_i: its θ (and
-    accounting) are untouched; its accumulated innovation ships on its next
-    live round.
+    The same codec wire as :class:`~repro.comm.mixers.CompressedDenseMixer`
+    (public copies, innovation codec, schedules) over the schedule's traced
+    per-round matrix — exact, because this lowering re-mixes the full
+    public-copy matrix every round.  A node with no live links this round
+    mixes with W row e_i: its θ (and accounting) are untouched; its
+    accumulated innovation ships on its next live round.
     """
 
     def __init__(self, schedule: TopologySchedule,
                  compression: CompressionConfig,
                  faults: FaultConfig | None = None):
-        try:
-            base = np.asarray(schedule.base_weights())
-        except ValueError:  # moving support (geometric): only k is needed
-            base = np.eye(schedule.k)
-        super().__init__(base, compression)
-        self._init_topology(schedule, faults)
-
-    @property
-    def traced_wire(self) -> bool:
-        return True  # active-link accounting varies per round
-
-    def _round_w(self, state: CommState):
-        return self._round_topology_w(state.rounds)
-
-    def _senders(self, w):
-        # per-link accounting (matches the other dynamic mixers): each
-        # active directed link moves one node payload
-        return _active_links(w)
+        ComposedMixer.__init__(self, ScheduledTopology(schedule, faults),
+                               DenseTransport(), make_codec_wire(compression))
 
 
-class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
+class DynamicCompressedGossipMixer(CompressedGossipMixer):
     """Error-feedback compressed gossip over a time-varying topology.
 
     The static :class:`~repro.comm.mixers.CompressedGossipMixer` keeps the
     incremental cache s_i = Σ_j W_ij θ̂_j current by adding each round's
     received innovations — valid **only under a static W**, because the
     base term Σ_j W_ij θ̂_j(r₀) silently goes stale the moment W moves.
-    This lowering makes EF sound on the traced per-round weights with a
-    two-mode round, selected by a second traced clock
-    (``CommState.ef_rounds``):
+    This stack (Scheduled × Gossip × ChocoWire + RebaseClock) makes EF
+    sound on the traced per-round weights with a two-mode round, selected
+    by a second traced clock (``CommState.ef_rounds``):
 
     * **delta rounds** (all but every B-th): the shared EF leaf path of the
       static mixer, with this round's gathered weights/masks — each node
@@ -471,16 +199,14 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
       increments, s_i += W_ii(r)·q_i + Σ_m W_{i,pm(i)}(r)·dequant(recv).
       Because every increment is weighted by a doubly-stochastic W_r, the
       CHOCO invariant Σ_i s_i = Σ_i θ̂_i holds exactly no matter how the
-      topology moves (the delta recursion never bakes a stale W into the
-      cache); only the *bias* of s_i as an estimate of Σ_j W_ij(r) θ̂_j(r)
-      drifts with the topology variation.
+      topology moves; only the *bias* of s_i as an estimate of
+      Σ_j W_ij(r) θ̂_j(r) drifts with the topology variation.
     * **re-base rounds** (``ef_rounds % B == B − 1``): the codec still runs
       (θ̂ advances), but instead of the quantized payload the matchings
       exchange the **full-precision public copies**, and the cache is
-      rebuilt exactly under the current weights:
-      s_i = W_ii(r)·θ̂_i + Σ_m W_{i,pm(i)}(r)·θ̂_{pm(i)} — resetting the
-      accumulated drift.  The re-base wire is full f32 (active links only
-      in the accounting), amortized 1/B.
+      rebuilt exactly under the current weights — resetting the accumulated
+      drift.  The re-base wire is full f32 (active links only in the
+      accounting), amortized 1/B.
 
     ``ef_rebase_every`` (B):
       * B = 0 — never re-base: bit-exact to the frozen static mixer, and
@@ -503,13 +229,8 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
     a (K, K) einsum over the public copies) and re-bases the round it
     exceeds the threshold, mirroring how the adaptive codec schedule keys
     off ``res_norm``.  The measurement lands in ``CommState.ef_drift`` for
-    telemetry.  Under a static fault-free schedule the delta recursion
-    keeps s = Σ W θ̂ to numerical noise, so an adaptive run never re-bases
-    there (bit-identical trajectories to B = 0 up to the cond); under
-    dropout/faults the re-base frequency scales with how fast the topology
-    actually moves instead of a wall-clock B.  The sanitizer's CHOCO-drift
-    assertion (``repro.analysis.sanitize``) doubles as its correctness
-    oracle.
+    telemetry.  The sanitizer's CHOCO-drift assertion
+    (``repro.analysis.sanitize``) doubles as its correctness oracle.
     """
 
     def __init__(self, schedule: TopologySchedule, mesh, node_axis: AxisName,
@@ -525,208 +246,24 @@ class DynamicCompressedGossipMixer(CompressedGossipMixer, _DynamicTopology):
             raise ValueError(
                 "error_feedback=False is the memoryless ablation — build "
                 "DynamicGossipMixer(quantized=...) for that wire")
-        decomp = schedule.decomposition()
-        super().__init__(decomp, mesh, node_axis, param_specs, compression,
-                         replica_axis=replica_axis)
-        self._init_topology(schedule, faults)
+        transport = GossipTransport(schedule.decomposition(), mesh,
+                                    node_axis, param_specs,
+                                    replica_axis=replica_axis)
+        topo = ScheduledTopology(schedule, faults)
         if ef_rebase_every < 0:
             raise ValueError("ef_rebase_every must be >= 0")
         if ef_rebase_threshold < 0:
             raise ValueError("ef_rebase_threshold must be >= 0")
-        self.adaptive = ef_rebase_threshold > 0
+        adaptive = ef_rebase_threshold > 0
         time_varying = (not isinstance(schedule, StaticSchedule)
-                        or self.faults is not None)
-        if ef_rebase_every == 0 and time_varying and not self.adaptive:
+                        or topo.faults is not None)
+        if ef_rebase_every == 0 and time_varying and not adaptive:
             raise ValueError(
                 "ef_rebase_every=0 (never re-base) keeps the incremental "
                 "hat_mix cache forever, which is only valid for a static "
                 "fault-free W; this schedule/fault config varies per round "
                 "— pass ef_rebase_every >= 1 or an ef_rebase_threshold")
-        self.ef_rebase_every = int(ef_rebase_every)
-        self.ef_rebase_threshold = float(ef_rebase_threshold)
-        self._perm_idx = [np.asarray(p, np.int64) for p in decomp.matchings]
-
-    @property
-    def traced_wire(self) -> bool:
-        return True  # active-link accounting varies per round
-
-    # -- state ----------------------------------------------------------------
-
-    def init_state(self, params) -> CommState:
-        state = super().init_state(params)._replace(ef_rounds=jnp.int32(0))
-        if self.adaptive:
-            state = state._replace(ef_drift=jnp.float32(0.0))
-        return state
-
-    def state_specs(self, param_specs) -> CommState:
-        rep = jax.sharding.PartitionSpec()
-        specs = super().state_specs(param_specs)._replace(ef_rounds=rep)
-        if self.adaptive:
-            specs = specs._replace(ef_drift=rep)
-        return specs
-
-    # -- the round -------------------------------------------------------------
-
-    def _cache_drift(self, w, hat, hat_mix):
-        """‖s − W θ̂‖_F over all leaves: the exact staleness of the
-        incremental cache under the round's topology — the drift proxy the
-        adaptive re-base triggers on (mirroring how the codec schedule keys
-        off ``res_norm``).  A (K, K) einsum against the node-stacked public
-        copies; only computed in adaptive mode."""
-        total = jnp.float32(0.0)
-        for h, s in zip(jax.tree.leaves(hat), jax.tree.leaves(hat_mix)):
-            hf = h.reshape(self.k, -1)
-            sf = s.reshape(self.k, -1)
-            ws = jnp.einsum("kl,ld->kd", w, hf,
-                            precision=jax.lax.Precision.HIGHEST)
-            total = total + jnp.sum(jnp.square(sf - ws))
-        return jnp.sqrt(total)
-
-    def __call__(self, theta, state: CommState, *, round=None):
-        with jax.named_scope("obs:consensus/DynamicCompressedGossipMixer"):
-            w = self._round_topology_w(state.rounds)
-            self_w, match_ws, masks = gather_round_vectors(w, self._perm_idx)
-            senders = _active_sends(masks)
-
-            def delta(t, st):
-                return self._gossip_round(t, st, self_w=self_w,
-                                          match_ws=match_ws, masks=masks,
-                                          senders=senders)
-
-            def rebase(t, st):
-                return self._rebase_round(t, st, self_w, match_ws, masks,
-                                          senders)
-
-            if self.adaptive:
-                # drift-triggered re-base: measure the cache staleness
-                # against THIS round's W before mixing and re-base this
-                # round when it exceeds the threshold.  Both modes live in
-                # one lax.cond program — the trigger is a traced operand,
-                # so a threshold sweep never recompiles.
-                drift = self._cache_drift(w, state.hat, state.hat_mix)
-                t2, s2 = jax.lax.cond(drift > self.ef_rebase_threshold,
-                                      rebase, delta, theta, state)
-                s2 = s2._replace(ef_drift=drift)
-            else:
-                b = self.ef_rebase_every
-                if b == 0:
-                    t2, s2 = delta(theta, state)
-                elif b == 1:
-                    t2, s2 = rebase(theta, state)
-                else:
-                    t2, s2 = jax.lax.cond(state.ef_rounds % b == b - 1,
-                                          rebase, delta, theta, state)
-        return t2, s2._replace(ef_rounds=state.ef_rounds + 1)
-
-    def _rebase_round(self, theta, state: CommState, self_w, match_ws,
-                      masks, senders):
-        """Codec step + full-precision θ̂ exchange rebuilding the cache.
-
-        The innovation is still encoded (θ̂ must keep tracking θ; masked
-        senders stay frozen) but the quantized payload never crosses the
-        wire this round — the matchings ppermute the fresh public copies
-        instead, and s_i = Σ_j W_ij(r) θ̂_j is exact under the current W.
-        """
-        key, sub = jax.random.split(state.key)
-        rate = self._rate(state)
-        p_node = jax.sharding.PartitionSpec(self.axis)
-        p_rep = jax.sharding.PartitionSpec()
-        specs = self.param_specs
-        have_rate = rate is not None
-
-        def body(t, hat, self_w, match_ws, mks, k0, rate_op):
-            r_op = rate_op if have_rate else None
-            send = _send_mask(mks)
-            leaves, treedef = jax.tree.flatten(t)
-            k_local = leaves[0].shape[0] if leaves else 1
-            rows = self._node_index() * k_local + jnp.arange(k_local)
-            node_ks = per_node_keys(k0, rows)
-            hats = treedef.flatten_up_to(hat)
-            o_t, o_h, o_s = [], [], []
-            res_sq = jnp.float32(0.0)
-            for i, (x, h) in enumerate(zip(leaves, hats)):
-                k_local = x.shape[0]
-                d = x.size // k_local
-                xf = x.reshape(k_local, d).astype(jnp.float32)
-                if self.replica_axis is not None:
-                    r = self.mesh.shape[self.replica_axis]
-                    xf = jax.lax.psum(xf, self.replica_axis) / r
-                hf = h.reshape(k_local, d)
-                res_sq = res_sq + jnp.sum(jnp.square(xf - hf))
-                _, _, new_hat = self._encode_leaf(
-                    xf, hf, fold_leaf(node_ks, i), r_op, send_mask=send)
-                acc = self_w[:, None] * new_hat
-                for pw, mk, perm in zip(match_ws, mks, self.perms):
-                    recv = jax.lax.ppermute(new_hat, self.axis, perm)
-                    acc = acc + (pw * mk)[:, None] * recv
-                out = xf + self.gamma * (acc - new_hat)
-                o_t.append(out.reshape(x.shape).astype(x.dtype))
-                o_h.append(new_hat.reshape(x.shape))
-                o_s.append(acc.reshape(x.shape))
-            res_sq = jax.lax.psum(res_sq, self.axis)
-            u = treedef.unflatten
-            return u(o_t), u(o_h), u(o_s), res_sq
-
-        n = len(self.perms)
-        shard = shard_map_unchecked(
-            body,
-            mesh=self.mesh,
-            in_specs=(specs, specs, p_node, [p_node] * n, [p_node] * n,
-                      p_rep, p_rep),
-            out_specs=(specs, specs, specs, p_rep),
-        )
-        rate_op = rate if have_rate else jnp.float32(0.0)
-        t2, h2, s2, res_sq = shard(theta, state.hat, self_w, list(match_ws),
-                                   list(masks), sub, rate_op)
-        res_norm, res_ref, rounds = self._next_sched_state(
-            state, jnp.sqrt(res_sq))
-        # full-precision wire: active links × per-node f32 payload
-        full_bits = 32.0 * sum(x.size // self.k
-                               for x in jax.tree.leaves(theta))
-        # _replace so fields this round does not own thread through (RPR005)
-        return t2, state._replace(
-            hat=h2, hat_mix=s2, key=key,
-            res_norm=res_norm, res_ref=res_ref, rounds=rounds,
-            wire_bits=jnp.asarray(senders * full_bits, jnp.float32))
-
-    def bytes_per_round(self, params) -> int:
-        """Fault-free amortized estimate over the FULL union support —
-        ((B−1)·compressed + 1·f32 re-base)/B per link — i.e. an upper
-        bound: masked links move zero payload, so the authoritative
-        per-round figure is the traced active-link ``CommState.wire_bits``
-        (what ``build_train_step`` reports for ``traced_wire`` mixers).
-        The compiled collective-permutes do move the full union-support
-        buffers (see the HLO cross-check in tests/test_dynamics.py); a
-        mask-consulting transport is a ROADMAP item."""
-        sends = sum(len(pairs) for pairs in self.perms)
-        q = _leaf_payload_bytes(self.compressor, params, self.k)
-        full = 4 * sum(x.size // self.k for x in jax.tree.leaves(params))
-        if self.adaptive:
-            # drift-triggered: the re-base cadence is data-dependent, so
-            # fall back to the clock-B amortization as the static estimate
-            # (the traced wire_bits is the authoritative figure)
-            b = max(self.ef_rebase_every, 1)
-            return round(sends * ((b - 1) * q + full) / b)
-        b = self.ef_rebase_every
-        if b == 0:
-            return sends * q
-        if b == 1:
-            return sends * full
-        return round(sends * ((b - 1) * q + full) / b)
-
-    def wire_dtype_bytes(self, params) -> dict[str, float]:
-        """Physical per-dtype collective-permute bytes of ONE compiled
-        round — both lax.cond modes when both are in the program (B ≥ 2 or
-        adaptive): the delta mode moves the quantized payload, the re-base
-        mode the full-precision public copies."""
-        sends = sum(len(pairs) for pairs in self.perms)
-        delta = _merge_dtype_bytes(*[
-            _codec_wire_dtypes(self.compressor, x.size // self.k)
-            for x in jax.tree.leaves(params)], scale=sends)
-        full = {"f32": 4.0 * sends * sum(x.size // self.k
-                                         for x in jax.tree.leaves(params))}
-        if self.adaptive or self.ef_rebase_every >= 2:
-            return _merge_dtype_bytes(delta, full)
-        if self.ef_rebase_every == 0:
-            return delta
-        return full
+        clock = RebaseClock(every=int(ef_rebase_every),
+                            threshold=float(ef_rebase_threshold))
+        ComposedMixer.__init__(self, topo, transport,
+                               ChocoWire(compression, clock=clock))

@@ -419,9 +419,11 @@ def main():
     ap.add_argument("--mixer", default="dense",
                     choices=["dense", "gossip", "gossip-dynamic"])
     # geometric is excluded: its support moves every round, so only the
-    # dense lowering can run it (TOPOLOGY_KINDS minus "geometric")
+    # dense lowering can run it; hub is excluded: the star consensus has no
+    # per-round schedule, it lowers through the dense path (make_hub_mixer)
     ap.add_argument("--topology", default="dropout",
-                    choices=[k for k in TOPOLOGY_KINDS if k != "geometric"],
+                    choices=[k for k in TOPOLOGY_KINDS
+                             if k not in ("geometric", "hub")],
                     help="gossip-dynamic: per-round topology schedule")
     ap.add_argument("--drop-p", type=float, default=0.2,
                     help="gossip-dynamic: link dropout probability")

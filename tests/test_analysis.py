@@ -198,6 +198,68 @@ def tap(x):
     assert lint_source(suppressed, "src/repro/core/fix.py") == []
 
 
+def test_lint_layer_methods_are_traced_regions():
+    """The Topology × Transport × Wire layer methods seed tracing: a host
+    cast of a traced operand inside Wire.rate / Transport.apply_w /
+    Topology.round_w is RPR002 even though the class is not a Mixer."""
+    src = """
+class FancyWire:
+    def rate(self, state):
+        return float(state.res_norm)
+
+class FancyTransport:
+    def apply_w(self, w, theta):
+        return int(w)
+
+class FancyTopology:
+    def round_w(self, rounds):
+        return float(rounds)
+"""
+    findings = lint_source(src, "fix.py")
+    assert [f.code for f in findings] == ["RPR002"] * 3
+
+
+def test_lint_rpr007_wire_without_spec_fields():
+    src = """
+class LeakyWire:
+    def init_fields(self, params, incremental=False):
+        fields = {"hat": params, "key": 0}
+        if incremental:
+            fields["hat_mix"] = params
+        return fields
+"""
+    findings = lint_source(src, "fix.py")
+    assert [f.code for f in findings] == ["RPR007"]
+    assert "hat" in findings[0].message and "hat_mix" in findings[0].message
+
+
+def test_lint_rpr007_declared_or_trivial_fields_pass():
+    complete = """
+class GoodWire:
+    def init_fields(self, params, incremental=False):
+        return {"hat": params, "key": 0}
+
+    def spec_fields(self, param_specs, incremental=False):
+        return {"hat": param_specs}
+"""
+    assert lint_source(complete, "fix.py") == []
+    # inherited in-module spec_fields counts
+    inherited = complete + """
+
+class SubWire(GoodWire):
+    def init_fields(self, params, incremental=False):
+        return {"hat": params}
+"""
+    assert lint_source(inherited, "fix.py") == []
+    # trivial fields (key/rounds/...) need no declaration
+    trivial = """
+class KeyOnlyWire:
+    def init_fields(self, params, incremental=False):
+        return {"key": 0}
+"""
+    assert lint_source(trivial, "fix.py") == []
+
+
 def test_repo_lints_clean():
     """The shipped tree passes its own linter (justified noqa only)."""
     findings = lint_paths([os.path.join(_REPO, "src")])

@@ -226,6 +226,98 @@ def test_full_straggler_round_reports_zero_comm_bytes():
                                   np.zeros(5, np.float32))
 
 
+def _mixed_up_round(straggler_p, k, seed):
+    """First round whose straggler draw has both up and down nodes."""
+    cfg = FaultConfig(straggler_p=straggler_p, seed=seed)
+    for r in range(64):
+        up = np.asarray(fault_keep_matrix(cfg, jnp.int32(r), k)[1])
+        if 0 < up.sum() < k:
+            return r, up
+    raise AssertionError("no mixed straggler round in 64 draws")
+
+
+def test_straggler_skips_compute_freezes_down_nodes():
+    """With straggler_skips_compute a down node loses its gradient too:
+    its robust scale is zeroed, so its params pass the round untouched
+    (no local update, no send, no receive), while up nodes keep moving."""
+
+    def loss_fn(params, batch):
+        return jnp.sum(params["x"] ** 2)
+
+    k = 8
+    r0, up = _mixed_up_round(0.5, k, seed=3)
+    assert r0 == 0, "pick a seed whose round-0 draw is mixed"
+    spec = TrainerSpec(num_nodes=k, graph="ring", robust=True, lr=0.1,
+                       straggler_p=0.5, straggler_skips_compute=True,
+                       metrics_disagreement=False, seed=3)
+    tr = spec.build(loss_fn)
+    state = tr.init({"x": jnp.ones(4)})
+    x0 = np.asarray(state.params["x"])  # snapshot: the scan donates state
+    out, _ = tr.run(state, jnp.zeros((1, k, 1)))
+    x1 = np.asarray(out.params["x"])
+    for i in range(k):
+        if up[i] == 0:
+            np.testing.assert_array_equal(x1[i], x0[i])
+        else:
+            assert not np.array_equal(x1[i], x0[i]), i
+
+
+def test_skipped_straggler_cannot_dominate_dr_weighting():
+    """Worst-distribution regression: a node that produced no work must not
+    receive the exponential DR weight its (stale) worst loss would earn.
+    The masked scale zeroes it; without the flag the same round lets the
+    down node's huge scaled gradient blow up its own parameters."""
+
+    def loss_fn(params, batch):
+        # per-node loss is driven by the batch: the down node gets a
+        # worst-distribution batch with a huge target offset
+        return jnp.mean((params["x"] - batch) ** 2)
+
+    k = 8
+    _, up = _mixed_up_round(0.5, k, seed=3)
+    down = int(np.nonzero(up == 0)[0][0])
+    batch = np.zeros((1, k, 1), np.float32)
+    batch[0, down, 0] = 100.0  # the straggler holds the worst loss
+    metrics = {}
+    for flag in (False, True):
+        spec = TrainerSpec(num_nodes=k, graph="ring", robust=True, mu=1.0,
+                           lr=0.1, straggler_p=0.5,
+                           straggler_skips_compute=flag,
+                           metrics_disagreement=False, seed=3)
+        tr = spec.build(loss_fn)
+        state = tr.init({"x": jnp.zeros(4)})
+        out, ms = tr.run(state, jnp.asarray(batch))
+        metrics[flag] = (np.asarray(out.params["x"]), ms)
+    x_off, ms_off = metrics[False]
+    x_on, ms_on = metrics[True]
+    # flag off: the down node's exp(loss/mu) scale drives a huge local step
+    assert np.abs(x_off[down]).max() > 1.0
+    # flag on: zero scale -> the down node is frozen at its init
+    np.testing.assert_array_equal(x_on[down], np.zeros(4))
+    # and the effective scale the step reports no longer carries the
+    # straggler's exponential weight
+    assert float(ms_on["scale_max"][0]) < float(ms_off["scale_max"][0])
+    # up nodes are untouched by the flag (their scale is masked by 1)
+    for i in np.nonzero(up == 1)[0]:
+        np.testing.assert_array_equal(x_on[i], x_off[i])
+
+
+def test_straggler_skips_compute_cli_threading():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    TrainerSpec.add_cli_args(ap)
+    args = ap.parse_args(["--straggler-p", "0.3",
+                          "--straggler-skips-compute"])
+    spec = TrainerSpec.from_args(args)
+    assert spec.straggler_skips_compute
+    faults = spec.dynamics_config().faults
+    assert faults is not None and faults.straggler_skips_compute
+    # default off
+    args = ap.parse_args(["--straggler-p", "0.3"])
+    assert not TrainerSpec.from_args(args).straggler_skips_compute
+
+
 def test_dropout_comm_bytes_counts_active_links_exactly():
     k = 8
     w = metropolis_weights(build_graph("ring", k))

@@ -96,6 +96,92 @@ def test_schedule_rates():
     assert tk.hi == pytest.approx(0.08) and tk.lo == pytest.approx(0.01)
 
 
+def test_adaptive_sparsifier_constant_dropped_mass_rule():
+    """The constant-resolution rule extended to topk/randk ratios: the
+    sparsifier's absolute error is the dropped mass ≈ (1 − rate)·‖innov‖,
+    so the annealed kept fraction holds it at the reference budget."""
+    from repro.comm.schedule import CompressionSchedule
+
+    sch = CompressionSchedule(
+        ScheduleConfig(kind="adaptive", warmup_rounds=5, threshold=1.0),
+        "topk", 0.8)
+    assert sch.sparsifier
+    # pre-warmup / unlatched: full ratio
+    assert float(sch.rate(jnp.int32(2), jnp.float32(0.1),
+                          jnp.float32(0.0))) == pytest.approx(0.8)
+    # at the threshold decay fraction: full ratio
+    assert float(sch.rate(jnp.int32(10), jnp.float32(1.0),
+                          jnp.float32(1.0))) == pytest.approx(0.8)
+    # innovation halves: (1 − r)·0.5 == (1 − 0.8)·1 -> r = 0.6
+    assert float(sch.rate(jnp.int32(10), jnp.float32(0.5),
+                          jnp.float32(1.0))) == pytest.approx(0.6)
+    # collapsed innovation pins at lo = hi/8
+    assert float(sch.rate(jnp.int32(10), jnp.float32(1e-6),
+                          jnp.float32(1.0))) == pytest.approx(0.1)
+    # infeasible budget (hi far from 1, norm halved) also pins at lo
+    tight = CompressionSchedule(
+        ScheduleConfig(kind="adaptive", warmup_rounds=5, threshold=1.0),
+        "randk", 0.4)
+    assert float(tight.rate(jnp.int32(10), jnp.float32(0.5),
+                            jnp.float32(1.0))) == pytest.approx(0.05)
+
+
+def test_gamma_for_damps_with_sparsifier_rate():
+    from repro.comm.schedule import CompressionSchedule
+
+    sch = CompressionSchedule(
+        ScheduleConfig(kind="linear", damp_gamma=True), "randk", 0.2)
+    # traced min(γ, 2·rate) once the annealed rate undercuts γ/2
+    assert float(sch.gamma_for(0.4, jnp.float32(0.025))) == pytest.approx(0.05)
+    # full rate: the config-resolved γ = min(1, 2·hi) passes through
+    assert float(sch.gamma_for(0.4, jnp.float32(0.2))) == pytest.approx(0.4)
+    # damp off: the static Python float comes back untouched
+    off = CompressionSchedule(
+        ScheduleConfig(kind="linear"), "randk", 0.2)
+    assert off.gamma_for(0.4, jnp.float32(0.025)) == 0.4
+    # quantizer schedules ignore damp_gamma (γ = 1 stable at every qmax)
+    q = CompressionSchedule(
+        ScheduleConfig(kind="linear", damp_gamma=True), "int8", 0.01)
+    assert q.gamma_for(1.0, jnp.float32(7.0)) == 1.0
+
+
+def test_sparsifier_gamma_damping_interaction():
+    """γ-damping × ratio annealing in the EF mixer: at the full constant
+    rate damping is a bit-exact no-op; once a linear schedule anneals the
+    ratio the damped run takes smaller consensus steps yet still contracts."""
+    w = metropolis_weights(ring_graph(8))
+    theta = _ring8_theta()
+
+    def run(schedule, rounds=10):
+        cfg = CompressionConfig(kind="topk", ratio=0.25, seed=3,
+                                schedule=schedule)
+        mixer = make_dense_mixer(w, compression=cfg)
+        t, st = theta, mixer.init_state(theta)
+        step = jax.jit(mixer)
+        for _ in range(rounds):
+            t, st = step(t, st)
+        return t
+
+    # constant schedule: rate == hi, min(γ, 2·hi) == γ -> bit-exact
+    t_plain = run(ScheduleConfig(kind="constant"))
+    t_damp = run(ScheduleConfig(kind="constant", damp_gamma=True))
+    for k in theta:
+        np.testing.assert_array_equal(np.asarray(t_plain[k]),
+                                      np.asarray(t_damp[k]))
+    # annealed ratio: γ_r < γ — the trajectories genuinely diverge ...
+    lin = dict(kind="linear", anneal_rounds=4)
+    t_lin = run(ScheduleConfig(**lin))
+    t_lin_damp = run(ScheduleConfig(**lin, damp_gamma=True))
+    assert any(not np.array_equal(np.asarray(t_lin[k]),
+                                  np.asarray(t_lin_damp[k]))
+               for k in theta)
+    # ... and the damped EF loop stays finite and keeps contracting
+    for k in theta:
+        assert np.isfinite(np.asarray(t_lin_damp[k])).all()
+    assert float(tree_node_disagreement(t_lin_damp)) < \
+        float(tree_node_disagreement(theta))
+
+
 def test_quant_bits():
     assert float(quant_bits(127.0)) == 8.0
     assert float(quant_bits(7.0)) == 4.0
